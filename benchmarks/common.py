@@ -1,0 +1,92 @@
+"""Shared benchmark utilities.
+
+All speed benchmarks run scaled-down models on this CPU container; the
+meaningful quantities are RATIOS (speedups vs the vanilla baseline) and
+counted work (rows updated, identification FLOPs), which transfer to the
+paper's setting. Wall-clock is measured around jitted steps after a
+warm-up call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ModelConfig, SPAConfig
+from repro.core import spa_layer
+from repro.data.synthetic import token_batches
+from repro.dlm import decoding
+from repro.models import transformer
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import Trainer
+
+
+def bench_model(n_layers=4, d_model=128, vocab=512, seq=256,
+                arch="llada-8b") -> ModelConfig:
+    """Scaled-down LLaDA-family model used across benchmarks."""
+    return reduced(get_arch(arch), n_layers=n_layers, d_model=d_model,
+                   n_heads=4, n_kv_heads=4, head_dim=32,
+                   d_ff=4 * d_model, vocab_size=vocab)
+
+
+def trained_bench_model(cfg: ModelConfig, steps=30, seed=0):
+    trainer = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=5,
+                                       total_steps=steps + 10)).init(
+        jax.random.PRNGKey(seed))
+    data = token_batches(cfg, batch_size=4, seq_len=64, seed=seed)
+    trainer.fit(data, n_steps=steps, rng=jax.random.PRNGKey(seed + 1),
+                log_every=0)
+    return trainer.params
+
+
+def with_spa(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, spa=SPAConfig(**kw))
+
+
+def time_decode(cfg, params, prompt, gen_len, settings=None, reps=1
+                ) -> Dict[str, float]:
+    """Returns tokens/s and time-to-first-step for a decode run."""
+    proxies = spa_layer.build_spa_proxies(params, cfg)
+    t0 = time.perf_counter()
+    state = decoding.init_decode_state(cfg, params, prompt, gen_len,
+                                       proxies,
+                                       use_cache=cfg.spa.identifier
+                                       != "none")
+    settings = settings or decoding.DecodeSettings()
+    import functools
+    step_fn = jax.jit(functools.partial(
+        decoding.serve_step, params, cfg, settings=settings,
+        spa_proxies=proxies))
+    state, _ = step_fn(state)          # compile + first step
+    jax.block_until_ready(state.tokens)
+    ttft = time.perf_counter() - t0
+
+    n_steps = 0
+    t0 = time.perf_counter()
+    while int(jax.device_get(jnp.max(state.n_masked))) > 0 \
+            and n_steps < gen_len * 2:
+        state, _ = step_fn(state)
+        n_steps += 1
+    jax.block_until_ready(state.tokens)
+    dt = time.perf_counter() - t0
+    committed = gen_len * prompt.shape[0] - int(
+        jnp.sum(jnp.maximum(state.n_masked, 0)))
+    return {
+        "tps": committed / max(dt, 1e-9),
+        "ttft_ms": ttft * 1e3,
+        "steps": n_steps + 1,
+        "step_ms": dt * 1e3 / max(n_steps, 1),
+    }
+
+
+def print_table(title: str, rows: List[Dict], cols: Iterable[str]):
+    cols = list(cols)
+    print(f"\n== {title} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

@@ -1,0 +1,99 @@
+"""Paper Figure 4: component-wise latency decomposition of one serve
+layer — identification vs attention vs FFN — for the vanilla / value-proxy
+/ singular-proxy variants. Measured on jitted per-component functions."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import identifiers, selection
+from repro.core.svd_proxy import build_proxy
+from repro.models import common as mcommon
+from repro.models.attention import flash_attention
+from repro.models.transformer import apply_ffn_or_moe, qkv_project
+
+
+def timeit(fn, *args, reps=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def run(quick: bool = False):
+    d, n, b = 256, 1024, 2
+    kq = max(1, int(0.05 * n))          # paper Fig. 4 uses rho = 5%
+    cfg = common.bench_model(n_layers=2, d_model=d, seq=n)
+    params = jax.tree.map(
+        lambda a: a, common.trained_bench_model(cfg, steps=2))
+    bp = jax.tree.map(lambda a: a[0], params["blocks"]["attn"])
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (b, n, d))
+    idx = jnp.sort(jax.random.randint(key, (b, kq), 0, n), axis=-1)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    kv = jax.random.normal(key, (b, n, kvh, hd))
+    pc_full = jax.random.normal(key, (b, n, cfg.kv_dim))
+    proxy_mat, _ = build_proxy(np.asarray(bp["wv"], np.float32), 16)
+    proxy_mat = jnp.asarray(proxy_mat)
+    pc_small = jax.random.normal(key, (b, n, 16))
+
+    @jax.jit
+    def ident_value(h):
+        p = h @ bp["wv"]
+        return identifiers.drift_scores(p, pc_full)
+
+    @jax.jit
+    def ident_singular(h):
+        p = h @ proxy_mat
+        return identifiers.drift_scores(p, pc_small)
+
+    @jax.jit
+    def attn_sparse(h):
+        rows = selection.gather_rows(h, idx)
+        q, _, _ = qkv_project(bp, rows, cfg, idx)
+        return flash_attention(q, kv, kv, q_positions=idx, block_q=128,
+                               block_k=256)
+
+    @jax.jit
+    def attn_full(h):
+        pos = jnp.broadcast_to(jnp.arange(n)[None], (b, n))
+        q, _, _ = qkv_project(bp, h, cfg, pos)
+        return flash_attention(q, kv, kv, block_q=128, block_k=256)
+
+    @jax.jit
+    def ffn_sparse(h):
+        return apply_ffn_or_moe(bp, selection.gather_rows(h, idx), cfg)[0]
+
+    @jax.jit
+    def ffn_full(h):
+        return apply_ffn_or_moe(bp, h, cfg)[0]
+
+    reps = 5 if quick else 20
+    rows = [
+        {"component": "identify_value_proxy",
+         "ms": round(timeit(ident_value, h, reps=reps), 3)},
+        {"component": "identify_singular_proxy",
+         "ms": round(timeit(ident_singular, h, reps=reps), 3)},
+        {"component": "attention_full",
+         "ms": round(timeit(attn_full, h, reps=reps), 3)},
+        {"component": "attention_sparse_rho5",
+         "ms": round(timeit(attn_sparse, h, reps=reps), 3)},
+        {"component": "ffn_full",
+         "ms": round(timeit(ffn_full, h, reps=reps), 3)},
+        {"component": "ffn_sparse_rho5",
+         "ms": round(timeit(ffn_sparse, h, reps=reps), 3)},
+    ]
+    common.print_table("Fig 4 — per-component latency", rows,
+                       ["component", "ms"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

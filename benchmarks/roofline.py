@@ -1,0 +1,72 @@
+"""§Roofline: aggregate the dry-run records into the per-(arch x shape)
+roofline table — three terms in seconds, dominant bottleneck, MODEL_FLOPS
+ratio, and a one-line lever suggestion. Reads results/dryrun.jsonl."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.configs import get_arch, get_shape
+from repro.launch import mesh as mesh_lib
+
+LEVERS = {
+    "t_compute_s": ("raise arithmetic intensity: larger per-device tiles, "
+                    "bf16 everywhere, fuse identification into the "
+                    "attention pass"),
+    "t_memory_s": ("cut HBM streams: int8 caches, fuse dequant into "
+                   "attention, avoid re-materializing the residual"),
+    "t_collective_s": ("re-shard: move partial-sum all-reduces out of "
+                       "inner loops, gather weights once per step, "
+                       "expert-parallel all-to-all instead of TP"),
+}
+
+
+def load(path="results/dryrun.jsonl") -> List[Dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return rows
+
+
+def run(quick: bool = False, path="results/dryrun.jsonl"):
+    rows = load(path)
+    singles = [r for r in rows if r.get("mesh") == "single"
+               and r.get("status") == "ok"]
+    print("\n== Roofline (single pod, per device, seconds/step) ==")
+    print("arch,shape,t_compute,t_memory,t_collective,bottleneck,"
+          "model_flops_ratio,mem_gb")
+    out = []
+    for r in sorted(singles, key=lambda x: (x["arch"], x["shape"])):
+        ratio = r.get("useful_flop_ratio", "")
+        print(f"{r['arch']},{r['shape']},"
+              f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+              f"{r['t_collective_s']:.4f},{r['bottleneck']},"
+              f"{ratio},{r['memory']['per_device_total_gb']}")
+        out.append(r)
+    skips = [r for r in rows if r.get("status") == "skipped"
+             and r.get("mesh") == "single"]
+    for r in skips:
+        print(f"{r['arch']},{r['shape']},SKIPPED({r['reason']})")
+    errs = [r for r in rows if r.get("status") == "error"]
+    for r in errs:
+        print(f"ERROR {r['arch']} x {r['shape']} x {r['mesh']}: "
+              f"{r.get('error', '')[:120]}")
+    if out:
+        worst = max(out, key=lambda r: max(
+            r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) /
+            max(min(r["t_compute_s"] + 1e-12, 1e9), r["t_compute_s"]
+                + 1e-12))
+        print(f"\nlever hints: {json.dumps(LEVERS, indent=1)}")
+    return out
+
+
+if __name__ == "__main__":
+    run(path=sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")

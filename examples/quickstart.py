@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Quickstart: train a tiny diffusion LM on synthetic text, then decode
+the same prompt with (a) vanilla full recomputation and (b) SPA-Cache,
+printing the speedup and token agreement.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import SPAConfig
+from repro.data.synthetic import token_batches
+from repro.dlm import decoding
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import Trainer
+
+
+def main():
+    cfg = reduced(get_arch("llada-8b"), n_layers=4, d_model=128,
+                  n_heads=4, n_kv_heads=4, head_dim=32, d_ff=512,
+                  vocab_size=512)
+    print(f"model: {cfg.name}-reduced  params ~{cfg.param_count():,}")
+
+    trainer = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=10,
+                                       total_steps=120)).init(
+        jax.random.PRNGKey(0))
+    data = token_batches(cfg, batch_size=8, seq_len=64, seed=0)
+    print("training 100 steps on synthetic Markov text ...")
+    trainer.fit(data, n_steps=100, rng=jax.random.PRNGKey(1),
+                log_every=25)
+    params = trainer.params
+
+    prompt = jnp.asarray(next(token_batches(cfg, 2, 16, seed=9))
+                         ["tokens"])
+    gen_len = 32
+
+    cfg_vanilla = dataclasses.replace(cfg, spa=SPAConfig(
+        identifier="none"))
+    cfg_spa = dataclasses.replace(cfg, spa=SPAConfig(
+        identifier="singular", rank=16, schedule="adaptive",
+        rho_peak=0.25, rho_first=0.03, rho_last=0.13))
+
+    print("\ndecoding with vanilla full recomputation ...")
+    t0 = time.time()
+    toks_v, info_v = decoding.decode(params, cfg_vanilla, prompt, gen_len)
+    t_v = time.time() - t0
+    print(f"  {info_v['steps']} steps, {t_v:.2f}s")
+
+    print("decoding with SPA-Cache (singular proxy r=16, adaptive rho) ...")
+    t0 = time.time()
+    toks_s, info_s = decoding.decode(params, cfg_spa, prompt, gen_len)
+    t_s = time.time() - t0
+    print(f"  {info_s['steps']} steps, {t_s:.2f}s")
+
+    agree = (np.asarray(toks_v) == np.asarray(toks_s)).mean()
+    print(f"\nwall-clock speedup (incl. compile): {t_v / t_s:.2f}x")
+    print(f"token agreement vs vanilla: {agree:.1%}")
+    print(f"generated (row 0): {np.asarray(toks_s)[0, 16:16+12]} ...")
+
+
+if __name__ == "__main__":
+    main()

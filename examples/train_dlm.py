@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""End-to-end training driver: train a masked-diffusion LM of a chosen
+architecture/size for a few hundred steps, with checkpointing and eval
+generations.
+
+  PYTHONPATH=src python examples/train_dlm.py --arch llada-8b \
+      --d-model 256 --layers 8 --steps 300 --ckpt /tmp/dlm.npz
+
+The default (~10M params) trains in minutes on CPU; pass bigger dims on
+real hardware. ``--arch`` accepts any of the 12 registered architectures
+(the reduced same-family variant is scaled to the requested dims).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.data.synthetic import token_batches
+from repro.dlm import decoding
+from repro.models import transformer
+from repro.training import checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llada-8b")
+    ap.add_argument("--d-model", type=int, default=192)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", default="")
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch),
+                  n_layers=args.layers, d_model=args.d_model,
+                  n_heads=max(4, args.d_model // 32),
+                  n_kv_heads=max(2, args.d_model // 64),
+                  head_dim=32, d_ff=4 * args.d_model,
+                  vocab_size=args.vocab)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"params~{cfg.param_count():,}")
+
+    trainer = Trainer(cfg, AdamWConfig(
+        lr=args.lr, warmup_steps=max(10, args.steps // 20),
+        total_steps=args.steps))
+    if args.resume:
+        params, meta = checkpoint.load_checkpoint(args.resume)
+        trainer.params = params
+        from repro.training.optimizer import init_opt_state
+        trainer.opt_state = init_opt_state(params)
+        print(f"resumed from {args.resume} (step {meta.get('step')})")
+    else:
+        trainer.init(jax.random.PRNGKey(0))
+
+    data = token_batches(cfg, batch_size=args.batch, seq_len=args.seq,
+                         seed=0)
+    t0 = time.time()
+    hist = trainer.fit(data, n_steps=args.steps,
+                       rng=jax.random.PRNGKey(1), log_every=20)
+    dt = time.time() - t0
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"\ntrained {args.steps} steps in {dt:.1f}s "
+          f"({tok_s:,.0f} tokens/s); loss "
+          f"{np.mean(hist['loss'][:5]):.3f} -> "
+          f"{np.mean(hist['loss'][-5:]):.3f}")
+
+    if args.ckpt:
+        checkpoint.save_checkpoint(args.ckpt, trainer.params,
+                                   {"step": args.steps,
+                                    "arch": cfg.name})
+        print(f"checkpoint written to {args.ckpt}")
+
+    if not cfg.is_encoder_only and cfg.frontend is None:
+        prompt = jnp.asarray(next(token_batches(cfg, 2, 16, seed=7))
+                             ["tokens"])
+        toks, info = decoding.decode(trainer.params, cfg, prompt,
+                                     gen_len=24)
+        print(f"sample generation ({info['steps']} refinement steps): "
+              f"{np.asarray(toks)[0, 16:28]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""SPA-Cache: Singular Proxies for Adaptive Caching in Diffusion Language
+Models — a production-grade JAX reproduction framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,189 @@
+"""SPA-Cache state pytrees + int8 cache quantization.
+
+Per attention layer the cache holds (Algorithm 1):
+  k, v   — the partially-updated KV cache          [B, N, KVH, HD]
+  h      — the block OUTPUT states H^c             [B, N, d]
+  proxy  — identifier vectors at the last refresh  [B, N, r]
+
+Layers are stacked per layer-kind ([L_kind, ...] leading axis) so the
+serve path can ``lax.scan`` over them. Recurrent kinds (rglru / ssd) are
+fully recomputed each step (DESIGN.md §Arch-applicability) and carry no
+cache.
+
+int8 mode (``cache_dtype="int8"``): symmetric per-row quantization with a
+float16 scale. At 32k tokens x batch 128, bf16 H-caches for a 67B model
+are ~TB-scale — int8 halves them; this is a beyond-paper serving feature
+(see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTENTION_KINDS, ModelConfig
+
+
+def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 over the last axis. Returns (q [.., d] i8, scale).
+
+    The rowwise math stays in x's dtype (values <= 127 are exactly
+    representable in bf16) — upcasting the whole block to f32 doubles the
+    live-buffer footprint on the serve path for no precision gain."""
+    amax = jnp.max(jnp.abs(x), axis=-1).astype(jnp.float32)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    inv = (1.0 / scale).astype(x.dtype)
+    q = jnp.clip(jnp.round((x * inv[..., None]).astype(jnp.float32)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    quantized: bool
+    compute_dtype: jnp.dtype
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "CachePolicy":
+        return cls(quantized=(cfg.cache_dtype == "int8"),
+                   compute_dtype=jnp.dtype(cfg.param_dtype))
+
+
+def proxy_dim(cfg: ModelConfig) -> int:
+    ident = cfg.spa.identifier
+    if ident == "singular":
+        return cfg.spa.rank
+    if ident in ("value", "key"):
+        return cfg.kv_dim
+    if ident == "query":
+        return cfg.q_dim
+    if ident in ("attn_in", "attn_out"):
+        return cfg.d_model
+    return 0  # none / window: no proxy cache
+
+
+def init_attn_layer_cache(cfg: ModelConfig, batch: int, n: int,
+                          policy: CachePolicy) -> Dict[str, jax.Array]:
+    """Zeros cache for ONE attention layer (no leading L axis)."""
+    kvh, hd, d = cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    r = proxy_dim(cfg)
+    cd = policy.compute_dtype
+    out: Dict[str, jax.Array] = {}
+    if policy.quantized:
+        out["k"] = jnp.zeros((batch, n, kvh, hd), jnp.int8)
+        out["v"] = jnp.zeros((batch, n, kvh, hd), jnp.int8)
+        out["h"] = jnp.zeros((batch, n, d), jnp.int8)
+        out["k_scale"] = jnp.zeros((batch, n, kvh), jnp.float16)
+        out["v_scale"] = jnp.zeros((batch, n, kvh), jnp.float16)
+        out["h_scale"] = jnp.zeros((batch, n), jnp.float16)
+    else:
+        out["k"] = jnp.zeros((batch, n, kvh, hd), cd)
+        out["v"] = jnp.zeros((batch, n, kvh, hd), cd)
+        out["h"] = jnp.zeros((batch, n, d), cd)
+    if r:
+        out["proxy"] = jnp.zeros((batch, n, r), cd)
+        if cfg.spa.incremental_ident:
+            out["proxy_now"] = jnp.zeros((batch, n, r), cd)
+    return out
+
+
+def init_model_cache(cfg: ModelConfig, batch: int, n: int
+                     ) -> Dict[str, Dict[str, jax.Array]]:
+    """Stacked caches per attention kind: {kind: {name: [Lk, B, N, ...]}}."""
+    policy = CachePolicy.from_config(cfg)
+    out: Dict[str, Dict[str, jax.Array]] = {}
+    for kind in sorted(set(cfg.layer_kinds)):
+        if kind not in ATTENTION_KINDS:
+            continue
+        lk = cfg.n_layers_of_kind(kind)
+        one = init_attn_layer_cache(cfg, batch, n, policy)
+        out[kind] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (lk,) + a.shape).copy(), one)
+    return out
+
+
+def write_kv(cache: Dict[str, jax.Array], idx: jax.Array,
+             k_rows: jax.Array, v_rows: jax.Array,
+             policy: CachePolicy) -> Dict[str, jax.Array]:
+    """Scatter new K/V rows ([B,k,KVH,HD]) into the layer cache at idx."""
+    from repro.core.selection import scatter_rows
+    cache = dict(cache)
+    if policy.quantized:
+        kq, ks = quantize_rows(k_rows)
+        vq, vs = quantize_rows(v_rows)
+        cache["k"] = scatter_rows(cache["k"], idx, kq)
+        cache["v"] = scatter_rows(cache["v"], idx, vq)
+        cache["k_scale"] = scatter_rows(cache["k_scale"], idx, ks)
+        cache["v_scale"] = scatter_rows(cache["v_scale"], idx, vs)
+    else:
+        cache["k"] = scatter_rows(cache["k"], idx, k_rows)
+        cache["v"] = scatter_rows(cache["v"], idx, v_rows)
+    return cache
+
+
+def write_h(cache: Dict[str, jax.Array], idx: jax.Array, h_rows: jax.Array,
+            policy: CachePolicy) -> Dict[str, jax.Array]:
+    from repro.core.selection import scatter_rows
+    cache = dict(cache)
+    if policy.quantized:
+        hq, hs = quantize_rows(h_rows)
+        cache["h"] = scatter_rows(cache["h"], idx, hq)
+        cache["h_scale"] = scatter_rows(cache["h_scale"], idx, hs)
+    else:
+        cache["h"] = scatter_rows(cache["h"], idx, h_rows)
+    return cache
+
+
+def read_kv_for_attention(cache: Dict[str, jax.Array],
+                          policy: CachePolicy):
+    """Returns (k, v, k_scale, v_scale) for flash_attention."""
+    if policy.quantized:
+        return (cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+    return (cache["k"], cache["v"], None, None)
+
+
+def read_h_full(cache: Dict[str, jax.Array], policy: CachePolicy,
+                dtype=None) -> jax.Array:
+    dtype = dtype or policy.compute_dtype
+    if policy.quantized:
+        return dequantize_rows(cache["h"], cache["h_scale"], dtype)
+    return cache["h"].astype(dtype)
+
+
+def read_h_rows(cache: Dict[str, jax.Array], idx: jax.Array,
+                policy: CachePolicy, dtype=None) -> jax.Array:
+    from repro.core.selection import gather_rows
+    dtype = dtype or policy.compute_dtype
+    rows = gather_rows(cache["h"], idx)
+    if policy.quantized:
+        return dequantize_rows(rows, gather_rows(cache["h_scale"], idx),
+                               dtype)
+    return rows.astype(dtype)
+
+
+def fill_from_prefill(cfg: ModelConfig, cache_k, cache_v, cache_h,
+                      proxies: Optional[jax.Array],
+                      policy: CachePolicy) -> Dict[str, jax.Array]:
+    """Build one layer's cache dict from full prefill tensors."""
+    out: Dict[str, jax.Array] = {}
+    if policy.quantized:
+        out["k"], out["k_scale"] = quantize_rows(cache_k)
+        out["v"], out["v_scale"] = quantize_rows(cache_v)
+        out["h"], out["h_scale"] = quantize_rows(cache_h)
+    else:
+        out["k"] = cache_k.astype(policy.compute_dtype)
+        out["v"] = cache_v.astype(policy.compute_dtype)
+        out["h"] = cache_h.astype(policy.compute_dtype)
+    if proxies is not None:
+        out["proxy"] = proxies.astype(policy.compute_dtype)
+        if cfg.spa.incremental_ident:
+            out["proxy_now"] = proxies.astype(policy.compute_dtype)
+    return out

@@ -1,0 +1,73 @@
+"""Update identifiers (paper §3.2, Table 1; §3.3 singular proxy).
+
+Given the layer's CURRENT input states H [B,N,d] and the cached identifier
+vectors from the last time each row was refreshed, produce a similarity
+score per row (LOW similarity = drifted = update).
+
+identifier types:
+  value     — p = h @ W_v                (dLLM-Cache; Theorems 3.1/3.2)
+  singular  — p = h @ (U_r S_r)          (the paper's proxy; Theorem 3.4)
+  query/key — p = h @ W_q / W_k          (Table-1 ablations)
+  attn_in   — p = h                      (Table-1 ablation)
+  attn_out  — stale attention-output momentum (Table-1 ablation; suffers
+              the Appendix-B anisotropy masking — see docstring below)
+  window    — dKV-Cache-style locality heuristic: rows near recently
+              committed tokens score low (i.e. get updated); no projection.
+  none      — no cache (vanilla); selection layer never invoked.
+
+``attn_out`` note: the paper does not specify how the attention output is
+obtained before computing the layer; we use the drift between the two most
+recent CACHED attention outputs as a momentum signal (zero extra FLOPs).
+Its failure mode — anisotropy-collapsed similarities — is reproduced in
+benchmarks/fig5_anisotropy.py either way.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd_proxy import cosine_similarity
+
+
+def proxy_project(h: jax.Array, identifier: str, *,
+                  w_value: Optional[jax.Array] = None,
+                  w_query: Optional[jax.Array] = None,
+                  w_key: Optional[jax.Array] = None,
+                  proxy_mat: Optional[jax.Array] = None) -> jax.Array:
+    """Project input states to identifier vectors p. h: [B,N,d] -> [B,N,r]."""
+    if identifier == "singular":
+        assert proxy_mat is not None
+        return h @ proxy_mat
+    if identifier == "value":
+        assert w_value is not None
+        return h @ w_value
+    if identifier == "query":
+        assert w_query is not None
+        return h @ w_query
+    if identifier == "key":
+        assert w_key is not None
+        return h @ w_key
+    if identifier == "attn_in":
+        return h
+    raise ValueError(f"identifier {identifier!r} has no projection")
+
+
+def drift_scores(p_now: jax.Array, p_cached: jax.Array) -> jax.Array:
+    """Similarity scores [B, N]; low = drifted."""
+    return cosine_similarity(p_now, p_cached)
+
+
+def locality_scores(n: int, committed_pos: jax.Array,
+                    window: int) -> jax.Array:
+    """dKV-Cache heuristic. committed_pos: [B, C] recently committed token
+    positions (-1 = unused slot). Rows within ``window`` of any committed
+    position get score 0 (update); others 1 (keep). Ties broken by distance.
+    """
+    b, c = committed_pos.shape
+    pos = jnp.arange(n)[None, None, :]                      # [1,1,N]
+    cp = committed_pos[:, :, None]                          # [B,C,1]
+    dist = jnp.where(cp >= 0, jnp.abs(pos - cp), n + 1)
+    min_dist = jnp.min(dist, axis=1)                        # [B,N]
+    return jnp.clip(min_dist.astype(jnp.float32) / max(window, 1), 0.0, 1.0)

@@ -1,0 +1,59 @@
+"""Singular proxy construction (paper §3.3, Theorem 3.4).
+
+The paper writes v = W h with W in R^{d x d} (row-acting). Our weights act
+by right-multiplication, v = h @ W_v with W_v in R^{d_in x d_out}, i.e.
+W_paper = W_v^T. The paper keeps the top-r RIGHT singular vectors of
+W_paper, which are the top-r LEFT singular vectors of W_v:
+
+    W_v = U S V^T  =>  f_proxy(h) = S_r (U_r^T h) = h @ (U_r * S_r)
+
+so the proxy matrix is ``proxy = U[:, :r] * S[:r]`` of shape [d_in, r].
+
+Theorem 3.4 bound: |S_cos(v1,v2) - S_cos(p1,p2)| <= 2 (s_{r+1}/s_r)^2 for
+inputs in span of the retained subspace; ``spectral_bound`` reports it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_proxy(w_v: np.ndarray, rank: int) -> Tuple[np.ndarray, float]:
+    """SVD-truncated proxy matrix for one layer.
+
+    w_v: [d_in, d_out] value projection. Returns (proxy [d_in, r], bound).
+    """
+    w = np.asarray(w_v, dtype=np.float32)
+    u, s, _ = np.linalg.svd(w, full_matrices=False)
+    r = min(rank, s.shape[0])
+    proxy = u[:, :r] * s[None, :r]
+    bound = spectral_bound(s, r)
+    return proxy.astype(w_v.dtype), bound
+
+
+def spectral_bound(singular_values: np.ndarray, r: int) -> float:
+    """2 * (s_{r+1} / s_r)^2 from Theorem 3.4 (0 if fully retained)."""
+    s = np.asarray(singular_values, dtype=np.float64)
+    if r >= s.shape[0] or s[r - 1] <= 0:
+        return 0.0
+    return float(2.0 * (s[r] / s[r - 1]) ** 2)
+
+
+def build_proxy_stack(w_v_stack: jax.Array, rank: int) -> np.ndarray:
+    """Proxies for stacked per-layer value weights [L, d_in, d_out]."""
+    ws = np.asarray(jax.device_get(w_v_stack), dtype=np.float32)
+    out = np.stack([build_proxy(w, rank)[0] for w in ws])
+    return out
+
+
+def cosine_similarity(a: jax.Array, b: jax.Array,
+                      eps: float = 1e-8) -> jax.Array:
+    """Rowwise cosine similarity over the last axis (f32)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.sqrt(jnp.sum(a * a, axis=-1) * jnp.sum(b * b, axis=-1))
+    return num / jnp.maximum(den, eps)

@@ -1,0 +1,186 @@
+"""Sharding rules: map every tensor of the system onto the production mesh.
+
+Baseline scheme (DESIGN.md §5):
+  * weights     — last dim over "model" when divisible (tensor dim), and,
+                  for zero3 configs, another dim over the batch axes
+                  (ZeRO-3 / FSDP); stacked-layer leading dims never shard.
+  * activations — batch over ("pod","data"); for long_500k (batch=1) the
+                  SEQUENCE dim shards over the batch axes instead.
+  * caches      — [Lk, B, N, ...]: batch over batch axes, sequence over
+                  "model" (keeps TB-scale DLM caches within HBM; attention
+                  all-gathers one layer's KV at a time).
+
+Everything is expressed as PartitionSpecs chosen per-leaf with divisibility
+checks, so every (arch x shape x mesh) combination lowers without manual
+per-arch tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+# Tensor-parallel placement per weight name (Megatron-style):
+#   "row"    — shard the contraction (input) dim over "model"; the matmul
+#              produces partial sums -> one all-reduce, activations stay
+#              replicated over "model" (attention runs fully local).
+#   "column" — shard the output dim over "model"; downstream op consumes
+#              the sharded feature dim locally (FFN up / lm head).
+_ROW_PARALLEL = {"wq", "wk", "wv", "wo", "w_down", "w_out"}
+_COLUMN_PARALLEL = {"w_gate", "w_up", "lm_head", "w_in", "w_gate_branch"}
+_VOCAB_SHARDED = {"embed", "pos_embed"}
+_REPLICATED = {"router", "conv_kernel", "log_lambda", "a_log", "dt_bias",
+               "d_skip", "norm_weight"}
+
+
+def param_pspec(name: str, leaf: Any, mesh: Mesh, *, zero3: bool,
+                stacked: bool) -> P:
+    """Choose a spec for one parameter leaf (by its dict key name)."""
+    shape = leaf.shape
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    start = 1 if (stacked and ndim >= 2) else 0
+    dims = list(range(start, ndim))
+    if not dims or ndim - start < 2 or name in _REPLICATED:
+        return P(*spec)
+
+    model_dim = None
+    is_moe_expert = (name in ("w_gate", "w_up", "w_down")
+                     and ndim - start == 3)
+    is_gate_heads = name in ("w_a", "w_x") and ndim - start == 3
+    if (is_moe_expert or is_gate_heads) and _divisible(
+            shape[start], mesh, "model"):
+        model_dim = start             # expert / gate-head parallelism
+    elif name in _ROW_PARALLEL:
+        model_dim = ndim - 2                       # contraction dim
+    elif name in _COLUMN_PARALLEL:
+        model_dim = ndim - 1                       # output dim
+    elif name in _VOCAB_SHARDED:
+        model_dim = start                          # vocab / position dim
+    if model_dim is not None and _divisible(shape[model_dim], mesh,
+                                            "model"):
+        spec[model_dim] = "model"
+    elif model_dim is not None:
+        # fall back to any divisible dim (e.g. hubert vocab=504)
+        for d in reversed(dims):
+            if _divisible(shape[d], mesh, "model") and shape[d] >= 128:
+                spec[d] = "model"
+                break
+
+    if zero3:
+        ba = batch_axes(mesh)
+        if ba:
+            for d in dims:
+                if spec[d] is None and shape[d] >= 256 and \
+                        _divisible(shape[d], mesh, ba):
+                    spec[d] = ba if len(ba) > 1 else ba[0]
+                    break
+    return P(*spec)
+
+
+def params_shardings(abs_params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    if not cfg.tp_weights:
+        rep = NamedSharding(mesh, P())
+        return jax.tree.map(lambda _: rep, abs_params)
+
+    def choose(path, leaf):
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        name = ""
+        for p in reversed(path):
+            key = getattr(p, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        return NamedSharding(
+            mesh, param_pspec(name, leaf, mesh, zero3=cfg.zero3,
+                              stacked=stacked))
+
+    return jax.tree_util.tree_map_with_path(choose, abs_params)
+
+
+def opt_state_shardings(abs_opt: Any, abs_params_shardings: Any,
+                        mesh: Mesh) -> Any:
+    """mu/nu shard like params; step replicated."""
+    from repro.training.optimizer import OptState
+    rep = NamedSharding(mesh, P())
+    return OptState(step=rep, mu=abs_params_shardings,
+                    nu=abs_params_shardings)
+
+
+def data_pspec(shape: ShapeConfig, mesh: Mesh, ndim: int,
+               seq_dim: int = 1, full: bool = True) -> P:
+    """Spec for a batched input [B, N, ...].
+
+    Preference order: batch over ALL axes (pod x data x model — the FSDP
+    regime, which keeps tensor-parallel partial-sum all-reduces tiny),
+    else batch over (pod, data), else sequence over all axes (batch=1
+    long-context)."""
+    ba = batch_axes(mesh)
+    all_axes = ba + ("model",)
+    spec: list = [None] * ndim
+    if not ba:
+        return P(*spec)
+    if full and shape.global_batch % axis_size(mesh, all_axes) == 0:
+        spec[0] = all_axes
+    elif shape.global_batch % axis_size(mesh, ba) == 0:
+        spec[0] = ba if len(ba) > 1 else ba[0]
+    elif ndim > seq_dim and shape.seq_len % axis_size(mesh, all_axes) == 0:
+        spec[seq_dim] = all_axes
+    return P(*spec)
+
+
+def activation_pspec(shape: ShapeConfig, mesh: Mesh, ndim: int) -> P:
+    return data_pspec(shape, mesh, ndim)
+
+
+def cache_pspec(shape: ShapeConfig, mesh: Mesh, ndim: int) -> P:
+    """Cache leaf [Lk, B, N, ...]: B over batch axes, N over model."""
+    ba = batch_axes(mesh)
+    spec: list = [None] * ndim
+    if ba and shape.global_batch % axis_size(mesh, ba) == 0:
+        spec[1] = ba if len(ba) > 1 else ba[0]
+        if shape.seq_len % axis_size(mesh, "model") == 0:
+            spec[2] = "model"
+    elif shape.seq_len % axis_size(mesh, ba + ("model",)) == 0:
+        # batch=1 long-context: sequence over everything
+        spec[2] = ba + ("model",)
+    return P(*spec)
+
+
+def batch_shardings(abs_batch: Dict[str, Any], shape: ShapeConfig,
+                    mesh: Mesh, cfg: ModelConfig = None) -> Dict[str, Any]:
+    # MoE archs keep the model axis free for expert parallelism / TP.
+    full = cfg is None or cfg.moe is None
+    return {k: NamedSharding(mesh, data_pspec(shape, mesh, v.ndim,
+                                              full=full))
+            for k, v in abs_batch.items()}
+
+
+def cache_shardings(abs_cache: Any, shape: ShapeConfig, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, cache_pspec(shape, mesh,
+                                                     leaf.ndim)),
+        abs_cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,102 @@
+"""Masked-diffusion training objective (LLaDA style) with chunked CE.
+
+The lm-head logits over a 256k vocab at 4k x 256 tokens are ~TB-scale in
+f32, so the cross-entropy is computed in sequence chunks inside a
+``lax.scan`` — only [B, chunk, V] is ever materialized (the backward pass
+recomputes per chunk under remat).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, transformer
+
+
+def _chunk_size(cfg: ModelConfig, n: int) -> int:
+    # Keep chunk * V bounded (~16M elements) so [B, chunk, V] f32 stays
+    # well under HBM even at B_local ~ 16.
+    target = max(64, int(2 ** 24 // max(cfg.vocab_size, 1)))
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return max(c, 1)
+
+
+def chunked_token_nll(params, cfg: ModelConfig, h: jax.Array,
+                      targets: jax.Array) -> jax.Array:
+    """-log p(target) per token from final hidden states, chunked over N.
+
+    h: [B, N, d]; targets: [B, N] -> nll [B, N] (f32).
+    """
+    b, n, d = h.shape
+    c = _chunk_size(cfg, n)
+    nc = n // c
+    h_n = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+    hc = h_n.reshape(b, nc, c, d)
+    tc = targets.reshape(b, nc, c)
+
+    @jax.checkpoint
+    def _chunk_nll(h_i, t_i):
+        logits = (h_i @ table).astype(jnp.float32)
+        if cfg.logit_softcap > 0:
+            logits = common.softcap(logits, cfg.logit_softcap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, t_i[..., None], axis=-1)[..., 0]
+
+    def body(_, xs):
+        h_i, t_i = xs                       # [B,c,d], [B,c]
+        return None, _chunk_nll(h_i, t_i)
+
+    _, nll = jax.lax.scan(
+        body, None, (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0)))
+    return jnp.moveaxis(nll, 0, 1).reshape(b, n)
+
+
+def diffusion_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                   rng: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: {"tokens": [B,T]} (plus modality stubs). Returns
+    (loss, metrics). LLaDA ELBO: mean_b [(1/t_b) sum_masked nll / T]."""
+    from repro.dlm.noise import sample_masking
+    tokens = batch["tokens"]
+    b, n = tokens.shape
+    noisy, mask, t = sample_masking(rng, tokens, cfg.mask_id)
+    inputs = dict(batch)
+    inputs["tokens"] = noisy
+
+    h = transformer.embed_inputs(params, cfg, inputs)
+    h, aux, _ = transformer.forward_hidden(params, cfg, h)
+    if cfg.frontend == "vision":
+        f = batch["patches"].shape[1]
+        h = h[:, f:]
+    nll = chunked_token_nll(params, cfg, h, tokens)
+    per_tok = nll * mask.astype(jnp.float32)
+    per_ex = jnp.sum(per_tok, axis=-1) / (jnp.maximum(t, 1e-3) * n)
+    ce = jnp.mean(per_ex)
+
+    total = ce + (cfg.moe.router_aux_weight * aux if cfg.moe else 0.0)
+    metrics = {"loss": total, "ce": ce, "aux": aux,
+               "mask_frac": jnp.mean(mask.astype(jnp.float32))}
+    return total, metrics
+
+
+def encoder_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                 rng: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """HuBERT-style masked-frame cluster prediction for encoder-only."""
+    frames = batch["frames"]
+    targets = batch["targets"]          # [B,T] cluster ids
+    b, n, _ = frames.shape
+    k_m, _ = jax.random.split(rng)
+    mask = jax.random.uniform(k_m, (b, n)) < 0.3
+    frames = jnp.where(mask[..., None], 0.0, frames)
+    h = transformer.embed_inputs(params, cfg, {"frames": frames})
+    h, aux, _ = transformer.forward_hidden(params, cfg, h)
+    nll = chunked_token_nll(params, cfg, h, targets)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "aux": aux,
+                  "mask_frac": jnp.mean(mask.astype(jnp.float32))}

@@ -1,0 +1,33 @@
+"""Masked-diffusion forward process (LLaDA / MDLM style)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def sample_masking(key: jax.Array, tokens: jax.Array, mask_id: int,
+                   min_t: float = 0.05, max_t: float = 1.0
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample per-example mask ratio t ~ U(min_t, max_t), mask each token
+    i.i.d. with probability t.
+
+    Returns (noisy_tokens, mask [B,T] bool, t [B]).
+    """
+    b, n = tokens.shape
+    k_t, k_m = jax.random.split(key)
+    t = jax.random.uniform(k_t, (b,), minval=min_t, maxval=max_t)
+    mask = jax.random.uniform(k_m, (b, n)) < t[:, None]
+    noisy = jnp.where(mask, mask_id, tokens)
+    return noisy, mask, t
+
+
+def mask_canvas(prompt: jax.Array, gen_len: int, mask_id: int) -> jax.Array:
+    """Decoding canvas: prompt followed by gen_len [MASK] slots."""
+    b = prompt.shape[0]
+    canvas = jnp.full((b, prompt.shape[1] + gen_len), mask_id,
+                      prompt.dtype)
+    return canvas.at[:, : prompt.shape[1]].set(prompt)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for SPA-Cache hot spots (validated interpret=True).
+
+  proxy_score      — fused rank-r proxy projection + cosine drift scores
+  sparse_attention — gathered-query flash attention vs full KV cache
+  scatter_update   — in-place row scatter into cache buffers
+  rglru_scan       — chunked gated linear recurrence (RecurrentGemma)
+  ssd_chunk        — Mamba-2 SSD chunked scan (state-space duality)
+
+Each has a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
+"""

@@ -1,0 +1,58 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the
+kernel body runs in Python, validating the exact TPU program logic against
+the pure-jnp oracles in ref.py. On TPU set interpret=False (default when a
+TPU backend is detected).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (proxy_score as _ps, rglru_scan as _rg,
+                           scatter_update as _sc, sparse_attention as _sa)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def proxy_score(x, proxy_mat, p_cached, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ps.proxy_score(x, proxy_mat, p_cached, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "soft_cap",
+                                             "interpret"))
+def sparse_attention(q, k, v, q_pos, k_scale=None, v_scale=None,
+                     window=0, soft_cap=0.0, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _sa.sparse_attention(q, k, v, q_pos, k_scale=k_scale,
+                                v_scale=v_scale, window=window,
+                                soft_cap=soft_cap, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0,))
+def scatter_update(cache, idx, rows, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _sc.scatter_update(cache, idx, rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, b, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rg.rglru_scan(a, b, interpret=interpret)
+
+
+batched_proxy_score = jax.vmap(
+    lambda x, w, pc: _ps.proxy_score(x, w, pc, interpret=True),
+    in_axes=(0, None, 0))
+
+batched_sparse_attention = jax.vmap(
+    lambda q, k, v, qp: _sa.sparse_attention(q, k, v, qp, interpret=True),
+    in_axes=(0, 0, 0, 0))

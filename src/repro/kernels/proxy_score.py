@@ -1,0 +1,76 @@
+"""Pallas kernel: fused singular-proxy projection + drift scoring.
+
+The paper's identification hot spot (Fig. 4): p = x @ W_r followed by a
+rowwise cosine similarity against the cached identifiers. On GPU these are
+two kernels with an HBM round-trip for p; on TPU we fuse them — x streams
+HBM -> VMEM once per block, the projection runs on the MXU (r is padded to
+a multiple of 128 by construction), and the similarity reduction runs on
+the VPU while the block is still resident.
+
+Grid: (N / block_n,). VMEM per step: block_n*d (x) + d*r (W_r) +
+2*block_n*r (p_now, p_cached) floats — block_n chosen so this fits ~8 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _proxy_score_kernel(x_ref, w_ref, pc_ref, scores_ref, pnow_ref, *,
+                        eps: float):
+    x = x_ref[...].astype(jnp.float32)           # [bn, d]
+    w = w_ref[...].astype(jnp.float32)           # [d, r]
+    pc = pc_ref[...].astype(jnp.float32)         # [bn, r]
+    p = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    num = jnp.sum(p * pc, axis=-1)
+    den = jnp.sqrt(jnp.sum(p * p, axis=-1) * jnp.sum(pc * pc, axis=-1))
+    scores_ref[...] = num / jnp.maximum(den, eps)
+    pnow_ref[...] = p.astype(pnow_ref.dtype)
+
+
+def proxy_score_block_n(d: int, r: int, vmem_budget: int = 8 * 2 ** 20
+                        ) -> int:
+    per_row = (d + 2 * r) * 4
+    bn = max(8, min(1024, (vmem_budget - d * r * 4) // max(per_row, 1)))
+    # round down to a multiple of 8 (sublane)
+    return max(8, (bn // 8) * 8)
+
+
+def proxy_score(x: jax.Array, proxy_mat: jax.Array, p_cached: jax.Array,
+                *, eps: float = 1e-8, block_n: int = 0,
+                interpret: bool = False):
+    """x: [N, d]; proxy_mat: [d, r]; p_cached: [N, r].
+    Returns (scores [N] f32, p_now [N, r] in x.dtype)."""
+    n, d = x.shape
+    r = proxy_mat.shape[1]
+    bn = block_n or proxy_score_block_n(d, r)
+    bn = min(bn, n)
+    pad = (-n) % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        p_cached = jnp.pad(p_cached, ((0, pad), (0, 0)))
+    n_p = x.shape[0]
+
+    scores, p_now = pl.pallas_call(
+        functools.partial(_proxy_score_kernel, eps=eps),
+        grid=(n_p // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, r), lambda i: (0, 0)),
+            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_p,), jnp.float32),
+            jax.ShapeDtypeStruct((n_p, r), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, proxy_mat, p_cached)
+    return scores[:n], p_now[:n]

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def proxy_score_ref(x: jax.Array, proxy_mat: jax.Array,
+                    p_cached: jax.Array, eps: float = 1e-8):
+    """x: [N, d]; proxy_mat: [d, r]; p_cached: [N, r].
+    Returns (scores [N], p_now [N, r]) — scores = cosine(p_now, p_cached).
+    """
+    p_now = (x.astype(jnp.float32) @ proxy_mat.astype(jnp.float32))
+    pc = p_cached.astype(jnp.float32)
+    num = jnp.sum(p_now * pc, axis=-1)
+    den = jnp.sqrt(jnp.sum(p_now * p_now, axis=-1)
+                   * jnp.sum(pc * pc, axis=-1))
+    scores = num / jnp.maximum(den, eps)
+    return scores, p_now.astype(x.dtype)
+
+
+def sparse_attention_ref(q, k, v, q_pos, *, k_scale=None, v_scale=None,
+                         window=0, soft_cap=0.0):
+    """q: [k, H, hd]; k/v: [N, KVH, hd]; q_pos: [k] (original positions).
+    GQA + bidirectional window + softcap. Returns [k, H, hd]."""
+    nq, h, hd = q.shape
+    n, kvh, _ = k.shape
+    g = h // kvh
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:      # [N, KVH] per-row dequant scales
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    qr = q.reshape(nq, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("qhgd,khd->qhgk", qr, kf) / (hd ** 0.5)
+    if soft_cap > 0:
+        scores = soft_cap * jnp.tanh(scores / soft_cap)
+    if window > 0:
+        dist = jnp.abs(q_pos[:, None] - jnp.arange(n)[None, :])
+        mask = (dist <= window)[:, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("qhgk,khd->qhgd", p, vf)
+    return out.reshape(nq, h, hd).astype(q.dtype)
+
+
+def scatter_update_ref(cache: jax.Array, idx: jax.Array,
+                       rows: jax.Array) -> jax.Array:
+    """cache: [N, d]; idx: [k]; rows: [k, d] -> updated cache."""
+    return cache.at[idx].set(rows.astype(cache.dtype))
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over axis 0. a, b: [N, d] -> h [N, d]."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros((a.shape[1],), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.astype(jnp.float32),
+                                    b.astype(jnp.float32)))
+    return hs.astype(a.dtype)
+
+
+def ssd_chunk_ref(x, dt, a_scalar_steps, b, c):
+    """Sequential single-head SSD oracle. x: [T, hd]; dt: [T];
+    a_scalar_steps: [T] = dt_t * a (log-decay per step); b, c: [T, ds]."""
+    t, hd = x.shape
+
+    def step(s, inp):
+        xi, dti, lai, bi, ci = inp
+        s = jnp.exp(lai) * s + dti * jnp.outer(xi, bi)
+        y = s @ ci
+        return s, y
+
+    s0 = jnp.zeros((hd, b.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0, (x.astype(jnp.float32), dt.astype(jnp.float32),
+                   a_scalar_steps.astype(jnp.float32),
+                   b.astype(jnp.float32), c.astype(jnp.float32)))
+    return ys.astype(x.dtype)

@@ -1,0 +1,63 @@
+"""Pallas kernel: chunked gated linear recurrence (RG-LRU core).
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the channel dim. The grid is
+(channel_blocks, seq_chunks) with the chunk dim minor (sequential on
+TPU); the carry h lives in VMEM scratch, so the recurrence streams the
+sequence through VMEM once — the memory-bound optimum. Within a chunk
+the scan is an unrolled VPU loop over rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].astype(jnp.float32)     # [chunk, bd]
+    b = b_ref[...].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        o_ref[pl.dslice(t, 1), :] = h[None].astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, *, chunk: int = 128,
+               block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """a, b: [N, d] -> h: [N, d] with h_t = a_t * h_{t-1} + b_t."""
+    n, d = a.shape
+    chunk = min(chunk, n)
+    bd = min(block_d, d)
+    pad_n = (-n) % chunk
+    pad_d = (-d) % bd
+    if pad_n or pad_d:
+        a = jnp.pad(a, ((0, pad_n), (0, pad_d)))
+        b = jnp.pad(b, ((0, pad_n), (0, pad_d)))
+    np_, dp = a.shape
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=(dp // bd, np_ // chunk),
+        in_specs=[
+            pl.BlockSpec((chunk, bd), lambda di, j: (j, di)),
+            pl.BlockSpec((chunk, bd), lambda di, j: (j, di)),
+        ],
+        out_specs=pl.BlockSpec((chunk, bd), lambda di, j: (j, di)),
+        out_shape=jax.ShapeDtypeStruct((np_, dp), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:n, :d]

@@ -1,0 +1,140 @@
+"""Pallas kernel: gathered-query flash attention vs a full KV cache.
+
+SPA-Cache Phase 2 on TPU: k selected query rows attend to the whole
+(partially refreshed) KV cache. Flash-style online softmax with the
+running (m, l, acc) state held in VMEM scratch across the sequential
+kv-block grid dimension. Supports GQA (kv head = q head // G),
+bidirectional sliding windows (query positions are arbitrary gathered
+indices), gemma2 attention-logit softcap, and int8 KV with per-row
+dequant scales.
+
+Grid: (H, nq, nk) — nk minor (sequential on TPU), so VMEM scratch carries
+the softmax state per (head, q-block). VMEM per step: bq*hd (q) +
+2*bk*hd (kv) + bq*bk (scores) + scratch — (128, 512) blocks with hd<=256
+stay under ~2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _sparse_attn_kernel(qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                        o_ref, m_scr, l_scr, acc_scr, *,
+                        nk: int, bk: int, window: int, soft_cap: float,
+                        n_valid: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    k = k * ks_ref[0][:, None].astype(jnp.float32)
+    v = v * vs_ref[0][:, None].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+    if soft_cap > 0.0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+
+    kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kv_pos < n_valid
+    if window > 0:
+        qpos = qpos_ref[...][:, None]                 # [bq, 1]
+        valid = jnp.logical_and(valid, jnp.abs(qpos - kv_pos) <= window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l_safe = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, *, k_scale=None, v_scale=None,
+                     window: int = 0, soft_cap: float = 0.0,
+                     block_q: int = 128, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: [kq, H, hd]; k/v: [N, KVH, hd]; q_pos: [kq].
+    k_scale/v_scale: [N, KVH] or None. Returns [kq, H, hd]."""
+    kq, h, hd = q.shape
+    n, kvh, _ = k.shape
+    assert h % kvh == 0
+    g = h // kvh
+    scale = 1.0 / (hd ** 0.5)
+
+    bq = min(block_q, kq)
+    bk = min(block_k, n)
+    pad_q = (-kq) % bq
+    pad_k = (-n) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=2 ** 30)
+    if pad_k:
+        k = jnp.pad(k, ((0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad_k), (0, 0), (0, 0)))
+    if k_scale is None:
+        k_scale = jnp.ones((k.shape[0], kvh), jnp.float32)
+        v_scale = jnp.ones((k.shape[0], kvh), jnp.float32)
+    elif pad_k:
+        k_scale = jnp.pad(k_scale, ((0, pad_k), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, pad_k), (0, 0)))
+
+    qt = jnp.swapaxes(q, 0, 1)                      # [H, kq_p, hd]
+    kt = jnp.swapaxes(k, 0, 1)                      # [KVH, N_p, hd]
+    vt = jnp.swapaxes(v, 0, 1)
+    kst = jnp.swapaxes(k_scale, 0, 1).astype(jnp.float32)  # [KVH, N_p]
+    vst = jnp.swapaxes(v_scale, 0, 1).astype(jnp.float32)
+
+    nq = qt.shape[1] // bq
+    nk = kt.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_sparse_attn_kernel, nk=nk, bk=bk,
+                          window=window, soft_cap=soft_cap, n_valid=n,
+                          scale=scale),
+        grid=(h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda hh, i, j: (i,)),
+            pl.BlockSpec((1, bq, hd), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda hh, i, j: (hh // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda hh, i, j: (hh // g, j, 0)),
+            pl.BlockSpec((1, bk), lambda hh, i, j: (hh // g, j)),
+            pl.BlockSpec((1, bk), lambda hh, i, j: (hh // g, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda hh, i, j: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, qt.shape[1], hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, qt, kt, vt, kst, vst)
+    out = jnp.swapaxes(out, 0, 1)                   # [kq_p, H, hd]
+    return out[:kq]

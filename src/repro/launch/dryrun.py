@@ -1,0 +1,454 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+For each combination this produces, WITHOUT allocating any real tensors:
+  * compiled.memory_analysis()  — per-device bytes (does it fit 16 GB HBM?)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective-bytes breakdown parsed from the partitioned HLO
+and appends a JSON record consumed by benchmarks/roofline.py and
+EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ASSIGNED, SHAPES, ModelConfig, ShapeConfig,
+                           get_arch, get_shape, supports_shape)
+from repro.core import budget
+from repro.core.cache import init_model_cache
+from repro.core.spa_layer import spa_proxy_specs
+from repro.distributed import hints, sharding as shd
+from repro.dlm.decoding import DecodeSettings, DecodeState, prefill, serve_step
+from repro.launch import hlo_cost, mesh as mesh_lib
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.trainer import train_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, n = shape.global_batch, shape.seq_len
+    tok = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    emb = functools.partial(jax.ShapeDtypeStruct,
+                            dtype=jnp.dtype(cfg.param_dtype))
+    if cfg.frontend == "audio":
+        specs = {"frames": emb((b, n, cfg.d_model))}
+        if shape.kind == "train":
+            specs["targets"] = tok((b, n))
+        return specs
+    if cfg.frontend == "vision":
+        f = min(cfg.frontend_tokens, n // 2)
+        return {"tokens": tok((b, n - f)),
+                "patches": emb((b, f, cfg.d_model))}
+    return {"tokens": tok((b, n))}
+
+
+def abstract_params(cfg: ModelConfig):
+    from repro.models import transformer
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg), key)
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
+    b, n = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(init_model_cache, cfg, b, n))
+    extras = {}
+    n_text = n
+    if cfg.frontend == "vision":
+        f = min(cfg.frontend_tokens, n // 2)
+        n_text = n - f
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (b, f, cfg.d_model), jnp.dtype(cfg.param_dtype))
+    return DecodeState(
+        tokens=jax.ShapeDtypeStruct((b, n_text), jnp.int32),
+        cache=cache,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        committed=jax.ShapeDtypeStruct((b, 8), jnp.int32),
+        n_masked=jax.ShapeDtypeStruct((b,), jnp.int32),
+        extras=extras,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step builders (function + abstract args + in_shardings)
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    opt_cfg = AdamWConfig()
+    fn = functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg)
+    abs_p = abstract_params(cfg)
+    abs_opt = jax.eval_shape(init_opt_state, abs_p)
+    abs_batch = input_specs(cfg, shape)
+    abs_rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_sh = shd.params_shardings(abs_p, cfg, mesh)
+    in_sh = (p_sh, shd.opt_state_shardings(abs_opt, p_sh, mesh),
+             shd.batch_shardings(abs_batch, shape, mesh, cfg),
+             shd.replicated(mesh))
+    abs_out = jax.eval_shape(fn, abs_p, abs_opt, abs_batch, abs_rng)
+    out_sh = (p_sh, shd.opt_state_shardings(abs_out[1], p_sh, mesh),
+              jax.tree.map(lambda _: shd.replicated(mesh), abs_out[2]))
+    return fn, (abs_p, abs_opt, abs_batch, abs_rng), in_sh, (0, 1), out_sh
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    def fn(params, inputs, proxies):
+        return prefill(params, cfg, inputs, proxies)
+
+    abs_p = abstract_params(cfg)
+    abs_in = input_specs(cfg, shape)
+    abs_prox = spa_proxy_specs(cfg)
+    p_sh = shd.params_shardings(abs_p, cfg, mesh)
+    prox_sh = (jax.tree.map(
+        lambda l: shd.replicated(mesh), abs_prox)
+        if abs_prox is not None else None)
+    in_sh = (p_sh, shd.batch_shardings(abs_in, shape, mesh, cfg), prox_sh)
+    # outputs: (h_final, cache) — shard the cache N-dim over "model" so
+    # the stored caches use the whole pod's HBM, not just the data axis.
+    abs_out = jax.eval_shape(fn, abs_p, abs_in, abs_prox)
+    out_sh = (jax.NamedSharding(mesh, shd.data_pspec(shape, mesh, 3)),
+              shd.cache_shardings(abs_out[1], shape, mesh))
+    return fn, (abs_p, abs_in, abs_prox), in_sh, (), out_sh
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    settings = DecodeSettings(n_candidates=64, parallel_threshold=0.9,
+                              max_parallel=8)
+
+    def fn(params, state, proxies):
+        return serve_step(params, cfg, state, settings, proxies)
+
+    abs_p = abstract_params(cfg)
+    abs_state = abstract_decode_state(cfg, shape)
+    abs_prox = spa_proxy_specs(cfg)
+    p_sh = shd.params_shardings(abs_p, cfg, mesh)
+    state_sh = DecodeState(
+        tokens=jax.NamedSharding(mesh, shd.data_pspec(shape, mesh, 2)),
+        cache=shd.cache_shardings(abs_state.cache, shape, mesh),
+        step=shd.replicated(mesh),
+        committed=shd.replicated(mesh),   # tiny ring buffer
+        n_masked=shd.replicated(mesh),
+        extras={k: jax.NamedSharding(mesh,
+                                     shd.data_pspec(shape, mesh, v.ndim))
+                for k, v in abs_state.extras.items()},
+    )
+    prox_sh = (jax.tree.map(lambda l: shd.replicated(mesh), abs_prox)
+               if abs_prox is not None else None)
+    in_sh = (p_sh, state_sh, prox_sh)
+    abs_out = jax.eval_shape(
+        lambda p, st, pr: fn(p, st, pr), abs_p, abs_state, abs_prox)
+    out_sh = (DecodeState(
+        tokens=jax.NamedSharding(mesh, shd.data_pspec(shape, mesh, 2)),
+        cache=shd.cache_shardings(abs_out[0].cache, shape, mesh),
+        step=shd.replicated(mesh),
+        committed=shd.replicated(mesh),
+        n_masked=shd.replicated(mesh),
+    ), jax.tree.map(lambda _: shd.replicated(mesh), abs_out[1]))
+    return fn, (abs_p, abs_state, abs_prox), in_sh, (1,), out_sh
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill,
+            "decode": build_decode}
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by each collective kind (result shapes of the
+    partitioned per-device module)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s.startswith("%") and " = " not in s:
+            continue
+        for kind in _COLLECTIVES:
+            m = re.search(rf"=\s*(\([^)]*\)|\S+)\s+{kind}(-start|-done)?\(",
+                          s)
+            if m and "-done" not in (m.group(2) or ""):
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _shape_bytes(m.group(1))
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs for this step: 6*N_active*D (train) / 2*N_active*D."""
+    p_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * p_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * p_active * shape.global_batch * shape.seq_len
+    # decode: sparse rows per layer (mean k over layers)
+    ks = budget.k_schedule(cfg.spa, cfg.n_layers, shape.seq_len)
+    if cfg.spa.identifier == "none":
+        mean_k = shape.seq_len
+    else:
+        mean_k = float(np.mean(ks))
+    return 2.0 * p_active * shape.global_batch * mean_k
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                          mesh) -> float:
+    """HBM traffic model per device per step (documented in EXPERIMENTS.md).
+
+    The HLO io-bytes estimate counts every loop-body buffer as HBM traffic,
+    but on TPU the flash/SSD block buffers are VMEM-resident; this analytic
+    model counts only true HBM streams: parameter reads, activation
+    residual traffic, cache traffic, optimizer state, and logits.
+    """
+    n_batch = shd.axis_size(mesh, shd.batch_axes(mesh))
+    n_model = int(mesh.shape["model"])
+    n_chips = n_batch * n_model
+    p_bytes = cfg.param_count() * 2.0            # bf16
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    b, n = shape.global_batch, shape.seq_len
+    act_bytes = 2.0
+
+    if shape.kind == "train":
+        nm = max(cfg.microbatch, 1)
+        b_loc = max(b // n_batch, 1)
+        act = b_loc * n * d * act_bytes * L * 6.0 * 3.0   # fwd+bwd+remat
+        weights = 2.0 * p_bytes * nm / (1 if not cfg.zero3 else 1)
+        opt = 24.0 * cfg.param_count()                     # f32 m/v/p rw
+        logits = 2.0 * b_loc * n * V * 4.0 * 2.0           # chunked, recomp
+        return act + weights + opt + logits
+    if shape.kind == "prefill":
+        b_loc = max(b // n_batch, 1)
+        act = b_loc * n * d * act_bytes * L * 6.0
+        cache_tok = (2 * cfg.kv_dim + d) * act_bytes + cfg.spa.rank * 2.0
+        if cfg.cache_dtype == "int8":
+            cache_tok = (2 * cfg.kv_dim + d) * 1.0 + cfg.spa.rank * 2.0
+        cache = b * n * cache_tok * L / n_chips
+        return act + p_bytes + cache
+    # decode: sparse rows + identification + cache traffic
+    from repro.core import budget as budget_lib
+    ks = budget_lib.k_schedule(cfg.spa, L, n)
+    mean_k = float(np.mean(ks)) if cfg.spa.identifier != "none" else n
+    tok_dev = b * n / n_chips
+    ident = tok_dev * d * act_bytes * L * 2.0          # read h + proxy mm
+    rows = b * mean_k * d * act_bytes * L * 6.0 / n_chips
+    cache_tok = (2 * cfg.kv_dim + d) * \
+        (1.0 if cfg.cache_dtype == "int8" else act_bytes)
+    cache = b * n * cache_tok * L * 1.5 / n_chips      # read + sparse write
+    logits = b * 64 * V * 4.0 / n_batch
+    return ident + rows + cache + p_bytes + logits
+
+
+def roofline_terms(parsed: Dict[str, Any], cfg: ModelConfig,
+                   shape: ShapeConfig, mesh) -> Dict[str, float]:
+    flops = float(parsed["flops"])
+    hlo_io = float(parsed["bytes_accessed"])
+    mem_bytes = analytic_memory_bytes(cfg, shape, mesh)
+    cbytes = float(parsed["collective_bytes"])
+    return {
+        "hlo_flops_per_device": flops,
+        "hlo_io_bytes_per_device": hlo_io,     # upper bound (loop buffers)
+        "hbm_bytes_per_device": mem_bytes,
+        "collective_bytes_per_device": cbytes,
+        "t_compute_s": flops / mesh_lib.PEAK_FLOPS_BF16,
+        "t_memory_s": mem_bytes / mesh_lib.HBM_BANDWIDTH,
+        "t_collective_s": cbytes / mesh_lib.ICI_BANDWIDTH,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            verbose: bool = True, cfg_override=None,
+            tag: str = "") -> Dict[str, Any]:
+    cfg = cfg_override if cfg_override is not None else get_arch(arch)
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind,
+    }
+    if tag:
+        rec["tag"] = tag
+    if not supports_shape(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("encoder-only: no decode step"
+                         if cfg.is_encoder_only and shape.kind == "decode"
+                         else "requires sub-quadratic attention")
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    fn, abs_args, in_sh, donate, out_sh = \
+        BUILDERS[shape.kind](cfg, shape, mesh)
+
+    # Activation batch axes for sharding hints inside model code.
+    ba = shd.batch_axes(mesh)
+    full = cfg.moe is None
+    if full and shape.global_batch % shd.axis_size(
+            mesh, ba + ("model",)) == 0:
+        act_batch = ba + ("model",)
+    elif shape.global_batch % shd.axis_size(mesh, ba) == 0:
+        act_batch = ba
+    else:
+        act_batch = ()
+
+    t0 = time.time()
+    with mesh, hints.batch_axes_ctx(act_batch):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*abs_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else cost_list[0]
+    hlo = compiled.as_text()
+    parsed = hlo_cost.analyze_hlo(hlo)
+
+    rec["status"] = "ok"
+    rec["n_chips"] = n_chips
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    args_b = rec["memory"]["argument_bytes"] or 0
+    temp_b = rec["memory"]["temp_bytes"] or 0
+    rec["memory"]["per_device_total_gb"] = round(
+        (args_b + temp_b) / 2 ** 30, 3)
+    rec["collectives"] = parsed["collectives"]
+    rec["xla_cost_analysis"] = {   # loop bodies counted once (cross-check)
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+    rec.update(roofline_terms(parsed, cfg, shape, mesh))
+    rec["model_flops_per_device"] = model_flops(cfg, shape) / n_chips
+    if rec["hlo_flops_per_device"]:
+        rec["useful_flop_ratio"] = round(
+            rec["model_flops_per_device"] / rec["hlo_flops_per_device"], 4)
+    terms = {k: rec[k] for k in ("t_compute_s", "t_memory_s",
+                                 "t_collective_s")}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_kind}"
+              + (f" x {tag}" if tag else "") + "] "
+              f"compile={t_compile:.0f}s "
+              f"mem/dev={rec['memory']['per_device_total_gb']}GB "
+              f"compute={rec['t_compute_s']:.4f}s "
+              f"memory={rec['t_memory_s']:.4f}s "
+              f"coll={rec['t_collective_s']:.4f}s "
+              f"-> {rec['bottleneck']}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                for m in meshes:
+                    combos.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        for m in meshes:
+            combos.append((args.arch, args.shape, m))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    failures = 0
+    with open(args.out, "a") as f:
+        for arch, s, m in combos:
+            if (arch, s, m) in done:
+                print(f"[{arch} x {s} x {m}] cached, skipping", flush=True)
+                continue
+            try:
+                rec = run_one(arch, s, m)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": s, "mesh": m,
+                       "status": "error", "error": repr(e)[:500]}
+                failures += 1
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+DOC = """§Perf hillclimbing harness: lower + analyze named VARIANTS of a
+(arch x shape) pair on the single-pod mesh, appending records tagged with
+the variant name to results/hillclimb.jsonl. Each variant is one
+hypothesis from EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch deepseek-67b --shape decode_32k \
+      --variant incremental_ident
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import traceback
+
+from repro.configs import get_arch
+from repro.configs.base import SPAConfig
+from repro.launch.dryrun import run_one
+
+
+def _spa(cfg, **kw):
+    return dataclasses.replace(cfg, spa=dataclasses.replace(cfg.spa, **kw))
+
+
+VARIANTS = {
+    # paper-faithful reference points
+    "baseline": lambda c: c,
+    "paper_value_proxy": lambda c: _spa(c, identifier="value"),
+    "paper_uniform_rho": lambda c: _spa(c, schedule="uniform"),
+    # beyond-paper candidates
+    "incremental_ident": lambda c: _spa(c, incremental_ident=True),
+    "int8_cache": lambda c: dataclasses.replace(c, cache_dtype="int8"),
+    "bf16_cache": lambda c: dataclasses.replace(c,
+                                                cache_dtype="bfloat16"),
+    "buckets_2": lambda c: _spa(c, n_buckets=2),
+    "buckets_12": lambda c: _spa(c, n_buckets=12),
+    "rank_64": lambda c: _spa(c, rank=64),
+    "rank_256": lambda c: _spa(c, rank=256),
+    "microbatch_1": lambda c: dataclasses.replace(c, microbatch=1),
+    "microbatch_2": lambda c: dataclasses.replace(c, microbatch=2),
+    "microbatch_4": lambda c: dataclasses.replace(c, microbatch=4),
+    "microbatch_16": lambda c: dataclasses.replace(c, microbatch=16),
+    "no_zero3": lambda c: dataclasses.replace(c, zero3=False),
+    "zero3": lambda c: dataclasses.replace(c, zero3=True),
+    "no_remat": lambda c: dataclasses.replace(c, remat=False),
+    "replicated_weights": lambda c: dataclasses.replace(
+        c, tp_weights=False),
+    "bf16_grad_accum": lambda c: dataclasses.replace(
+        c, accum_dtype="bfloat16"),
+    "int8_cache_incremental": lambda c: dataclasses.replace(
+        _spa(c, incremental_ident=True), cache_dtype="int8"),
+    "mb4_unrolled": lambda c: dataclasses.replace(
+        c, microbatch=4, accum_unroll=True),
+    "mb8_unrolled": lambda c: dataclasses.replace(c, accum_unroll=True),
+    "repl_weights_nohint": lambda c: dataclasses.replace(
+        c, tp_weights=False),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True,
+                    help="|".join(VARIANTS))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args(argv)
+
+    cfg = VARIANTS[args.variant](get_arch(args.arch))
+    try:
+        rec = run_one(args.arch, args.shape, args.mesh,
+                      cfg_override=cfg, tag=args.variant)
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": args.mesh, "tag": args.variant,
+               "status": "error", "error": repr(e)[:500]}
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return 0 if rec.get("status") == "ok" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,309 @@
+"""Trip-count-aware cost model over optimized (partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts scanned layer stacks by ~L x. This module re-derives FLOPs,
+memory traffic, and collective bytes from ``compiled.as_text()`` with
+loop-trip multipliers:
+
+  * parse the module into computations (instruction name -> result shape,
+    including computation parameters from the header);
+  * find every `while`, recover its trip count from the condition's
+    `compare(iter, constant)` (jax scans lower to this form);
+  * propagate multipliers through the call graph (while bodies, fusions,
+    calls, reduces, conditionals);
+  * FLOPs: 2 * prod(output dims) * prod(lhs contracting dims) per `dot`;
+  * bytes: per instruction, operand + output buffer sizes for
+    traffic-relevant top-level ops — an HLO-cost-analysis-style estimate
+    consistent across configurations;
+  * collectives: result-shape bytes per op kind, multiplied by trips.
+
+Everything is derived from the compiled artifact itself, as required by
+the roofline deliverable; the analytic model (benchmarks/roofline.py)
+cross-checks.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f4e2m1fn": 1, "f8e8m0fnu": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e4m3b11fnuz": 1,
+}
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_BYTES_OPS = frozenset((
+    "fusion", "copy", "scatter", "gather", "sort", "reduce", "transpose",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "broadcast", "reshape", "convert", "select", "add", "multiply",
+    "subtract", "divide", "exponential", "tanh", "rsqrt", "iota", "slice",
+    "bitcast", "custom-call", "compare", "maximum", "minimum", "negate",
+    "abs", "log", "power", "clamp", "and", "or", "xor",
+))
+_CALLERS = frozenset((
+    "fusion", "call", "map", "reduce", "sort", "scatter", "reduce-window",
+    "select-and-scatter", "custom-call", "conditional", "all-reduce",
+    "reduce-scatter",
+))
+
+
+def _shape_list(segment: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(segment):
+        total += _DTYPE_BYTES[dt] * int(math.prod(dims) if dims else 1)
+    return total
+
+
+def _balanced_prefix(s: str) -> str:
+    """Return the balanced (...) prefix of s (s must start with '(')."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return s[: i + 1]
+    return s
+
+
+class Computation:
+    def __init__(self, name: str, header: str):
+        self.name = name
+        self.instructions: List[str] = []
+        # name -> result shape segment (params from the header)
+        self.defs: Dict[str, str] = {}
+        for m in re.finditer(r"([\w.\-]+)\s*:\s*(\([^()]*\)|[a-z0-9]+"
+                             r"\[[0-9,]*\](?:\{[^}]*\})?)", header):
+            self.defs[m.group(1)] = m.group(2)
+
+    def add(self, instr: str):
+        self.instructions.append(instr)
+        m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*", instr)
+        if m:
+            self.defs[m.group(1)] = _result_segment(instr)
+
+
+def _result_segment(instr: str) -> str:
+    if " = " not in instr:
+        return ""
+    rhs = instr.split(" = ", 1)[1]
+    if rhs.startswith("("):
+        return _balanced_prefix(rhs)
+    m = re.match(r"\s*(\S+)\s", rhs)
+    return m.group(1) if m else ""
+
+
+def _opcode(instr: str) -> str:
+    if " = " not in instr:
+        return ""
+    rhs = instr.split(" = ", 1)[1]
+    if rhs.startswith("("):
+        rhs = rhs[len(_balanced_prefix(rhs)):]
+    m = re.match(r"\s*(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?"
+                 r"([\w\-]+)\(", rhs)
+    return m.group(1) if m else ""
+
+
+def _operand_names(instr: str) -> List[str]:
+    """Names of the operands of the top-level op in this instruction."""
+    op = _opcode(instr)
+    if not op:
+        return []
+    idx = instr.find(op + "(")
+    if idx < 0:
+        return []
+    args = _balanced_prefix(instr[idx + len(op):])
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            s = raw.strip()
+            if s.endswith("{") and "->" in s:
+                m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+                if m:
+                    cur = Computation(m.group(2), s)
+                    self.computations[cur.name] = cur
+                    if m.group(1):
+                        self.entry = cur.name
+                    continue
+            if s == "}":
+                cur = None
+                continue
+            if cur is not None and "=" in s:
+                cur.add(s)
+        if self.entry is None and self.computations:
+            for name in self.computations:
+                if "main" in name:
+                    self.entry = name
+                    break
+            else:
+                self.entry = max(
+                    self.computations,
+                    key=lambda k: len(self.computations[k].instructions))
+
+    # -- shape resolution ---------------------------------------------------
+
+    def operand_shapes(self, comp: Computation, instr: str) -> List[str]:
+        segs = []
+        for name in _operand_names(instr):
+            seg = comp.defs.get(name)
+            if seg is None:
+                for c in self.computations.values():
+                    if name in c.defs:
+                        seg = c.defs[name]
+                        break
+            if seg:
+                segs.append(seg)
+        return segs
+
+    # -- structure ------------------------------------------------------------
+
+    def called_computations(self, instr: str) -> List[str]:
+        names = []
+        for key in ("body=", "calls=", "to_apply=", "condition=",
+                    "true_computation=", "false_computation=",
+                    "branch_computations={"):
+            for m in re.finditer(re.escape(key) + r"\{?%?([\w.\-]+)", instr):
+                names.append(m.group(1))
+        return [n for n in names if n in self.computations]
+
+    def while_trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        const_vals: Dict[str, int] = {}
+        for ln in comp.instructions:
+            m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\S+\s+"
+                         r"constant\((\d+)\)", ln)
+            if m:
+                const_vals[m.group(1)] = int(m.group(2))
+        for ln in comp.instructions:
+            if "compare(" not in ln:
+                continue
+            args = _operand_names(ln)
+            for a in args:
+                if a in const_vals:
+                    return max(const_vals[a], 1)
+        # Compare may be wrapped in a fusion: jax while-conditions are tiny
+        # (iter < trip_count), so the max integer constant IS the bound.
+        if const_vals:
+            return max(max(const_vals.values()), 1)
+        return 1
+
+    # -- cost walk -------------------------------------------------------------
+
+    def analyze(self) -> Dict[str, float]:
+        flops = 0.0
+        bytes_accessed = 0.0
+        coll = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
+        stack = set()
+
+        def walk(comp_name: str, mult: float, top_level: bool):
+            nonlocal flops, bytes_accessed
+            if comp_name in stack:
+                return
+            comp = self.computations.get(comp_name)
+            if comp is None:
+                return
+            stack.add(comp_name)
+            for instr in comp.instructions:
+                op = _opcode(instr)
+                if op == "while":
+                    mb = re.search(r"body=%?([\w.\-]+)", instr)
+                    mc = re.search(r"condition=%?([\w.\-]+)", instr)
+                    trips = self.while_trip_count(mc.group(1)) if mc else 1
+                    if mb:
+                        walk(mb.group(1), mult * trips, True)
+                    continue
+                if op in _CALLERS:
+                    # fusions: count dots inside, not the scalar to_apply
+                    for sub in self.called_computations(instr):
+                        if op in ("fusion", "call", "conditional"):
+                            walk(sub, mult, False)
+                if op == "dot":
+                    flops += mult * self._dot_flops(comp, instr)
+                    if top_level:
+                        bytes_accessed += mult * self._io_bytes(comp, instr)
+                elif op == "convolution":
+                    flops += mult * self._conv_flops(comp, instr)
+                    if top_level:
+                        bytes_accessed += mult * self._io_bytes(comp, instr)
+                elif top_level and op in _BYTES_OPS:
+                    bytes_accessed += mult * self._io_bytes(comp, instr)
+                kind = op[:-6] if op.endswith("-start") else op
+                if kind in _COLLECTIVES:
+                    coll[kind]["count"] += mult
+                    coll[kind]["bytes"] += mult * _shape_bytes(
+                        _result_segment(instr))
+            stack.discard(comp_name)
+
+        if self.entry:
+            walk(self.entry, 1.0, True)
+        return {
+            "flops": flops,
+            "bytes_accessed": bytes_accessed,
+            "collectives": coll,
+            "collective_bytes": sum(v["bytes"] for v in coll.values()),
+        }
+
+    def _io_bytes(self, comp: Computation, instr: str) -> float:
+        total = _shape_bytes(_result_segment(instr))
+        for seg in self.operand_shapes(comp, instr):
+            total += _shape_bytes(seg)
+        return float(total)
+
+    def _dot_flops(self, comp: Computation, instr: str) -> float:
+        out = _shape_list(_result_segment(instr))
+        if not out:
+            return 0.0
+        out_elems = math.prod(out[0][1]) if out[0][1] else 1
+        contract = 1
+        mlhs = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr)
+        operands = self.operand_shapes(comp, instr)
+        if mlhs and operands:
+            lhs = _shape_list(operands[0])
+            if lhs:
+                dims = lhs[0][1]
+                for d in mlhs.group(1).split(","):
+                    if d and int(d) < len(dims):
+                        contract *= dims[int(d)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: Computation, instr: str) -> float:
+        out = _shape_list(_result_segment(instr))
+        if not out:
+            return 0.0
+        out_elems = math.prod(out[0][1]) if out[0][1] else 1
+        operands = self.operand_shapes(comp, instr)
+        if len(operands) >= 2:
+            k = _shape_list(operands[1])
+            if k and k[0][1]:
+                kernel = math.prod(k[0][1])
+                out_ch = out[0][1][-1] if out[0][1] else 1
+                return 2.0 * out_elems * max(kernel // max(out_ch, 1), 1)
+        return 2.0 * out_elems
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    return HloModule(text).analyze()

@@ -1,0 +1,86 @@
+"""pjit training launcher.
+
+On this CPU container it runs a reduced model on the degenerate 1x1 host
+mesh by default (--mesh host); on a real pod pass --mesh single/multi to
+use the production meshes with the same sharding rules the dry-run
+validates.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TRAIN_4K, get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import token_batches
+from repro.distributed import hints, sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.trainer import train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--mesh", choices=["host", "single", "multi"],
+                    default="host")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (real hardware only)")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full_size:
+        cfg = reduced(cfg)
+    if args.mesh == "host":
+        mesh = mesh_lib.make_host_mesh()
+    else:
+        mesh = mesh_lib.make_production_mesh(
+            multi_pod=(args.mesh == "multi"))
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=5,
+                          total_steps=args.steps)
+    fn = functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg)
+
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    opt = init_opt_state(params)
+    p_sh = shd.params_shardings(params, cfg, mesh)
+    in_sh = (p_sh, shd.opt_state_shardings(opt, p_sh, mesh),
+             shd.batch_shardings(
+                 {"tokens": jax.ShapeDtypeStruct(
+                     (args.batch, args.seq), jnp.int32)},
+                 shape, mesh, cfg),
+             shd.replicated(mesh))
+
+    data = token_batches(cfg, args.batch, args.seq, seed=0)
+    with mesh, hints.batch_axes_ctx(shd.batch_axes(mesh)):
+        step = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()
+                     if k == "tokens"}
+            t0 = time.time()
+            params, opt, metrics = step(params, opt, batch,
+                                        jax.random.fold_in(key, i))
+            loss = float(jax.device_get(metrics["loss"]))
+            if i % 5 == 0:
+                print(f"step {i:4d} loss {loss:.4f} "
+                      f"({(time.time()-t0)*1e3:.0f} ms)", flush=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

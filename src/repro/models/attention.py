@@ -1,0 +1,258 @@
+"""Chunked (flash-style) bidirectional attention in pure JAX.
+
+This is the XLA-path implementation used by every architecture; the Pallas
+kernel in ``repro.kernels.sparse_attention`` is the TPU-native version of
+the same math (same oracle).
+
+Access patterns:
+  * dense          — all queries vs all keys (train / prefill, full attn)
+  * banded         — contiguous queries vs a sliding window, with static
+                     block skipping so FLOPs are O(N * W), not O(N^2)
+  * gathered       — k selected query rows (SPA-Cache Phase 2) vs the full
+                     KV cache, optionally window-masked
+  * gathered+band  — stratified-selected queries vs a window; the per-block
+                     KV range starts at a DYNAMIC offset derived from the
+                     block's min position, bounded by a static ``q_span``
+                     (guaranteed by stratified selection — DESIGN.md §4)
+
+All paths share one online-softmax inner loop and support GQA,
+bidirectional windows, gemma2 attention-logit softcapping, and int8 KV
+caches (per-row scales are applied blockwise). Accumulation is f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _deq(xb: jax.Array, scale_b: Optional[jax.Array]) -> jax.Array:
+    x = xb.astype(jnp.float32)
+    if scale_b is not None:
+        x = x * scale_b.astype(jnp.float32)[..., None]
+    return x
+
+
+def _attend_one_block(q, kb, vb, kb_scale, vb_scale, qpos, kbpos, kv_valid,
+                      window, soft_cap, scale, carry):
+    """One online-softmax step.
+
+    q:    [B, bq, KVH, G, D] (f32);  kb, vb: [B, bk, KVH, D]
+    kb_scale/vb_scale: [B, bk, KVH] or None (int8 dequant scales)
+    qpos: [B, bq]; kbpos: [bk]; kv_valid: [bk] bool
+    carry: (m [B,bq,KVH,G], l [B,bq,KVH,G], acc [B,bq,KVH,G,D])
+    """
+    m_prev, l_prev, acc_prev = carry
+    kf = _deq(kb, kb_scale)
+    vf = _deq(vb, vb_scale)
+    scores = jnp.einsum("bqhgd,bkhd->bqhgk", q, kf) * scale
+    if soft_cap > 0.0:
+        scores = soft_cap * jnp.tanh(scores / soft_cap)
+    mask = kv_valid[None, None, :]                       # [1,1,bk]
+    if window > 0:
+        dist = jnp.abs(qpos[:, :, None] - kbpos[None, None, :])
+        mask = jnp.logical_and(mask, dist <= window)     # [B,bq,bk]
+    else:
+        mask = jnp.broadcast_to(mask, (qpos.shape[0], qpos.shape[1],
+                                       kbpos.shape[0]))
+    mask5 = mask[:, :, None, None, :]                    # [B,bq,1,1,bk]
+    scores = jnp.where(mask5, scores, NEG_INF)
+
+    m_blk = jnp.max(scores, axis=-1)                     # [B,bq,KVH,G]
+    m_new = jnp.maximum(m_prev, m_blk)
+    p = jnp.exp(scores - m_new[..., None])
+    p = jnp.where(mask5, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vf)
+    acc_new = alpha[..., None] * acc_prev + pv
+    return (m_new, l_new, acc_new)
+
+
+def _finalize(carry):
+    _, l, acc = carry
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return acc / l_safe[..., None]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    q_positions: Optional[jax.Array] = None,
+    window: int = 0,
+    soft_cap: float = 0.0,
+    block_q: int = 512,
+    block_k: int = 512,
+    banded: bool = False,
+    q_span: int = 0,
+) -> jax.Array:
+    """Bidirectional chunked attention.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, KVH, D] (any dtype; int8 with scales).
+    q_positions: [B, Sq] original positions of (possibly gathered) queries;
+      default arange. KV positions are always 0..Skv-1 (the full canvas).
+    window: 0 = full; >0 = |q_pos - kv_pos| <= window.
+    banded: static/dynamic block skipping (needs window > 0).
+    q_span: static bound on (max-min) position span inside any q block;
+      0 means "contiguous canvas" (span = block_q). Required for gathered
+      banded queries (use stratified selection to guarantee the bound).
+    Returns [B, Sq, H, D] in q.dtype.
+    """
+    from repro.distributed.hints import shard_hint
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    scale = 1.0 / (d ** 0.5)
+    out_dtype = q.dtype
+
+    # Attention is model-axis-local in the baseline scheme: materialize the
+    # row-parallel projection all-reduces HERE, once, instead of letting
+    # GSPMD sink partial-sum reductions into the kv-block loop.
+    # and gather a (sequence-sharded) KV cache ONCE per layer, not once
+    # per kv block inside the scan.
+    q = shard_hint(q, "batch", "keep", None, None)
+    k = shard_hint(k, "batch", None, None, None)
+    v = shard_hint(v, "batch", None, None, None)
+    if k_scale is not None:
+        k_scale = shard_hint(k_scale, "batch", None, None)
+        v_scale = shard_hint(v_scale, "batch", None, None)
+
+    contiguous = q_positions is None
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+    q_positions = q_positions.astype(jnp.int32)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    q = _pad_axis(q, 1, bq)
+    q_positions = _pad_axis(q_positions, 1, bq, value=2**30)
+    k = _pad_axis(k, 1, bk)
+    v = _pad_axis(v, 1, bk)
+    if k_scale is not None:
+        k_scale = _pad_axis(k_scale, 1, bk)
+        v_scale = _pad_axis(v_scale, 1, bk)
+    sq_p, skv_p = q.shape[1], k.shape[1]
+    n_qb, n_kb = sq_p // bq, skv_p // bk
+
+    qr = q.reshape(b, n_qb, bq, kvh, g, d).astype(jnp.float32)
+    qpos_r = q_positions.reshape(b, n_qb, bq)
+    kr = k.reshape(b, n_kb, bk, kvh, d)
+    vr = v.reshape(b, n_kb, bk, kvh, d)
+    ks_r = (k_scale.reshape(b, n_kb, bk, kvh)
+            if k_scale is not None else None)
+    vs_r = (v_scale.reshape(b, n_kb, bk, kvh)
+            if v_scale is not None else None)
+    kv_valid_full = (jnp.arange(skv_p) < skv).reshape(n_kb, bk)
+    kpos_full = jnp.arange(skv_p, dtype=jnp.int32).reshape(n_kb, bk)
+
+    def init_carry():
+        return (
+            jnp.full((b, bq, kvh, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, bq, kvh, g), jnp.float32),
+            jnp.zeros((b, bq, kvh, g, d), jnp.float32),
+        )
+
+    span = bq if contiguous else q_span
+    use_band = (banded and window > 0 and span > 0
+                and skv > (span + 2 * window + 2 * bk))
+
+    if use_band:
+        n_band = min((span + 2 * window) // bk + 2, n_kb)
+
+        def q_block_fn(q_i, qpos_i):
+            pmin = jnp.min(jnp.where(qpos_i >= 2**30, 0, qpos_i))
+            start = jnp.clip(pmin - window, 0, skv_p - n_band * bk) // bk
+
+            def kv_step(carry, off):
+                kb_idx = start + off
+                kb = jax.lax.dynamic_index_in_dim(kr, kb_idx, 1, False)
+                vb = jax.lax.dynamic_index_in_dim(vr, kb_idx, 1, False)
+                kbs = (jax.lax.dynamic_index_in_dim(ks_r, kb_idx, 1, False)
+                       if ks_r is not None else None)
+                vbs = (jax.lax.dynamic_index_in_dim(vs_r, kb_idx, 1, False)
+                       if vs_r is not None else None)
+                kv_val = jax.lax.dynamic_index_in_dim(
+                    kv_valid_full, kb_idx, 0, False)
+                kpos = jax.lax.dynamic_index_in_dim(
+                    kpos_full, kb_idx, 0, False)
+                carry = _attend_one_block(
+                    q_i, kb, vb, kbs, vbs, qpos_i, kpos, kv_val, window,
+                    soft_cap, scale, carry)
+                return carry, None
+
+            carry, _ = jax.lax.scan(kv_step, init_carry(),
+                                    jnp.arange(n_band))
+            return _finalize(carry)
+    else:
+        def q_block_fn(q_i, qpos_i):
+            def kv_step(carry, idx):
+                kb, vb, kv_val, kpos = (
+                    kr[:, idx], vr[:, idx], kv_valid_full[idx],
+                    kpos_full[idx])
+                kbs = ks_r[:, idx] if ks_r is not None else None
+                vbs = vs_r[:, idx] if vs_r is not None else None
+                carry = _attend_one_block(
+                    q_i, kb, vb, kbs, vbs, qpos_i, kpos, kv_val, window,
+                    soft_cap, scale, carry)
+                return carry, None
+
+            carry, _ = jax.lax.scan(kv_step, init_carry(),
+                                    jnp.arange(n_kb))
+            return _finalize(carry)
+
+    # Recompute each q-block in the backward pass (flash-attention memory
+    # profile): only block inputs are saved, not per-kv-step residuals.
+    q_block_ck = jax.checkpoint(q_block_fn, prevent_cse=False)
+
+    def scan_qb(_, i):
+        q_i = jax.lax.dynamic_index_in_dim(qr, i, 1, False)
+        qpos_i = jax.lax.dynamic_index_in_dim(qpos_r, i, 1, False)
+        return None, q_block_ck(q_i, qpos_i)
+
+    _, outs = jax.lax.scan(scan_qb, None, jnp.arange(n_qb))
+    out = jnp.moveaxis(outs, 0, 1)  # [B, n_qb, bq, KVH, G, D]
+    out = out.reshape(b, sq_p, h, d)[:, :sq]
+    return out.astype(out_dtype)
+
+
+def reference_attention(q, k, v, *, k_scale=None, v_scale=None,
+                        q_positions=None, window=0,
+                        soft_cap=0.0) -> jax.Array:
+    """O(Sq*Skv) dense oracle for tests."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+    kf = _deq(k, k_scale)
+    vf = _deq(v, v_scale)
+    qr = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bqhgk", qr, kf) / (d ** 0.5)
+    if soft_cap > 0.0:
+        scores = soft_cap * jnp.tanh(scores / soft_cap)
+    if window > 0:
+        dist = jnp.abs(q_positions[:, :, None] - jnp.arange(skv)[None, None])
+        mask = (dist <= window)[:, :, None, None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, vf)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Dense feed-forward blocks (gated and plain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_ffn_params(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = common.split_keys(key, 3)
+    if act in ("silu", "gelu"):  # gated (LLaMA / Gemma style)
+        return {
+            "w_gate": common.dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": common.dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": common.dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    # plain two-matrix MLP (hubert / classic transformer)
+    return {
+        "w_up": common.dense_init(ks[0], (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": common.dense_init(ks[1], (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_ffn(params, x: jax.Array, act: str) -> jax.Array:
+    """x: [..., d_model] -> [..., d_model]. The row-parallel w_down
+    all-reduce is pinned at the bf16 dot output (see qkv_project)."""
+    from repro.distributed.hints import shard_hint
+
+    def pin(y):
+        return shard_hint(y, *(["batch"] + ["keep"] * (y.ndim - 2)
+                               + [None]))
+
+    fn = common.act_fn(act)
+    if "w_gate" in params:
+        gate = fn(x @ params["w_gate"])
+        up = x @ params["w_up"]
+        return pin((gate * up) @ params["w_down"])
+    h = fn(x @ params["w_up"] + params["b_up"])
+    return pin(h @ params["w_down"] + params["b_down"])

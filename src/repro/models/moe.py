@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Dispatch is index-based (NOT the Mesh-TF one-hot einsum, whose
+[T, E, C] x [T, d] contraction costs ~top_k*cf times the expert FLOPs
+themselves at 4k tokens): each expert slot (e, c) records the token index
+that fills it; expert inputs are a gather, outputs a scatter-add weighted
+by the gate. FLOPs therefore scale with ACTIVE expert capacity only.
+
+Sharding: expert weights shard the E dim over "model" when divisible
+(expert parallelism — the all-to-all emerges from the slot gather /
+scatter under GSPMD); otherwise they fall back to per-expert tensor
+parallelism over d_ff.
+
+Router: softmax top-k with Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import common
+
+
+def init_moe_params(key, d_model: int, moe: MoEConfig, act: str, dtype):
+    ks = common.split_keys(key, 5)
+    e, dff = moe.n_experts, moe.d_ff_expert
+    params = {
+        "router": common.dense_init(ks[0], (d_model, e), dtype),
+        "w_gate": common.dense_init(ks[1], (e, d_model, dff), dtype),
+        "w_up": common.dense_init(ks[2], (e, d_model, dff), dtype),
+        "w_down": common.dense_init(ks[3], (e, dff, d_model), dtype),
+    }
+    if moe.n_shared_experts:
+        from repro.models import ffn
+        params["shared"] = ffn.init_ffn_params(
+            ks[4], d_model, moe.n_shared_experts * moe.d_ff_shared, act,
+            dtype)
+    return params
+
+
+def _capacity(n_tokens: int, moe: MoEConfig) -> int:
+    cap = int(moe.top_k * n_tokens * moe.capacity_factor / moe.n_experts)
+    return max(4, ((cap + 3) // 4) * 4)
+
+
+def _route_one(probs: jax.Array, k: int, e: int, cap: int):
+    """Per-sequence routing. probs: [T, E].
+
+    Returns (slots [E, cap] token index or T (sentinel),
+             slot_gates [E, cap] f32)."""
+    t = probs.shape[0]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # [T, k]
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    flat_expert = gate_idx.reshape(-1)                     # [T*k]
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.sum(onehot * pos, axis=-1)                  # [T*k]
+    ok = slot < cap
+    slot = jnp.minimum(slot, cap - 1)
+
+    slots = jnp.full((e, cap), t, jnp.int32)               # sentinel = T
+    slots = slots.at[flat_expert, slot].set(
+        jnp.where(ok, flat_token, t))
+    slot_gates = jnp.zeros((e, cap), jnp.float32)
+    slot_gates = slot_gates.at[flat_expert, slot].add(
+        jnp.where(ok, flat_gate, 0.0))
+    return slots, slot_gates, gate_idx
+
+
+def apply_moe(params, x: jax.Array, moe: MoEConfig, act: str
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, T, d] -> (out [B, T, d], aux_loss scalar)."""
+    b, t, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    cap = _capacity(t, moe)
+    fn = common.act_fn(act)
+
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                # [B,T,E]
+
+    slots, slot_gates, gate_idx = jax.vmap(
+        lambda p: _route_one(p, k, e, cap))(probs)         # [B,E,cap]
+
+    # Load-balance aux loss (Switch): E * mean_e f_e * p_e.
+    me = jnp.mean(probs, axis=1)                           # [B,E]
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e
+
+    # Gather expert inputs (sentinel row T reads zeros).
+    from repro.distributed.hints import shard_hint
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((b, 1, d), x.dtype)], axis=1)        # [B,T+1,d]
+    expert_in = jax.vmap(lambda xp, sl: xp[sl])(x_pad, slots)  # [B,E,C,d]
+    # expert parallelism: E over "model" (dropped when E % model != 0)
+    expert_in = shard_hint(expert_in, "batch", "model", None, None)
+
+    gate = fn(jnp.einsum("becd,edf->becf", expert_in, params["w_gate"]))
+    up = jnp.einsum("becd,edf->becf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("becf,efd->becd", gate * up, params["w_down"])
+    expert_out = shard_hint(expert_out, "batch", "model", None, None)
+    expert_out = expert_out * slot_gates[..., None].astype(expert_out.dtype)
+
+    # Scatter-add back to token positions.
+    def combine(eo, sl):
+        out = jnp.zeros((t + 1, d), eo.dtype)
+        return out.at[sl.reshape(-1)].add(
+            eo.reshape(-1, d))[:t]
+
+    out = jax.vmap(combine)(expert_out, slots)
+
+    if "shared" in params:
+        from repro.models import ffn
+        out = out + ffn.apply_ffn(params["shared"], x, act)
+    return out.astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,181 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked algorithm.
+
+Implements the blocked SSD recurrence from arXiv:2405.21060 §6: the
+sequence is split into chunks; within a chunk the dual quadratic
+(attention-like) form runs on the MXU; across chunks a small state
+[H, hd, d_state] is carried — linear in T, constant memory.
+
+DLM adaptation: the scan is causal, so for masked-diffusion denoising the
+block runs both directions and averages (bidirectional-SSM construction);
+see DESIGN.md. SPA-Cache sparse row updates are UNSOUND for this mixer
+(global sequential dependency) — mamba2 runs with identifier="none".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import common
+
+
+def init_ssd_params(key, cfg: ModelConfig, dtype):
+    ssm = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    ds = ssm.d_state
+    conv_dim = di + 2 * ds
+    ks = common.split_keys(key, 6)
+    return {
+        "w_in": common.dense_init(
+            ks[0], (d, 2 * di + 2 * ds + nh), dtype),
+        "conv_kernel": common.dense_init(ks[1], (ssm.d_conv, conv_dim),
+                                         dtype, scale=0.1),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "dt_bias": jnp.full((nh,), -3.0, dtype),   # softplus(-3) ~ 0.049
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm_weight": jnp.zeros((di,), dtype),
+        "w_out": common.dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _depthwise_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    w = kernel.shape[0]
+    pads = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + pads[:, i:i + x.shape[1]] * kernel[w - 1 - i]
+    return out
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, chunk: int) -> jax.Array:
+    """Chunked SSD core.
+
+    x:    [B, T, H, hd]   (SSM inputs per head)
+    dt:   [B, T, H]       (positive step sizes)
+    a:    [H]             (negative decay rates)
+    bmat: [B, T, ds]      (input projections, ngroups=1)
+    cmat: [B, T, ds]      (output projections)
+    Returns y: [B, T, H, hd].
+    """
+    b, t, h, hd = x.shape
+    ds = bmat.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    ncs = t // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la_steps = dtf * a[None, None, :]                     # [B,T,H], <= 0
+    xr = xf.reshape(b, ncs, chunk, h, hd)
+    dtr = dtf.reshape(b, ncs, chunk, h)
+    lar = la_steps.reshape(b, ncs, chunk, h)
+    br = bmat.astype(jnp.float32).reshape(b, ncs, chunk, ds)
+    cr = cmat.astype(jnp.float32).reshape(b, ncs, chunk, ds)
+
+    la = jnp.cumsum(lar, axis=2)                          # [B,L,cs,H]
+    la_end = la[:, :, -1, :]                              # [B,L,H]
+
+    # --- intra-chunk (quadratic, masked) ---
+    g = jnp.einsum("blis,bljs->blij", cr, br)             # [B,L,cs,cs]
+    decay = jnp.exp(la[:, :, :, None, :] - la[:, :, None, :, :])  # [B,L,i,j,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = g[..., None] * jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    m = m * dtr[:, :, None, :, :]                         # weight by dt_j
+    y_intra = jnp.einsum("blijh,bljhd->blihd", m, xr)
+
+    # --- chunk states ---
+    # S_c = sum_j exp(la_end - la_j) dt_j B_j (x) x_j  -> [B,L,H,hd,ds]
+    w = jnp.exp(la_end[:, :, None, :] - la) * dtr          # [B,L,cs,H]
+    s_chunk = jnp.einsum("bljh,bljhd,bljs->blhds", w, xr, br)
+
+    # --- inter-chunk recurrence over L ---
+    a_tot = jnp.exp(la_end)                               # [B,L,H]
+
+    def step(s_prev, inp):
+        a_c, s_c = inp
+        s_new = a_c[:, :, None, None] * s_prev + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, hd, ds), jnp.float32)
+    _, s_before = jax.lax.scan(
+        step, s0, (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)               # [B,L,H,hd,ds]
+
+    y_inter = jnp.einsum("blis,blhds->blihd", cr, s_before)
+    y_inter = y_inter * jnp.exp(la)[..., None]            # decay to pos i
+
+    y = (y_intra + y_inter).reshape(b, t, h, hd)
+    return y.astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat) -> jax.Array:
+    """O(T^2)-free sequential oracle (lax.scan per step) for tests."""
+    b, t, h, hd = x.shape
+    ds = bmat.shape[-1]
+
+    def step(s, inp):
+        xi, dti, bi, ci = inp       # [B,H,hd], [B,H], [B,ds], [B,ds]
+        a_t = jnp.exp(dti * a[None, :])                    # [B,H]
+        s = s * a_t[:, :, None, None] + jnp.einsum(
+            "bh,bhd,bs->bhds", dti, xi, bi)
+        y = jnp.einsum("bs,bhds->bhd", ci, s)
+        return s, y
+
+    s0 = jnp.zeros((b, h, hd, ds), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(cmat.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def _ssd_one_direction(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ssm = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    ds = ssm.d_state
+    b, t, _ = x.shape
+
+    proj = x @ params["w_in"]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * ds], axis=-1)
+    xbc = _depthwise_conv(xbc, params["conv_kernel"])
+    xbc = jax.nn.silu(xbc)
+    x_ssm, bmat, cmat = jnp.split(xbc, [di, di + ds], axis=-1)
+    x_ssm = x_ssm.reshape(b, t, nh, ssm.head_dim)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))           # [B,T,H]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))      # [H]
+
+    chunk = min(ssm.chunk_size, t)
+    pad = (-t) % chunk
+    if pad:
+        x_ssm = jnp.pad(x_ssm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    else:
+        bmat_p, cmat_p = bmat, cmat
+
+    y = ssd_scan(x_ssm, dt, a, bmat_p, cmat_p, chunk)[:, :t]
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] \
+        * x_ssm[:, :t]
+    y = y.reshape(b, t, di)
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, params["norm_weight"], cfg.norm_eps)
+    return y @ params["w_out"]
+
+
+def apply_ssd(params, x: jax.Array, cfg: ModelConfig,
+              bidirectional: bool = True) -> jax.Array:
+    """Full Mamba-2 block. x: [B,T,d] -> [B,T,d]."""
+    y = _ssd_one_direction(params, x, cfg)
+    if bidirectional:
+        y_rev = _ssd_one_direction(params, jnp.flip(x, axis=1), cfg)
+        y = 0.5 * (y + jnp.flip(y_rev, axis=1))
+    return y

@@ -1,0 +1,400 @@
+"""Generic DLM transformer assembled from a ModelConfig.
+
+Every assigned backbone (dense / MoE / SSM / hybrid / audio / VLM) is
+instantiated as a masked-diffusion denoiser: bidirectional sequence mixing,
+iterative-unmasking decoding (exactly how LLaDA reuses the Llama
+architecture). Parameters are stored STACKED per layer-kind
+([L_kind, ...] leading axis) so full-size models compile as a handful of
+``lax.scan`` loops (period-scan for hybrid patterns, DESIGN.md §4.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTENTION_KINDS, ATTN_GLOBAL, ATTN_LOCAL,
+                                ATTN_SWA, RGLRU, SSD, ModelConfig)
+from repro.models import common, ffn, moe, rglru, ssd
+from repro.models.attention import flash_attention
+
+Params = Dict[str, Any]
+
+
+def layer_window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window if kind in (ATTN_SWA, ATTN_LOCAL) else 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, kind: str, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = common.split_keys(key, 8)
+    p: Params = {"norm1": jnp.zeros((d,), dtype)}
+    if kind in ATTENTION_KINDS:
+        p["wq"] = common.dense_init(ks[0], (d, cfg.q_dim), dtype)
+        p["wk"] = common.dense_init(ks[1], (d, cfg.kv_dim), dtype)
+        p["wv"] = common.dense_init(ks[2], (d, cfg.kv_dim), dtype)
+        p["wo"] = common.dense_init(ks[3], (cfg.q_dim, d), dtype)
+        p["norm2"] = jnp.zeros((d,), dtype)
+        if cfg.moe is not None:
+            p["moe"] = moe.init_moe_params(ks[4], d, cfg.moe, cfg.act, dtype)
+        elif cfg.d_ff > 0:
+            p["ffn"] = ffn.init_ffn_params(ks[4], d, cfg.d_ff, cfg.act,
+                                           dtype)
+        if cfg.post_norms:
+            p["norm_post_attn"] = jnp.zeros((d,), dtype)
+            p["norm_post_ffn"] = jnp.zeros((d,), dtype)
+    elif kind == RGLRU:
+        p["mixer"] = rglru.init_rglru_params(ks[0], cfg, dtype)
+        p["norm2"] = jnp.zeros((d,), dtype)
+        p["ffn"] = ffn.init_ffn_params(ks[1], d, cfg.d_ff, cfg.act, dtype)
+        if cfg.post_norms:
+            p["norm_post_attn"] = jnp.zeros((d,), dtype)
+            p["norm_post_ffn"] = jnp.zeros((d,), dtype)
+    elif kind == SSD:
+        p["mixer"] = ssd.init_ssd_params(ks[0], cfg, dtype)
+        if cfg.d_ff > 0:
+            p["norm2"] = jnp.zeros((d,), dtype)
+            p["ffn"] = ffn.init_ffn_params(ks[1], d, cfg.d_ff, cfg.act,
+                                           dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = common.split_keys(key, 8)
+    params: Params = {
+        "embed": common.embed_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                                   dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.max_position:
+        params["pos_embed"] = common.embed_init(
+            keys[2], (cfg.max_position, cfg.d_model), dtype)
+    blocks: Dict[str, Params] = {}
+    for kind in sorted(set(cfg.layer_kinds)):
+        lk = cfg.n_layers_of_kind(kind)
+        kind_keys = jax.random.split(
+            jax.random.fold_in(keys[3], hash(kind) % (2 ** 31)), lk)
+        blocks[kind] = jax.vmap(
+            functools.partial(init_block_params, cfg, kind))(kind_keys)
+    params["blocks"] = blocks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / input handling (incl. audio / VLM stub frontends)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ModelConfig,
+                 inputs: Dict[str, jax.Array]) -> jax.Array:
+    """inputs: {"tokens": [B,T]} | {"frames": [B,T,d]} |
+    {"tokens": [B,T_text], "patches": [B,F,d]} -> h0 [B,N,d]."""
+    if cfg.frontend == "audio":
+        h = inputs["frames"].astype(jnp.dtype(cfg.param_dtype))
+    elif cfg.frontend == "vision":
+        text = jnp.take(params["embed"], inputs["tokens"], axis=0)
+        patches = inputs["patches"].astype(text.dtype)
+        h = jnp.concatenate([patches, text], axis=1)
+    else:
+        h = jnp.take(params["embed"], inputs["tokens"], axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if cfg.max_position:
+        n = h.shape[1]
+        h = h + params["pos_embed"][:n][None]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Block application (dense path)
+# ---------------------------------------------------------------------------
+
+def qkv_project(bp: Params, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array):
+    """x: [B,S,d] (already normed) -> q [B,S,H,hd], k/v [B,S,KVH,hd].
+
+    The row-parallel partial-sum all-reduce is pinned HERE, at the bf16
+    dot output — otherwise XLA fuses the f32 rope/norm converts first and
+    the AR moves 2x the bytes."""
+    from repro.distributed.hints import shard_hint
+    b, s, _ = x.shape
+
+    def proj(w):
+        return shard_hint(x @ w, "batch", "keep", None)
+
+    q = proj(bp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = proj(bp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = proj(bp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if not cfg.max_position:  # rope unless learned-absolute (encoder-only)
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_ffn_or_moe(bp: Params, x: jax.Array, cfg: ModelConfig
+                     ) -> Tuple[jax.Array, jax.Array]:
+    if "moe" in bp:
+        return moe.apply_moe(bp["moe"], x, cfg.moe, cfg.act)
+    if "ffn" in bp:
+        return ffn.apply_ffn(bp["ffn"], x, cfg.act), jnp.zeros(
+            (), jnp.float32)
+    return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+
+
+def _block_proxy(cfg: ModelConfig, bp: Params, proxy_mat, h_in, x,
+                 attn_out, h_out):
+    """Identifier vectors for prefill cache construction (see
+    core.identifiers). Computed in-block so prefill never materializes
+    raw layer inputs across layers.
+
+    Projection-based identifiers use h * (1 + norm_weight) WITHOUT the
+    rms division: cosine drift is invariant to per-row scale, and using
+    the same formula as the serve path makes unchanged rows score
+    cosine == 1.0 bit-exactly (stable top-k ties)."""
+    ident = cfg.spa.identifier
+    scaled = None
+    if ident in ("singular", "value", "query", "key"):
+        scaled = h_in * (1.0 + bp["norm1"]).astype(h_in.dtype)
+    if ident == "singular":
+        return scaled @ proxy_mat
+    if ident == "value":
+        return scaled @ bp["wv"]
+    if ident == "query":
+        return scaled @ bp["wq"]
+    if ident == "key":
+        return scaled @ bp["wk"]
+    if ident == "attn_in":
+        return x
+    if ident == "attn_out":
+        return attn_out
+    return None  # none / window
+
+
+def apply_block_dense(cfg: ModelConfig, kind: str, bp: Params,
+                      h: jax.Array, *, collect_cache: bool = False,
+                      proxy_mat: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array,
+                                 Optional[Dict[str, jax.Array]]]:
+    """One transformer block over the full sequence.
+
+    Returns (h_out, aux_loss, cache_entries or None). cache_entries has
+    raw (unquantized) k/v/h/proxy tensors; the caller quantizes via
+    ``cache.fill_from_prefill``.
+    """
+    b, n, _ = h.shape
+    aux = jnp.zeros((), jnp.float32)
+    entries: Optional[Dict[str, jax.Array]] = None
+
+    if kind in ATTENTION_KINDS:
+        x = common.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        positions = jnp.broadcast_to(jnp.arange(n)[None], (b, n))
+        q, k, v = qkv_project(bp, x, cfg, positions)
+        w = layer_window(cfg, kind)
+        attn = flash_attention(q, k, v, window=w,
+                               soft_cap=cfg.attn_softcap,
+                               banded=(w > 0))
+        from repro.distributed.hints import shard_hint
+        attn_out = shard_hint(attn.reshape(b, n, cfg.q_dim) @ bp["wo"],
+                              "batch", "keep", None)
+        if cfg.post_norms:
+            attn_out = common.rms_norm(attn_out, bp["norm_post_attn"],
+                                       cfg.norm_eps)
+        h_mid = h + attn_out
+        y = common.rms_norm(h_mid, bp["norm2"], cfg.norm_eps)
+        ffn_out, aux = apply_ffn_or_moe(bp, y, cfg)
+        if cfg.post_norms:
+            ffn_out = common.rms_norm(ffn_out, bp["norm_post_ffn"],
+                                      cfg.norm_eps)
+        h_out = h_mid + ffn_out
+        if collect_cache:
+            entries = {"k": k, "v": v, "h": h_out}
+            prox = _block_proxy(cfg, bp, proxy_mat, h, x, attn_out,
+                                h_out)
+            if prox is not None:
+                entries["proxy"] = prox
+    elif kind == RGLRU:
+        x = common.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        mix = rglru.apply_rglru(bp["mixer"], x, cfg)
+        if cfg.post_norms:
+            mix = common.rms_norm(mix, bp["norm_post_attn"], cfg.norm_eps)
+        h_mid = h + mix
+        y = common.rms_norm(h_mid, bp["norm2"], cfg.norm_eps)
+        ffn_out = ffn.apply_ffn(bp["ffn"], y, cfg.act)
+        if cfg.post_norms:
+            ffn_out = common.rms_norm(ffn_out, bp["norm_post_ffn"],
+                                      cfg.norm_eps)
+        h_out = h_mid + ffn_out
+    elif kind == SSD:
+        x = common.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        h_out = h + ssd.apply_ssd(bp["mixer"], x, cfg)
+        if cfg.d_ff > 0:
+            y = common.rms_norm(h_out, bp["norm2"], cfg.norm_eps)
+            h_out = h_out + ffn.apply_ffn(bp["ffn"], y, cfg.act)
+    else:
+        raise ValueError(kind)
+    return h_out, aux, entries
+
+
+# ---------------------------------------------------------------------------
+# Layer iteration plan (period scan for hybrid patterns)
+# ---------------------------------------------------------------------------
+
+def period_plan(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, List[int]]:
+    """Returns (period_kinds, n_full_periods, remainder_layer_indices)."""
+    period = cfg.layer_pattern
+    plen = len(period)
+    n_full = cfg.n_layers // plen
+    remainder = list(range(n_full * plen, cfg.n_layers))
+    return period, n_full, remainder
+
+
+def _slice_kind_stacks(cfg: ModelConfig, blocks: Params, n_full: int):
+    """Reshape each kind's stack [Lk, ...] -> [n_full, per_period, ...]
+    over the layers covered by full periods."""
+    period = cfg.layer_pattern
+    per_kind_count = {k: period.count(k) for k in set(period)}
+    out = {}
+    for kind, cnt in per_kind_count.items():
+        used = n_full * cnt
+        out[kind] = jax.tree.map(
+            lambda a: a[:used].reshape((n_full, cnt) + a.shape[1:]),
+            blocks[kind])
+    return out
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
+                   *, collect_cache: bool = False, spa_proxies=None
+                   ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Run all blocks. Returns (h, total_aux, caches).
+
+    caches (when collect_cache): {kind: {"k": [Lk,B,N,KVH,HD], ...}} with
+    raw tensors in layer order within each kind. spa_proxies
+    ({kind: [Lk, d, r]}) are needed only when collecting with the
+    singular identifier.
+    """
+    period, n_full, remainder = period_plan(cfg)
+    blocks = params["blocks"]
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict[str, List] = {k: [] for k in set(period)
+                               if k in ATTENTION_KINDS}
+
+    use_scan = cfg.scan_layers and n_full >= 2
+
+    def _prox_slice(kind, idx_in_kind):
+        if spa_proxies is None or kind not in (spa_proxies or {}):
+            return None
+        return spa_proxies[kind][idx_in_kind]
+
+    if use_scan:
+        stacks = _slice_kind_stacks(cfg, blocks, n_full)
+        if spa_proxies is not None and collect_cache:
+            per_kind_count = {k: period.count(k) for k in set(period)}
+            prox_stacks = {
+                k: spa_proxies[k][: n_full * c].reshape(
+                    (n_full, c) + spa_proxies[k].shape[1:])
+                for k, c in per_kind_count.items() if k in spa_proxies}
+            stacks = (stacks, prox_stacks)
+        else:
+            stacks = (stacks, None)
+
+        def body(carry, xs):
+            period_slice, prox_slice = xs
+            h_c, aux_c = carry
+            used = {k: 0 for k in period_slice}
+            ys: Dict[str, List] = {}
+            for kind in period:
+                bp = jax.tree.map(lambda a: a[used[kind]],
+                                  period_slice[kind])
+                pm = (prox_slice[kind][used[kind]]
+                      if prox_slice and kind in prox_slice else None)
+                used[kind] += 1
+                h_c, aux, entries = apply_block_dense(
+                    cfg, kind, bp, h_c, collect_cache=collect_cache,
+                    proxy_mat=pm)
+                aux_c = aux_c + aux
+                if collect_cache and entries is not None:
+                    ys.setdefault(kind, []).append(entries)
+            ys_out = {k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+                      for k, v in ys.items()} if collect_cache else None
+            return (h_c, aux_c), ys_out
+
+        if cfg.remat and not collect_cache:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux_total), scan_ys = jax.lax.scan(body, (h, aux_total),
+                                               stacks)
+        if collect_cache and scan_ys:
+            for kind, entries in scan_ys.items():
+                # [n_full, per_period, ...] -> list of [B, N, ...] slices
+                merged = jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), entries)
+                lk = jax.tree.leaves(merged)[0].shape[0]
+                caches[kind].extend(
+                    jax.tree.map(lambda a, i=i: a[i], merged)
+                    for i in range(lk))
+    else:
+        for l in range(n_full * len(period)):
+            kind = cfg.kind_of_layer(l)
+            bp = jax.tree.map(lambda a: a[cfg.kind_index(l)], blocks[kind])
+            pm = _prox_slice(kind, cfg.kind_index(l))
+            if cfg.remat and not collect_cache:
+                blk = jax.checkpoint(
+                    functools.partial(apply_block_dense,
+                                      collect_cache=False),
+                    static_argnums=(0, 1), prevent_cse=False)
+                h, aux, entries = blk(cfg, kind, bp, h)
+            else:
+                h, aux, entries = apply_block_dense(
+                    cfg, kind, bp, h, collect_cache=collect_cache,
+                    proxy_mat=pm)
+            aux_total = aux_total + aux
+            if collect_cache and entries is not None:
+                caches[kind].append(entries)
+
+    for l in remainder:
+        kind = cfg.kind_of_layer(l)
+        bp = jax.tree.map(lambda a: a[cfg.kind_index(l)], blocks[kind])
+        h, aux, entries = apply_block_dense(
+            cfg, kind, bp, h, collect_cache=collect_cache,
+            proxy_mat=_prox_slice(kind, cfg.kind_index(l)))
+        aux_total = aux_total + aux
+        if collect_cache and entries is not None and kind in caches:
+            caches[kind].append(entries)
+
+    cache_out = None
+    if collect_cache:
+        cache_out = {
+            kind: jax.tree.map(lambda *xs: jnp.stack(xs), *entries_list)
+            for kind, entries_list in caches.items() if entries_list
+        }
+    return h, aux_total, cache_out
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig,
+                       h: jax.Array) -> jax.Array:
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    logits = (h @ table).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = common.softcap(logits, cfg.logit_softcap)
+    return logits
+
+
+def forward_logits(params: Params, cfg: ModelConfig,
+                   inputs: Dict[str, jax.Array]
+                   ) -> Tuple[jax.Array, jax.Array]:
+    h = embed_inputs(params, cfg, inputs)
+    h, aux, _ = forward_hidden(params, cfg, h)
+    return logits_from_hidden(params, cfg, h), aux

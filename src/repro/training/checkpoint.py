@@ -1,0 +1,76 @@
+"""Flat-npz pytree checkpointing (no external deps)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+
+    def fix(node):
+        if isinstance(node, dict) and node and all(
+                k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, tree, metadata: Dict[str, Any] | None = None
+                    ) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 is not npz-native; view as uint16 with a dtype tag.
+    tagged = {}
+    dtypes = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            tagged[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            tagged[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(path, __dtypes__=json.dumps(dtypes),
+             __meta__=json.dumps(metadata or {}), **tagged)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, Dict[str, Any]]:
+    with np.load(path, allow_pickle=False) as z:
+        dtypes = json.loads(str(z["__dtypes__"]))
+        meta = json.loads(str(z["__meta__"]))
+        flat = {}
+        for k in z.files:
+            if k.startswith("__"):
+                continue
+            v = z[k]
+            if dtypes.get(k) == "bfloat16":
+                v = v.view(jnp.bfloat16)
+            flat[k] = v
+    return _unflatten(flat), meta

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own flags
+# in a separate process). Keep XLA quiet and single-threaded-friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import get_arch, reduced  # noqa: E402
+from repro.models import transformer  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return reduced(get_arch("internlm2-1.8b"), n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_size=128)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg, rng_key):
+    return transformer.init_params(tiny_cfg, rng_key)
+
+
+def make_tokens(key, cfg, batch=2, n=32):
+    return jax.random.randint(key, (batch, n), 0, cfg.vocab_size - 1)

@@ -1,0 +1,108 @@
+"""Config registry invariants for every assigned architecture."""
+import numpy as np
+import pytest
+
+from repro.configs import (ARCHS, ASSIGNED, SHAPES, SUBQUADRATIC,
+                           get_arch, reduced, supports_shape)
+from repro.configs.base import ATTENTION_KINDS
+
+# Published parameter counts (approximate, ±25% tolerance for tokenizer /
+# head-dim conventions).
+EXPECTED_PARAMS = {
+    "gemma2-2b": 2.6e9,
+    "deepseek-67b": 67e9,
+    "recurrentgemma-9b": 9e9,
+    "hubert-xlarge": 1.0e9,
+    "internlm2-1.8b": 1.9e9,
+    "internvl2-76b": 70e9,          # language backbone only
+    "qwen3-moe-235b-a22b": 235e9,
+    "mamba2-370m": 0.37e9,
+    "mixtral-8x22b": 141e9,
+    "h2o-danube-3-4b": 4e9,
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_exact_dims_match_assignment(arch):
+    cfg = get_arch(arch)
+    table = {
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "mamba2-370m": (48, 1024, None, None, 0, 50280),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    }[arch]
+    L, d, h, kv, dff, vocab = table
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.vocab_size == vocab
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == dff or (cfg.moe and cfg.moe.d_ff_expert == dff)
+    assert cfg.source  # citation present
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_PARAMS))
+def test_param_count_plausible(arch):
+    cfg = get_arch(arch)
+    got = cfg.param_count()
+    want = EXPECTED_PARAMS[arch]
+    assert 0.6 * want < got < 1.5 * want, (arch, got, want)
+
+
+def test_moe_active_params():
+    cfg = get_arch("qwen3-moe-235b-a22b")
+    active = cfg.active_param_count()
+    assert 12e9 < active < 35e9          # "a22b"
+    assert active < cfg.param_count() / 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_layer_kind_indexing(arch):
+    cfg = get_arch(arch)
+    counts = {}
+    for l in range(cfg.n_layers):
+        kind = cfg.kind_of_layer(l)
+        assert cfg.kind_index(l) == counts.get(kind, 0)
+        counts[kind] = counts.get(kind, 0) + 1
+    for kind, c in counts.items():
+        assert cfg.n_layers_of_kind(kind) == c
+
+
+def test_shape_support_matrix():
+    total_live = 0
+    for arch in ASSIGNED:
+        cfg = get_arch(arch)
+        for s in SHAPES.values():
+            if supports_shape(cfg, s):
+                total_live += 1
+    assert total_live == 33              # 40 pairs - 7 documented skips
+    assert not supports_shape(get_arch("hubert-xlarge"),
+                              SHAPES["decode_32k"])
+    assert not supports_shape(get_arch("deepseek-67b"),
+                              SHAPES["long_500k"])
+    assert supports_shape(get_arch("mamba2-370m"), SHAPES["long_500k"])
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_constraints(arch):
+    cfg = reduced(get_arch(arch))
+    assert cfg.n_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    assert cfg.param_dtype == "float32"
+
+
+def test_mamba2_spa_inapplicable():
+    assert get_arch("mamba2-370m").spa.identifier == "none"
+
+
+def test_paper_models_present():
+    assert "llada-8b" in ARCHS and "dream-7b" in ARCHS
+    llada = ARCHS["llada-8b"]
+    assert llada.spa.layer_peak == 24 and llada.spa.rho_peak == 0.25

@@ -1,0 +1,65 @@
+"""Trip-count-aware HLO cost parser sanity checks on real jitted HLO."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloModule, analyze_hlo
+
+
+def compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    txt = compiled_text(lambda x, y: x @ y, a, b)
+    res = analyze_hlo(txt)
+    expect = 2 * 128 * 256 * 64
+    assert res["flops"] == pytest.approx(expect, rel=0.01)
+
+
+def test_scan_multiplies_trip_count():
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def fn(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=17)
+        return h
+
+    res = analyze_hlo(compiled_text(fn, w, x))
+    expect = 17 * 2 * 8 * 64 * 64
+    assert res["flops"] == pytest.approx(expect, rel=0.05)
+
+
+def test_nested_scans_multiply():
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+    def fn(w, x):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    res = analyze_hlo(compiled_text(fn, w, x))
+    expect = 5 * 3 * 2 * 4 * 32 * 32
+    assert res["flops"] == pytest.approx(expect, rel=0.05)
+
+
+def test_no_collectives_on_single_device():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    res = analyze_hlo(compiled_text(lambda x: x @ x, a))
+    assert res["collective_bytes"] == 0
+
+
+def test_bytes_positive():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    res = analyze_hlo(compiled_text(lambda x: jnp.tanh(x) + 1, a))
+    assert res["bytes_accessed"] >= 64 * 64 * 4

@@ -1,0 +1,51 @@
+"""Identifier scoring unit tests (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import identifiers
+
+
+def test_proxy_project_shapes():
+    h = jnp.ones((2, 8, 16))
+    w = jnp.ones((16, 4))
+    assert identifiers.proxy_project(h, "singular",
+                                     proxy_mat=w).shape == (2, 8, 4)
+    assert identifiers.proxy_project(h, "value",
+                                     w_value=w).shape == (2, 8, 4)
+    assert identifiers.proxy_project(h, "attn_in").shape == (2, 8, 16)
+
+
+def test_drift_scores_detect_change():
+    rng = np.random.default_rng(0)
+    p_old = jnp.asarray(rng.standard_normal((1, 8, 16)).astype(np.float32))
+    p_new = p_old.at[:, 3].add(10.0)
+    scores = identifiers.drift_scores(p_new, p_old)
+    assert scores.shape == (1, 8)
+    # position 3 has the lowest similarity
+    assert int(jnp.argmin(scores[0])) == 3
+    np.testing.assert_allclose(np.asarray(scores[0, :3]), 1.0, atol=1e-5)
+
+
+def test_drift_scores_scale_invariant():
+    rng = np.random.default_rng(1)
+    p = jnp.asarray(rng.standard_normal((1, 4, 8)).astype(np.float32))
+    scores = identifiers.drift_scores(p * 3.0, p)
+    np.testing.assert_allclose(np.asarray(scores), 1.0, atol=1e-5)
+
+
+def test_locality_scores():
+    committed = jnp.asarray([[5, -1, -1]])
+    scores = identifiers.locality_scores(16, committed, window=4)
+    assert scores.shape == (1, 16)
+    s = np.asarray(scores[0])
+    assert s[5] == 0.0                       # at the commit
+    assert s[5] < s[7] < s[12]               # monotone in distance
+    # far positions saturate at 1 (keep cached)
+    assert s[15] == 1.0
+
+
+def test_locality_all_unused():
+    committed = jnp.full((2, 4), -1, jnp.int32)
+    scores = identifiers.locality_scores(8, committed, window=4)
+    assert float(jnp.min(scores)) == 1.0     # nothing recently committed

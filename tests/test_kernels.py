@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.proxy_score import proxy_score
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.scatter_update import scatter_update
+from repro.kernels.sparse_attention import sparse_attention
+
+
+@pytest.mark.parametrize("n,d,r", [(64, 32, 8), (200, 96, 32),
+                                   (33, 128, 16), (8, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_proxy_score(n, d, r, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (n, d), dtype)
+    w = jax.random.normal(ks[1], (d, r), dtype)
+    pc = jax.random.normal(ks[2], (n, r), dtype)
+    s, p = proxy_score(x, w, pc, interpret=True)
+    s_r, p_r = ref.proxy_score_ref(x, w, pc)
+    tol = 1e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(s, s_r, rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(p, np.float32),
+                               np.asarray(p_r, np.float32),
+                               rtol=tol * 10, atol=tol * 10)
+
+
+@pytest.mark.parametrize("kq,n,h,kvh,hd", [
+    (16, 64, 4, 4, 16),      # MHA
+    (50, 300, 4, 2, 32),     # GQA, ragged
+    (8, 128, 8, 1, 16),      # MQA
+])
+def test_sparse_attention_shapes(kq, n, h, kvh, hd):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (kq, h, hd))
+    k = jax.random.normal(ks[1], (n, kvh, hd))
+    v = jax.random.normal(ks[2], (n, kvh, hd))
+    qp = jnp.sort(jax.random.randint(ks[3], (kq,), 0, n))
+    out = sparse_attention(q, k, v, qp, interpret=True, block_q=16,
+                           block_k=32)
+    out_ref = ref.sparse_attention_ref(q, k, v, qp)
+    np.testing.assert_allclose(out, out_ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window,soft_cap", [(0, 0.0), (32, 0.0),
+                                             (16, 30.0), (0, 50.0)])
+def test_sparse_attention_features(window, soft_cap):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (24, 4, 16))
+    k = jax.random.normal(ks[1], (160, 2, 16))
+    v = jax.random.normal(ks[2], (160, 2, 16))
+    qp = jnp.sort(jax.random.randint(ks[3], (24,), 0, 160))
+    out = sparse_attention(q, k, v, qp, window=window,
+                           soft_cap=soft_cap, interpret=True,
+                           block_q=8, block_k=32)
+    out_ref = ref.sparse_attention_ref(q, k, v, qp, window=window,
+                                       soft_cap=soft_cap)
+    np.testing.assert_allclose(out, out_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_sparse_attention_int8():
+    from repro.core.cache import quantize_rows
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (16, 2, 16))
+    k = jax.random.normal(ks[1], (96, 2, 16))
+    v = jax.random.normal(ks[2], (96, 2, 16))
+    qp = jnp.sort(jax.random.randint(ks[3], (16,), 0, 96))
+    kq, kscale = quantize_rows(k)
+    vq, vscale = quantize_rows(v)
+    out = sparse_attention(kq * 0 + q if False else q, kq, vq, qp,
+                           k_scale=kscale, v_scale=vscale,
+                           interpret=True, block_q=8, block_k=32)
+    out_ref = ref.sparse_attention_ref(q, kq, vq, qp, k_scale=kscale,
+                                       v_scale=vscale)
+    np.testing.assert_allclose(out, out_ref, rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 16, 8), (128, 48, 40),
+                                   (32, 8, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_scatter_update(n, d, k, dtype):
+    rng = np.random.default_rng(0)
+    if dtype == jnp.int8:
+        cache = jnp.asarray(rng.integers(-100, 100, (n, d)), jnp.int8)
+        rows = jnp.asarray(rng.integers(-100, 100, (k, d)), jnp.int8)
+    else:
+        cache = jax.random.normal(jax.random.PRNGKey(0), (n, d), dtype)
+        rows = jax.random.normal(jax.random.PRNGKey(1), (k, d), dtype)
+    idx = jnp.asarray(rng.choice(n, k, replace=False), jnp.int32)
+    out = scatter_update(cache, idx, rows, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.scatter_update_ref(
+            cache, idx, rows)))
+
+
+@pytest.mark.parametrize("n,d", [(64, 32), (300, 64), (128, 8)])
+def test_rglru_scan(n, d):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (n, d)))
+    b = jax.random.normal(ks[1], (n, d)) * 0.1
+    out = rglru_scan(a, b, interpret=True, chunk=32, block_d=32)
+    out_ref = ref.rglru_scan_ref(a, b)
+    np.testing.assert_allclose(out, out_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,91 @@
+"""Per-arch reduced smoke tests (required deliverable f): every assigned
+architecture instantiates a REDUCED same-family variant (2 layers,
+d_model <= 512, <= 4 experts) and runs one forward + one train step on
+CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_arch, reduced
+from repro.models import transformer
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.trainer import train_step
+
+
+def make_inputs(cfg, key, batch=2, n=32):
+    if cfg.frontend == "audio":
+        return {
+            "frames": jax.random.normal(key, (batch, n, cfg.d_model),
+                                        jnp.float32) * 0.02,
+            "targets": jax.random.randint(key, (batch, n), 0,
+                                          cfg.vocab_size),
+        }
+    if cfg.frontend == "vision":
+        f = max(cfg.frontend_tokens, 4)
+        return {
+            "tokens": jax.random.randint(key, (batch, n - f), 0,
+                                         cfg.vocab_size - 1),
+            "patches": jax.random.normal(key, (batch, f, cfg.d_model),
+                                         jnp.float32) * 0.02,
+        }
+    return {"tokens": jax.random.randint(key, (batch, n), 0,
+                                         cfg.vocab_size - 1)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_forward(arch):
+    cfg = reduced(get_arch(arch))
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    inputs = make_inputs(cfg, key)
+    logits, aux = transformer.forward_logits(params, cfg, inputs)
+    n_expected = 32
+    assert logits.shape[0] == 2
+    assert logits.shape[1] == n_expected
+    assert logits.shape[2] == cfg.vocab_size
+    assert not bool(jnp.isnan(logits).any()), arch
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_train_step(arch):
+    cfg = reduced(get_arch(arch))
+    key = jax.random.PRNGKey(1)
+    params = transformer.init_params(cfg, key)
+    opt = init_opt_state(params)
+    batch = make_inputs(cfg, key)
+    if cfg.frontend is None:
+        batch = {"tokens": batch["tokens"]}
+    new_params, new_opt, metrics = train_step(
+        params, opt, batch, key, cfg=cfg, opt_cfg=AdamWConfig(lr=1e-3))
+    assert np.isfinite(float(metrics["loss"])), arch
+    # grad_norm is finite and positive, OR the nonfinite-skip guard fired
+    gn = float(metrics["grad_norm"])
+    assert (np.isfinite(gn) and gn > 0) or \
+        float(metrics["nonfinite_grads"]) == 1.0
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda p, q: float(jnp.abs(
+            p.astype(jnp.float32) - q.astype(jnp.float32)).sum()),
+            params, new_params))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "recurrentgemma-9b",
+                                  "mamba2-370m", "mixtral-8x22b"])
+def test_reduced_decode_step(arch):
+    """Non-dense families also serve: one SPA/dense refinement step."""
+    from repro.dlm import decoding
+    cfg = reduced(get_arch(arch))
+    key = jax.random.PRNGKey(2)
+    params = transformer.init_params(cfg, key)
+    prompt = jax.random.randint(key, (2, 8), 0, cfg.vocab_size - 1)
+    toks, info = decoding.decode(params, cfg, prompt, gen_len=4,
+                                 max_steps=6)
+    assert toks.shape == (2, 12)
+    assert int((toks == cfg.mask_id).sum()) == 0 or info["steps"] == 6
