@@ -18,9 +18,7 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import ModelConfig, SPAConfig
-from repro.core import spa_layer
 from repro.data.synthetic import token_batches
-from repro.dlm import decoding
 from repro.models import transformer
 from repro.training.optimizer import AdamWConfig
 from repro.training.trainer import Trainer
@@ -48,34 +46,30 @@ def with_spa(cfg: ModelConfig, **kw) -> ModelConfig:
     return dataclasses.replace(cfg, spa=SPAConfig(**kw))
 
 
-def time_decode(cfg, params, prompt, gen_len, settings=None, reps=1
-                ) -> Dict[str, float]:
-    """Returns tokens/s and time-to-first-step for a decode run."""
-    proxies = spa_layer.build_spa_proxies(params, cfg)
+def time_decode(cfg, params, prompt, gen_len, settings=None, reps=1,
+                strategy=None) -> Dict[str, float]:
+    """Returns tokens/s and time-to-first-step for a decode run.
+
+    ``strategy`` (a ``CacheStrategy``) overrides ``cfg.spa`` at call
+    time — the benchmarks compare caching policies on ONE ModelConfig."""
+    from repro.dlm.session import DecodeSession
+    sess = DecodeSession(params, cfg, strategy=strategy,
+                         settings=settings)
     t0 = time.perf_counter()
-    state = decoding.init_decode_state(cfg, params, prompt, gen_len,
-                                       proxies,
-                                       use_cache=cfg.spa.identifier
-                                       != "none")
-    settings = settings or decoding.DecodeSettings()
-    import functools
-    step_fn = jax.jit(functools.partial(
-        decoding.serve_step, params, cfg, settings=settings,
-        spa_proxies=proxies))
-    state, _ = step_fn(state)          # compile + first step
-    jax.block_until_ready(state.tokens)
+    sess.prefill(prompt, gen_len)
+    sess.step()                        # compile + first step
+    jax.block_until_ready(sess.tokens)
     ttft = time.perf_counter() - t0
 
     n_steps = 0
     t0 = time.perf_counter()
-    while int(jax.device_get(jnp.max(state.n_masked))) > 0 \
-            and n_steps < gen_len * 2:
-        state, _ = step_fn(state)
+    while not sess.done and n_steps < gen_len * 2:
+        sess.step()
         n_steps += 1
-    jax.block_until_ready(state.tokens)
+    jax.block_until_ready(sess.tokens)
     dt = time.perf_counter() - t0
     committed = gen_len * prompt.shape[0] - int(
-        jnp.sum(jnp.maximum(state.n_masked, 0)))
+        jnp.sum(jnp.maximum(sess.state.n_masked, 0)))
     return {
         "tps": committed / max(dt, 1e-9),
         "ttft_ms": ttft * 1e3,

@@ -1,45 +1,47 @@
 """Paper Table 2/8: main speedup comparison — vanilla vs dLLM-Cache
 (value proxy, uniform rho) vs Fast-dLLM-style parallel decoding vs
-SPA-Cache (singular proxy + adaptive budget)."""
+SPA-Cache (singular proxy + adaptive budget).
+
+All methods share ONE ModelConfig; the caching policy is a call-time
+``CacheStrategy`` (what the model is vs how it is cached)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core.strategy import NoCache, SPACache, ValueProxyCache
 from repro.dlm import decoding
 
 
 def run(quick: bool = False):
-    cfg0 = common.bench_model()
-    params = common.trained_bench_model(cfg0, steps=10 if quick else 30)
+    cfg = common.bench_model()
+    params = common.trained_bench_model(cfg, steps=10 if quick else 30)
     prompt = jnp.asarray(np.random.default_rng(1).integers(
-        0, cfg0.vocab_size - 1, (2, 16)), jnp.int32)
+        0, cfg.vocab_size - 1, (2, 16)), jnp.int32)
     gen_len = 8 if quick else 24
 
     methods = {
-        "baseline": (common.with_spa(cfg0, identifier="none"),
-                     decoding.DecodeSettings()),
-        "dllm_cache": (common.with_spa(
-            cfg0, identifier="value", schedule="uniform", rho_peak=0.25,
-            refresh_interval=8), decoding.DecodeSettings()),
-        "fast_dllm": (common.with_spa(cfg0, identifier="none"),
+        "baseline": (NoCache(), decoding.DecodeSettings()),
+        "dllm_cache": (ValueProxyCache(rho=0.25, refresh_interval=8),
+                       decoding.DecodeSettings()),
+        "fast_dllm": (NoCache(),
                       decoding.DecodeSettings(parallel_threshold=0.05,
                                               max_parallel=4)),
-        "spa_cache": (common.with_spa(
-            cfg0, identifier="singular", rank=16, schedule="adaptive",
-            rho_peak=0.25, rho_first=0.03, rho_last=0.13),
-            decoding.DecodeSettings()),
+        "spa_cache": (SPACache(rank=16, schedule="adaptive",
+                               rho_peak=0.25, rho_first=0.03,
+                               rho_last=0.13),
+                      decoding.DecodeSettings()),
     }
     base_tps = None
     rows = []
-    ref_tokens, _ = decoding.decode(
-        params, methods["baseline"][0], prompt, gen_len)
-    for name, (cfg, settings) in methods.items():
+    ref_tokens, _ = decoding.decode(params, cfg, prompt, gen_len,
+                                    strategy=NoCache())
+    for name, (strategy, settings) in methods.items():
         stats = common.time_decode(cfg, params, prompt, gen_len,
-                                   settings=settings)
+                                   settings=settings, strategy=strategy)
         toks, _ = decoding.decode(params, cfg, prompt, gen_len,
-                                  settings=settings)
+                                  settings=settings, strategy=strategy)
         agree = float((np.asarray(toks) == np.asarray(ref_tokens)).mean())
         if name == "baseline":
             base_tps = stats["tps"]

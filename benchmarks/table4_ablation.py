@@ -1,5 +1,7 @@
 """Paper Table 4: component ablation — value proxy vs singular proxy,
-uniform vs adaptive budget (incl. the uniform-16% control)."""
+uniform vs adaptive budget (incl. the uniform-16% control).
+
+One ModelConfig, five call-time ``CacheStrategy`` variants."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,39 +9,39 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import budget
+from repro.core.strategy import NoCache, SPACache, ValueProxyCache
 from repro.dlm import decoding
 
 
 def run(quick: bool = False):
-    cfg0 = common.bench_model()
-    params = common.trained_bench_model(cfg0, steps=10 if quick else 30)
+    cfg = common.bench_model()
+    params = common.trained_bench_model(cfg, steps=10 if quick else 30)
     prompt = jnp.asarray(np.random.default_rng(3).integers(
-        0, cfg0.vocab_size - 1, (2, 16)), jnp.int32)
+        0, cfg.vocab_size - 1, (2, 16)), jnp.int32)
     gen_len = 8 if quick else 24
 
     variants = [
-        ("none_rho100", common.with_spa(cfg0, identifier="none")),
-        ("value_uniform25", common.with_spa(
-            cfg0, identifier="value", schedule="uniform", rho_peak=0.25)),
-        ("singular_uniform25", common.with_spa(
-            cfg0, identifier="singular", rank=16, schedule="uniform",
-            rho_peak=0.25)),
-        ("singular_adaptive", common.with_spa(
-            cfg0, identifier="singular", rank=16, schedule="adaptive",
-            rho_peak=0.25, rho_first=0.03, rho_last=0.13)),
-        ("singular_uniform16", common.with_spa(
-            cfg0, identifier="singular", rank=16, schedule="uniform",
-            rho_peak=0.16)),
+        ("none_rho100", NoCache()),
+        ("value_uniform25", ValueProxyCache(rho=0.25)),
+        ("singular_uniform25", SPACache(rank=16, schedule="uniform",
+                                        rho_peak=0.25)),
+        ("singular_adaptive", SPACache(rank=16, schedule="adaptive",
+                                       rho_peak=0.25, rho_first=0.03,
+                                       rho_last=0.13)),
+        ("singular_uniform16", SPACache(rank=16, schedule="uniform",
+                                        rho_peak=0.16)),
     ]
-    ref_tokens, _ = decoding.decode(params, variants[0][1], prompt,
-                                    gen_len)
+    ref_tokens, _ = decoding.decode(params, cfg, prompt, gen_len,
+                                    strategy=variants[0][1])
     rows = []
-    for name, cfg in variants:
-        stats = common.time_decode(cfg, params, prompt, gen_len)
-        toks, _ = decoding.decode(params, cfg, prompt, gen_len)
+    for name, strategy in variants:
+        stats = common.time_decode(cfg, params, prompt, gen_len,
+                                   strategy=strategy)
+        toks, _ = decoding.decode(params, cfg, prompt, gen_len,
+                                  strategy=strategy)
         agree = float((np.asarray(toks) == np.asarray(ref_tokens)).mean())
-        avg_rho = budget.average_rho(cfg.spa, cfg.n_layers) \
-            if cfg.spa.identifier != "none" else 1.0
+        avg_rho = (budget.average_rho(strategy.spec, cfg.n_layers)
+                   if strategy.uses_cache else 1.0)
         rows.append({
             "variant": name,
             "avg_rho": round(avg_rho, 3),

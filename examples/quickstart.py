@@ -3,9 +3,11 @@
 the same prompt with (a) vanilla full recomputation and (b) SPA-Cache,
 printing the speedup and token agreement.
 
+The caching policy is a call-time ``CacheStrategy`` — the ModelConfig
+never changes between the two runs.
+
   PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
 import sys
 import time
 
@@ -16,9 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.configs.base import SPAConfig
+from repro.core.strategy import NoCache, SPACache
 from repro.data.synthetic import token_batches
-from repro.dlm import decoding
+from repro.dlm.session import DecodeSession
 from repro.training.optimizer import AdamWConfig
 from repro.training.trainer import Trainer
 
@@ -42,21 +44,23 @@ def main():
                          ["tokens"])
     gen_len = 32
 
-    cfg_vanilla = dataclasses.replace(cfg, spa=SPAConfig(
-        identifier="none"))
-    cfg_spa = dataclasses.replace(cfg, spa=SPAConfig(
-        identifier="singular", rank=16, schedule="adaptive",
-        rho_peak=0.25, rho_first=0.03, rho_last=0.13))
+    vanilla = NoCache()
+    spa = SPACache(rank=16, schedule="adaptive", rho_peak=0.25,
+                   rho_first=0.03, rho_last=0.13)
 
     print("\ndecoding with vanilla full recomputation ...")
     t0 = time.time()
-    toks_v, info_v = decoding.decode(params, cfg_vanilla, prompt, gen_len)
+    sess = DecodeSession(params, cfg, strategy=vanilla)
+    sess.prefill(prompt, gen_len)
+    toks_v, info_v = sess.run()
     t_v = time.time() - t0
     print(f"  {info_v['steps']} steps, {t_v:.2f}s")
 
     print("decoding with SPA-Cache (singular proxy r=16, adaptive rho) ...")
     t0 = time.time()
-    toks_s, info_s = decoding.decode(params, cfg_spa, prompt, gen_len)
+    sess = DecodeSession(params, cfg, strategy=spa)
+    sess.prefill(prompt, gen_len)
+    toks_s, info_s = sess.run()
     t_s = time.time() - t0
     print(f"  {info_s['steps']} steps, {t_s:.2f}s")
 

@@ -5,7 +5,6 @@ engine on the same queue.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
-import dataclasses
 import sys
 
 sys.path.insert(0, "src")
@@ -14,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.configs.base import SPAConfig
+from repro.core.strategy import NoCache, SPACache
 from repro.data.synthetic import token_batches
 from repro.dlm.decoding import DecodeSettings
 from repro.serving.engine import ServingEngine
@@ -39,15 +38,15 @@ def main():
                for _ in range(8)]
 
     results = {}
-    for name, spa in (
-        ("vanilla", SPAConfig(identifier="none")),
-        ("spa-cache", SPAConfig(identifier="singular", rank=16,
-                                schedule="adaptive", rho_peak=0.25,
-                                rho_first=0.03, rho_last=0.13)),
+    for name, strategy in (
+        ("vanilla", NoCache()),
+        ("spa-cache", SPACache(rank=16, schedule="adaptive",
+                               rho_peak=0.25, rho_first=0.03,
+                               rho_last=0.13)),
     ):
-        cfg_run = dataclasses.replace(cfg, spa=spa)
         engine = ServingEngine(
-            cfg_run, trainer.params, max_batch=4, canvas_len=48,
+            cfg, trainer.params, max_batch=4, canvas_len=48,
+            strategy=strategy,
             settings=DecodeSettings(parallel_threshold=0.3,
                                     max_parallel=2))
         for p in prompts:
@@ -57,7 +56,7 @@ def main():
         print(f"[{name:9s}] {stats.requests_done} requests, "
               f"{stats.tokens_committed} tokens in {engine._wall:.2f}s "
               f"({stats.tps(engine._wall):.1f} tok/s, "
-              f"{stats.steps} refinement steps)")
+              f"{stats.steps} refinement steps, {stats.swaps} swaps)")
 
     sp = results["spa-cache"][0].tps(results["spa-cache"][1]) / \
         max(results["vanilla"][0].tps(results["vanilla"][1]), 1e-9)

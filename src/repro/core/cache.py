@@ -57,24 +57,20 @@ class CachePolicy:
                    compute_dtype=jnp.dtype(cfg.param_dtype))
 
 
-def proxy_dim(cfg: ModelConfig) -> int:
-    ident = cfg.spa.identifier
-    if ident == "singular":
-        return cfg.spa.rank
-    if ident in ("value", "key"):
-        return cfg.kv_dim
-    if ident == "query":
-        return cfg.q_dim
-    if ident in ("attn_in", "attn_out"):
-        return cfg.d_model
-    return 0  # none / window: no proxy cache
+def proxy_dim(cfg: ModelConfig, strategy=None) -> int:
+    """Identifier-vector width r for the (resolved) strategy."""
+    from repro.core.strategy import resolve_strategy
+    return resolve_strategy(cfg, strategy).proxy_dim(cfg)
 
 
 def init_attn_layer_cache(cfg: ModelConfig, batch: int, n: int,
-                          policy: CachePolicy) -> Dict[str, jax.Array]:
+                          policy: CachePolicy,
+                          strategy=None) -> Dict[str, jax.Array]:
     """Zeros cache for ONE attention layer (no leading L axis)."""
+    from repro.core.strategy import resolve_strategy
+    strategy = resolve_strategy(cfg, strategy)
     kvh, hd, d = cfg.n_kv_heads, cfg.head_dim, cfg.d_model
-    r = proxy_dim(cfg)
+    r = strategy.proxy_dim(cfg)
     cd = policy.compute_dtype
     out: Dict[str, jax.Array] = {}
     if policy.quantized:
@@ -90,12 +86,12 @@ def init_attn_layer_cache(cfg: ModelConfig, batch: int, n: int,
         out["h"] = jnp.zeros((batch, n, d), cd)
     if r:
         out["proxy"] = jnp.zeros((batch, n, r), cd)
-        if cfg.spa.incremental_ident:
+        if strategy.incremental:
             out["proxy_now"] = jnp.zeros((batch, n, r), cd)
     return out
 
 
-def init_model_cache(cfg: ModelConfig, batch: int, n: int
+def init_model_cache(cfg: ModelConfig, batch: int, n: int, strategy=None
                      ) -> Dict[str, Dict[str, jax.Array]]:
     """Stacked caches per attention kind: {kind: {name: [Lk, B, N, ...]}}."""
     policy = CachePolicy.from_config(cfg)
@@ -104,7 +100,7 @@ def init_model_cache(cfg: ModelConfig, batch: int, n: int
         if kind not in ATTENTION_KINDS:
             continue
         lk = cfg.n_layers_of_kind(kind)
-        one = init_attn_layer_cache(cfg, batch, n, policy)
+        one = init_attn_layer_cache(cfg, batch, n, policy, strategy)
         out[kind] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (lk,) + a.shape).copy(), one)
     return out
@@ -171,8 +167,11 @@ def read_h_rows(cache: Dict[str, jax.Array], idx: jax.Array,
 
 def fill_from_prefill(cfg: ModelConfig, cache_k, cache_v, cache_h,
                       proxies: Optional[jax.Array],
-                      policy: CachePolicy) -> Dict[str, jax.Array]:
+                      policy: CachePolicy,
+                      strategy=None) -> Dict[str, jax.Array]:
     """Build one layer's cache dict from full prefill tensors."""
+    from repro.core.strategy import resolve_strategy
+    strategy = resolve_strategy(cfg, strategy)
     out: Dict[str, jax.Array] = {}
     if policy.quantized:
         out["k"], out["k_scale"] = quantize_rows(cache_k)
@@ -184,6 +183,6 @@ def fill_from_prefill(cfg: ModelConfig, cache_k, cache_v, cache_h,
         out["h"] = cache_h.astype(policy.compute_dtype)
     if proxies is not None:
         out["proxy"] = proxies.astype(policy.compute_dtype)
-        if cfg.spa.incremental_ident:
+        if strategy.incremental:
             out["proxy_now"] = proxies.astype(policy.compute_dtype)
     return out

@@ -36,22 +36,19 @@ def proxy_project(h: jax.Array, identifier: str, *,
                   w_query: Optional[jax.Array] = None,
                   w_key: Optional[jax.Array] = None,
                   proxy_mat: Optional[jax.Array] = None) -> jax.Array:
-    """Project input states to identifier vectors p. h: [B,N,d] -> [B,N,r]."""
-    if identifier == "singular":
-        assert proxy_mat is not None
-        return h @ proxy_mat
-    if identifier == "value":
-        assert w_value is not None
-        return h @ w_value
-    if identifier == "query":
-        assert w_query is not None
-        return h @ w_query
-    if identifier == "key":
-        assert w_key is not None
-        return h @ w_key
-    if identifier == "attn_in":
-        return h
-    raise ValueError(f"identifier {identifier!r} has no projection")
+    """Project input states to identifier vectors p. h: [B,N,d] -> [B,N,r].
+
+    Deprecated shim: projection dispatch now lives on
+    ``core.strategy.CacheStrategy.project``; this resolves the identifier
+    string through the strategy registry for old callers."""
+    from repro.core.strategy import REGISTRY
+    cls = REGISTRY.get(identifier)
+    if cls is None or identifier in ("none", "window", "attn_out"):
+        raise ValueError(f"identifier {identifier!r} has no projection")
+    strat = (cls() if identifier == "singular"
+             else cls(projection=identifier))
+    return strat.project(h, {"wv": w_value, "wq": w_query, "wk": w_key},
+                         proxy_mat)
 
 
 def drift_scores(p_now: jax.Array, p_cached: jax.Array) -> jax.Array:

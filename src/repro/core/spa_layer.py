@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ATTENTION_KINDS, ModelConfig
 from repro.core import budget, cache as cache_lib, identifiers, selection
 from repro.core.cache import CachePolicy
+from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.models import common
 from repro.models.attention import flash_attention
 from repro.models.transformer import (apply_block_dense, apply_ffn_or_moe,
@@ -76,34 +77,28 @@ def q_span_bound(n: int, k: int, nb: int, block_q: int = 512) -> int:
     return n_strata_per_block * stratum
 
 
-def _identifier_scores(cfg: ModelConfig, bp: Params, proxy_mat, x, cache_sl,
-                       scores_override, prev_idx=None):
+def _identifier_scores(strategy: CacheStrategy, bp: Params, proxy_mat, x,
+                       cache_sl, scores_override, prev_idx=None):
     """Returns (scores, p_now_full_or_None, proxy_now_cache_or_None).
 
-    Incremental mode (beyond-paper, DESIGN.md §Perf): only rows whose
+    Incremental mode (beyond-paper, DESIGN.md §6): only rows whose
     INPUTS changed (= rows refreshed by the previous layer, or newly
     committed tokens at layer 0) can have drifted proxies, so the rank-r
     projection runs on those k rows instead of all N — identification HBM
     traffic drops from N*d to k*d per layer."""
-    ident = cfg.spa.identifier
     if scores_override is not None:
         return scores_override, None, None
-    if (cfg.spa.incremental_ident and prev_idx is not None
+    if (strategy.incremental and prev_idx is not None
             and "proxy_now" in cache_sl):
         rows = selection.gather_rows(x, prev_idx)   # x = scaled h
-        p_rows = identifiers.proxy_project(
-            rows, ident, w_value=bp.get("wv"), w_query=bp.get("wq"),
-            w_key=bp.get("wk"), proxy_mat=proxy_mat)
+        p_rows = strategy.project(rows, bp, proxy_mat)
         proxy_now = selection.scatter_rows(cache_sl["proxy_now"],
                                            prev_idx, p_rows)
-        scores = identifiers.drift_scores(
+        scores = strategy.score(
             proxy_now.astype(jnp.float32), cache_sl["proxy"])
         return scores, None, proxy_now
-    p_now = identifiers.proxy_project(
-        x, ident,
-        w_value=bp.get("wv"), w_query=bp.get("wq"), w_key=bp.get("wk"),
-        proxy_mat=proxy_mat)
-    scores = identifiers.drift_scores(p_now, cache_sl["proxy"])
+    p_now = strategy.project(x, bp, proxy_mat)
+    scores = strategy.score(p_now, cache_sl["proxy"])
     return scores, p_now, None
 
 
@@ -111,19 +106,21 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
                    proxy_mat: Optional[jax.Array],
                    cache_sl: Dict[str, jax.Array], h: jax.Array,
                    k_upd: int, policy: CachePolicy,
+                   strategy: Optional[CacheStrategy] = None,
                    scores_override: Optional[jax.Array] = None,
                    prev_idx: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array,
                               jax.Array]:
     """One SPA-Cache attention block step. h: [B,N,d] current inputs.
     Returns (h_out, new_cache, aux, selected_idx)."""
+    strategy = resolve_strategy(cfg, strategy)
     b, n, d = h.shape
     w = layer_window(cfg, kind)
 
-    if cfg.spa.identifier == "attn_out":
+    if strategy.full_attn_ident:
         x = common.rms_norm(h, bp["norm1"], cfg.norm_eps)
         h_out, cache_sl, aux, idx = _attn_out_identifier_block(
-            cfg, kind, bp, cache_sl, h, x, k_upd, policy)
+            cfg, kind, bp, cache_sl, h, x, k_upd, policy, strategy)
         return h_out, cache_sl, aux, idx
 
     # ---- Phase 1: identification & selection ----
@@ -135,7 +132,7 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
     # skips an N*d norm per layer.
     ident_in = h * (1.0 + bp["norm1"]).astype(h.dtype)
     scores, p_now, proxy_now = _identifier_scores(
-        cfg, bp, proxy_mat, ident_in, cache_sl, scores_override,
+        strategy, bp, proxy_mat, ident_in, cache_sl, scores_override,
         prev_idx)
     nb = stratify_blocks_for(n, k_upd) if w > 0 else 0
     if nb > 1:
@@ -155,7 +152,7 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
 
     # ---- Phase 2: attention with partially cached KV ----
     q, k_new, v_new = qkv_project(bp, x_rows, cfg, idx)
-    cache_sl = cache_lib.write_kv(cache_sl, idx, k_new, v_new, policy)
+    cache_sl = strategy.commit_kv(cache_sl, idx, k_new, v_new, policy)
     kf, vf, ks, vs = cache_lib.read_kv_for_attention(cache_sl, policy)
     attn = flash_attention(
         q, kf, vf, k_scale=ks, v_scale=vs, q_positions=idx, window=w,
@@ -176,20 +173,8 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
         ffn_out = common.rms_norm(ffn_out, bp["norm_post_ffn"],
                                   cfg.norm_eps)
     y_rows = h_mid + ffn_out
-    cache_sl = cache_lib.write_h(cache_sl, idx, y_rows, policy)
-    cache_sl = dict(cache_sl)
-    if proxy_now is not None:
-        cache_sl["proxy_now"] = proxy_now.astype(
-            cache_sl["proxy_now"].dtype)
-        cache_sl["proxy"] = selection.scatter_rows(
-            cache_sl["proxy"], idx,
-            selection.gather_rows(proxy_now, idx))
-    elif p_now is not None:
-        cache_sl["proxy"] = selection.scatter_rows(
-            cache_sl["proxy"], idx, selection.gather_rows(p_now, idx))
-        if "proxy_now" in cache_sl:
-            cache_sl["proxy_now"] = p_now.astype(
-                cache_sl["proxy_now"].dtype)
+    cache_sl = strategy.commit(cache_sl, idx, y_rows, policy,
+                               p_now=p_now, proxy_now=proxy_now)
 
     cache_sl = _hint_cache_slice(cache_sl, b)
     h_out = cache_lib.read_h_full(cache_sl, policy, h.dtype)
@@ -203,7 +188,7 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
 
 
 def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
-                               policy):
+                               policy, strategy):
     """Table-1 'attn output' identifier: full attention is computed for ALL
     rows against the (stale) cached KV purely for identification; only the
     FFN runs sparsely. Matches the paper's cost profile (slower than the
@@ -220,10 +205,10 @@ def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
     if cfg.post_norms:
         attn_all = common.rms_norm(attn_all, bp["norm_post_attn"],
                                    cfg.norm_eps)
-    scores = identifiers.drift_scores(attn_all, cache_sl["proxy"])
+    scores = strategy.score(attn_all, cache_sl["proxy"])
     idx = selection.select_topk_drift(scores, k_upd)
 
-    cache_sl = cache_lib.write_kv(
+    cache_sl = strategy.commit_kv(
         cache_sl, idx, selection.gather_rows(k_all, idx),
         selection.gather_rows(v_all, idx), policy)
     h_mid = selection.gather_rows(h, idx) + selection.gather_rows(
@@ -234,9 +219,8 @@ def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
         ffn_out = common.rms_norm(ffn_out, bp["norm_post_ffn"],
                                   cfg.norm_eps)
     y_rows = h_mid + ffn_out
-    cache_sl = cache_lib.write_h(cache_sl, idx, y_rows, policy)
-    cache_sl = dict(cache_sl)
-    cache_sl["proxy"] = attn_all.astype(cache_sl["proxy"].dtype)
+    cache_sl = strategy.commit(cache_sl, idx, y_rows, policy,
+                               attn_all=attn_all)
     cache_sl = _hint_cache_slice(cache_sl, b)
     h_out = cache_lib.read_h_full(cache_sl, policy, h.dtype)
     return h_out, cache_sl, aux, idx
@@ -255,23 +239,26 @@ def spa_forward(params: Params, cfg: ModelConfig,
                 cache: Dict[str, Dict[str, jax.Array]], h: jax.Array,
                 spa_proxies: Optional[Dict[str, jax.Array]] = None,
                 scores_override: Optional[jax.Array] = None,
-                changed_idx: Optional[jax.Array] = None
+                changed_idx: Optional[jax.Array] = None,
+                strategy: Optional[CacheStrategy] = None
                 ) -> Tuple[jax.Array, Dict, jax.Array]:
-    """Run all blocks with SPA-Cache on attention layers.
+    """Run all blocks with the given CacheStrategy on attention layers.
 
     cache: {kind: {name: [Lk, B, N, ...]}} (from ``init_model_cache`` or
     prefill). changed_idx [B, c]: positions whose INPUT rows changed since
     the previous step (newly committed tokens) — used by the incremental
-    identifier. Returns (h_final, new_cache, aux).
+    identifier. strategy defaults to ``cfg.spa`` resolved through the
+    registry. Returns (h_final, new_cache, aux).
     """
+    strategy = resolve_strategy(cfg, strategy)
     policy = CachePolicy.from_config(cfg)
     b, n = h.shape[0], h.shape[1]
-    ks = budget.k_schedule(cfg.spa, cfg.n_layers, n)
+    ks = strategy.k_schedule(cfg, n)
     k_max = max(ks)
-    uses_proxy_mat = cfg.spa.identifier == "singular"
+    uses_proxy_mat = strategy.uses_proxy_mat
     aux_total = jnp.zeros((), jnp.float32)
 
-    incremental = cfg.spa.incremental_ident and scores_override is None
+    incremental = strategy.incremental and scores_override is None
 
     def pad_idx(idx):
         """Pad/clip an index set to [B, k_max] with sentinel n."""
@@ -294,7 +281,7 @@ def spa_forward(params: Params, cfg: ModelConfig,
         # multi-GB cache stacks exist ONCE instead of as input + output +
         # copy (3x) buffers.
         kind = cfg.layer_pattern[0]
-        segments = budget.bucketize(ks, cfg.spa.n_buckets)
+        segments = budget.bucketize(ks, strategy.n_buckets)
         new_slices: List = []
         for (a, b_end, kseg) in segments:
             bp_sl = jax.tree.map(lambda t: t[a:b_end],
@@ -319,7 +306,7 @@ def spa_forward(params: Params, cfg: ModelConfig,
                         t, l_idx, 0, keepdims=False), cache_c)
                 h_c, csl_new, aux, idx = spa_attn_block(
                     cfg, kind, bp_l, pm, csl, h_c, _kseg, policy,
-                    prev_idx=prev_c)
+                    strategy, prev_idx=prev_c)
                 cache_c = jax.tree.map(
                     lambda t, sl: jax.lax.dynamic_update_index_in_dim(
                         t, sl.astype(t.dtype), l_idx, 0),
@@ -351,12 +338,12 @@ def spa_forward(params: Params, cfg: ModelConfig,
         kind = cfg.kind_of_layer(l)
         ki = cfg.kind_index(l)
         bp = jax.tree.map(lambda t: t[ki], params["blocks"][kind])
-        if kind in ATTENTION_KINDS and cfg.spa.identifier != "none":
+        if kind in ATTENTION_KINDS and strategy.uses_cache:
             csl = jax.tree.map(lambda t: t[ki], cache[kind])
             prox = (spa_proxies[kind][ki]
                     if uses_proxy_mat and spa_proxies else None)
             h, csl_new, aux, idx = spa_attn_block(
-                cfg, kind, bp, prox, csl, h, ks[l], policy,
+                cfg, kind, bp, prox, csl, h, ks[l], policy, strategy,
                 scores_override=scores_override, prev_idx=prev)
             if incremental:
                 prev = pad_idx(idx)
@@ -379,30 +366,16 @@ def spa_forward(params: Params, cfg: ModelConfig,
     return h, new_cache, aux_total
 
 
-def build_spa_proxies(params: Params, cfg: ModelConfig
+def build_spa_proxies(params: Params, cfg: ModelConfig,
+                      strategy: Optional[CacheStrategy] = None
                       ) -> Optional[Dict[str, jax.Array]]:
-    """Offline SVD of value projections -> proxy stacks {kind: [Lk,d,r]}."""
-    if cfg.spa.identifier != "singular":
-        return None
-    from repro.core.svd_proxy import build_proxy_stack
-    out = {}
-    for kind in sorted(set(cfg.layer_kinds)):
-        if kind not in ATTENTION_KINDS:
-            continue
-        wv = params["blocks"][kind]["wv"]            # [Lk, d, kv_dim]
-        out[kind] = jnp.asarray(build_proxy_stack(wv, cfg.spa.rank))
-    return out
+    """Offline proxy stacks {kind: [Lk,d,r]} for the resolved strategy
+    (SVD of value projections for SPACache; None for every other)."""
+    return resolve_strategy(cfg, strategy).build_proxies(params, cfg)
 
 
-def spa_proxy_specs(cfg: ModelConfig) -> Optional[Dict[str, Any]]:
+def spa_proxy_specs(cfg: ModelConfig,
+                    strategy: Optional[CacheStrategy] = None
+                    ) -> Optional[Dict[str, Any]]:
     """ShapeDtypeStructs of the proxy stacks (for the dry-run)."""
-    if cfg.spa.identifier != "singular":
-        return None
-    out = {}
-    for kind in sorted(set(cfg.layer_kinds)):
-        if kind not in ATTENTION_KINDS:
-            continue
-        lk = cfg.n_layers_of_kind(kind)
-        out[kind] = jax.ShapeDtypeStruct(
-            (lk, cfg.d_model, cfg.spa.rank), jnp.dtype(cfg.param_dtype))
-    return out
+    return resolve_strategy(cfg, strategy).proxy_specs(cfg)

@@ -1,0 +1,426 @@
+"""First-class caching strategies (the ``CacheStrategy`` protocol).
+
+The paper's core claim is that update identification (§3.2/3.3) and
+budget allocation (§3.4) are *pluggable policies* over a shared DLM
+cache.  This module makes that literal: every policy is a frozen
+dataclass implementing one protocol, and any decode surface
+(``DecodeSession``, ``decode``, ``decode_semi_ar``, ``ServingEngine``)
+accepts a strategy at call time — ``ModelConfig.spa`` is only the
+*default* spec, resolved through :func:`strategy_from_spec`.
+
+Concrete strategies (DESIGN.md §2):
+
+  ``SPACache``        — the paper: rank-r singular proxy (§3.3) +
+                        piecewise-Gaussian adaptive budget (Eq. 5).
+  ``ValueProxyCache`` — dLLM-Cache (Liu et al. 2025): full value-state
+                        proxy, uniform budget; ``projection`` selects the
+                        Table-1 ablation variants (value/query/key/attn_in).
+  ``WindowCache``     — dKV-Cache (Ma et al. 2025): locality heuristic,
+                        rows near recently committed tokens refresh.
+  ``AttnOutCache``    — Table-1 'attn output' identifier: full attention
+                        for identification, sparse FFN.
+  ``NoCache``         — vanilla full recomputation (baseline rows).
+
+A strategy owns:
+  * the identifier projection  (``project`` / ``prefill_proxy``)
+  * the drift scoring          (``score`` / ``pre_scores``)
+  * the per-layer budget       (``k_schedule`` / ``k_for``)
+  * cache layout + lifecycle   (``proxy_dim`` / ``init_cache`` /
+                                ``commit_kv`` / ``commit``)
+  * offline artefacts          (``build_proxies`` / ``proxy_specs``)
+
+Strategies are hashable (frozen dataclasses) so jitted step functions
+close over them statically — switching strategy retraces, switching
+request does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, List, Optional, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTENTION_KINDS, ModelConfig, SPAConfig
+
+Params = Dict[str, Any]
+
+# Registry of strategy classes, keyed by the SPAConfig identifier string
+# they correspond to (the serializable spec format).
+REGISTRY: Dict[str, Type["CacheStrategy"]] = {}
+
+
+def register(*idents: str):
+    def deco(cls):
+        for ident in idents:
+            REGISTRY[ident] = cls
+        return cls
+
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStrategy:
+    """Protocol base.  Subclasses override the class-vars and methods.
+
+    ``refresh_interval`` — full cache rebuild every R steps (0 = never);
+    the *session* owns the loop, this is just the strategy's default.
+    ``n_buckets`` — lax.scan budget quantization (DESIGN.md §4.4).
+    """
+
+    refresh_interval: int = 0
+    n_buckets: int = 6
+
+    name: ClassVar[str] = "abstract"
+    uses_cache: ClassVar[bool] = True     # False only for NoCache
+    uses_proxy_mat: ClassVar[bool] = False   # True only for SPACache
+    full_attn_ident: ClassVar[bool] = False  # True only for AttnOutCache
+    incremental: ClassVar[bool] = False      # proxy recompute on changed rows
+
+    # ---- spec bridge (ModelConfig.spa stays the serializable format) ----
+
+    @property
+    def spec(self) -> SPAConfig:
+        raise NotImplementedError
+
+    # ---- budget ----
+
+    def k_schedule(self, cfg: ModelConfig, seq_len: int) -> List[int]:
+        """Static per-layer update counts k(l)."""
+        from repro.core import budget
+        return budget.k_schedule(self.spec, cfg.n_layers, seq_len)
+
+    def k_for(self, cfg: ModelConfig, layer: int, seq_len: int) -> int:
+        return self.k_schedule(cfg, seq_len)[layer]
+
+    # ---- identification ----
+
+    def project(self, h: jax.Array, bp: Params,
+                proxy_mat: Optional[jax.Array] = None) -> jax.Array:
+        """Project (scaled) input states to identifier vectors p."""
+        raise NotImplementedError(f"{self.name} has no projection")
+
+    def score(self, p_now: jax.Array, p_cached: jax.Array) -> jax.Array:
+        """Similarity per row [B, N]; LOW = drifted = update."""
+        from repro.core.identifiers import drift_scores
+        return drift_scores(p_now, p_cached)
+
+    def pre_scores(self, n: int, committed: jax.Array
+                   ) -> Optional[jax.Array]:
+        """Scores computed *before* the layer stack from decode-loop state
+        (committed-token ring).  None for projection-based strategies."""
+        return None
+
+    def prefill_proxy(self, bp: Params, proxy_mat, h_in, x, attn_out,
+                      h_out) -> Optional[jax.Array]:
+        """Identifier vectors collected during prefill.
+
+        Projection identifiers score on h * (1 + norm_weight) WITHOUT the
+        rms division (cosine drift is row-scale invariant), matching the
+        serve path bit-for-bit so unchanged rows tie at cosine == 1.0."""
+        scaled = h_in * (1.0 + bp["norm1"]).astype(h_in.dtype)
+        return self.project(scaled, bp, proxy_mat)
+
+    # ---- cache layout + lifecycle ----
+
+    def proxy_dim(self, cfg: ModelConfig) -> int:
+        return 0
+
+    def init_cache(self, cfg: ModelConfig, batch: int, n: int,
+                   policy=None) -> Dict[str, Dict[str, jax.Array]]:
+        """Zeroed stacked caches {kind: {name: [Lk, B, N, ...]}}."""
+        from repro.core import cache as cache_lib
+        return cache_lib.init_model_cache(cfg, batch, n, strategy=self)
+
+    def commit_kv(self, cache_sl: Dict[str, jax.Array], idx: jax.Array,
+                  k_rows: jax.Array, v_rows: jax.Array, policy
+                  ) -> Dict[str, jax.Array]:
+        """Scatter refreshed K/V rows into the layer cache at idx."""
+        from repro.core import cache as cache_lib
+        return cache_lib.write_kv(cache_sl, idx, k_rows, v_rows, policy)
+
+    def commit(self, cache_sl: Dict[str, jax.Array], idx: jax.Array,
+               h_rows: jax.Array, policy, *,
+               p_now: Optional[jax.Array] = None,
+               proxy_now: Optional[jax.Array] = None,
+               attn_all: Optional[jax.Array] = None
+               ) -> Dict[str, jax.Array]:
+        """Scatter refreshed block outputs + identifier vectors at idx."""
+        from repro.core import cache as cache_lib
+        from repro.core import selection
+        cache_sl = dict(cache_lib.write_h(cache_sl, idx, h_rows, policy))
+        if proxy_now is not None:   # incremental path keeps both buffers
+            cache_sl["proxy_now"] = proxy_now.astype(
+                cache_sl["proxy_now"].dtype)
+            cache_sl["proxy"] = selection.scatter_rows(
+                cache_sl["proxy"], idx,
+                selection.gather_rows(proxy_now, idx))
+        elif p_now is not None:
+            cache_sl["proxy"] = selection.scatter_rows(
+                cache_sl["proxy"], idx, selection.gather_rows(p_now, idx))
+            if "proxy_now" in cache_sl:
+                cache_sl["proxy_now"] = p_now.astype(
+                    cache_sl["proxy_now"].dtype)
+        return cache_sl
+
+    # ---- offline artefacts ----
+
+    def build_proxies(self, params: Params, cfg: ModelConfig
+                      ) -> Optional[Dict[str, jax.Array]]:
+        return None
+
+    def proxy_specs(self, cfg: ModelConfig) -> Optional[Dict[str, Any]]:
+        return None
+
+
+@register("singular")
+@dataclasses.dataclass(frozen=True)
+class SPACache(CacheStrategy):
+    """The paper: rank-r singular proxy + adaptive budget (Alg. 1)."""
+
+    rank: int = 128
+    schedule: str = "adaptive"
+    rho_peak: float = 0.25
+    rho_first: float = 0.03
+    rho_last: float = 0.13
+    layer_peak: Optional[int] = None
+    incremental_ident: bool = False   # beyond-paper (DESIGN.md §6)
+
+    name: ClassVar[str] = "spa"
+    uses_proxy_mat: ClassVar[bool] = True
+
+    @property
+    def incremental(self) -> bool:  # type: ignore[override]
+        return self.incremental_ident
+
+    @property
+    def spec(self) -> SPAConfig:
+        return SPAConfig(
+            identifier="singular", rank=self.rank, schedule=self.schedule,
+            rho_peak=self.rho_peak, rho_first=self.rho_first,
+            rho_last=self.rho_last, layer_peak=self.layer_peak,
+            n_buckets=self.n_buckets,
+            refresh_interval=self.refresh_interval,
+            incremental_ident=self.incremental_ident)
+
+    @classmethod
+    def from_spec(cls, spa: SPAConfig) -> "SPACache":
+        return cls(rank=spa.rank, schedule=spa.schedule,
+                   rho_peak=spa.rho_peak, rho_first=spa.rho_first,
+                   rho_last=spa.rho_last, layer_peak=spa.layer_peak,
+                   n_buckets=spa.n_buckets,
+                   refresh_interval=spa.refresh_interval,
+                   incremental_ident=spa.incremental_ident)
+
+    def proxy_dim(self, cfg: ModelConfig) -> int:
+        return self.rank
+
+    def project(self, h, bp, proxy_mat=None):
+        assert proxy_mat is not None, "SPACache needs offline proxies"
+        return h @ proxy_mat
+
+    def build_proxies(self, params, cfg):
+        """Offline SVD of value projections -> {kind: [Lk, d, r]}."""
+        from repro.core.svd_proxy import build_proxy_stack
+        out = {}
+        for kind in sorted(set(cfg.layer_kinds)):
+            if kind not in ATTENTION_KINDS:
+                continue
+            wv = params["blocks"][kind]["wv"]          # [Lk, d, kv_dim]
+            out[kind] = jnp.asarray(build_proxy_stack(wv, self.rank))
+        return out
+
+    def proxy_specs(self, cfg):
+        out = {}
+        for kind in sorted(set(cfg.layer_kinds)):
+            if kind not in ATTENTION_KINDS:
+                continue
+            lk = cfg.n_layers_of_kind(kind)
+            out[kind] = jax.ShapeDtypeStruct(
+                (lk, cfg.d_model, self.rank), jnp.dtype(cfg.param_dtype))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _RhoBudgetStrategy(CacheStrategy):
+    """Shared budget fields for the baseline strategies.
+
+    ``rho_first``/``rho_last``/``layer_peak`` only matter with
+    ``schedule="adaptive"``; None means flat at ``rho``."""
+
+    schedule: str = "uniform"
+    rho: float = 0.25
+    rho_first: Optional[float] = None
+    rho_last: Optional[float] = None
+    layer_peak: Optional[int] = None
+
+    def _spec_budget(self) -> Dict[str, Any]:
+        return dict(
+            schedule=self.schedule, rho_peak=self.rho,
+            rho_first=self.rho if self.rho_first is None else self.rho_first,
+            rho_last=self.rho if self.rho_last is None else self.rho_last,
+            layer_peak=self.layer_peak, n_buckets=self.n_buckets,
+            refresh_interval=self.refresh_interval)
+
+    @staticmethod
+    def _budget_from_spec(spa: SPAConfig) -> Dict[str, Any]:
+        def ramp(r):                 # flat-at-rho normalizes to None
+            return None if r == spa.rho_peak else r
+        return dict(schedule=spa.schedule, rho=spa.rho_peak,
+                    rho_first=ramp(spa.rho_first),
+                    rho_last=ramp(spa.rho_last), layer_peak=spa.layer_peak,
+                    n_buckets=spa.n_buckets,
+                    refresh_interval=spa.refresh_interval)
+
+
+@register("value", "query", "key", "attn_in")
+@dataclasses.dataclass(frozen=True)
+class ValueProxyCache(_RhoBudgetStrategy):
+    """dLLM-Cache (value) and the Table-1 projection ablations."""
+
+    projection: str = "value"        # value | query | key | attn_in
+    incremental_ident: bool = False  # changed-rows-only projection
+
+    name: ClassVar[str] = "value_proxy"
+
+    @property
+    def incremental(self) -> bool:  # type: ignore[override]
+        return self.incremental_ident
+
+    @property
+    def spec(self) -> SPAConfig:
+        return SPAConfig(identifier=self.projection,
+                         incremental_ident=self.incremental_ident,
+                         **self._spec_budget())
+
+    @classmethod
+    def from_spec(cls, spa: SPAConfig) -> "ValueProxyCache":
+        return cls(projection=spa.identifier,
+                   incremental_ident=spa.incremental_ident,
+                   **cls._budget_from_spec(spa))
+
+    def proxy_dim(self, cfg: ModelConfig) -> int:
+        return {"value": cfg.kv_dim, "key": cfg.kv_dim,
+                "query": cfg.q_dim, "attn_in": cfg.d_model}[self.projection]
+
+    def project(self, h, bp, proxy_mat=None):
+        if self.projection == "value":
+            return h @ bp["wv"]
+        if self.projection == "query":
+            return h @ bp["wq"]
+        if self.projection == "key":
+            return h @ bp["wk"]
+        return h                      # attn_in: raw inputs
+
+
+@register("window")
+@dataclasses.dataclass(frozen=True)
+class WindowCache(_RhoBudgetStrategy):
+    """dKV-Cache-style locality heuristic: rows within ``locality_window``
+    of a recently committed token refresh; no projection, no proxy cache."""
+
+    locality_window: int = 64
+
+    name: ClassVar[str] = "window"
+
+    @property
+    def spec(self) -> SPAConfig:
+        return SPAConfig(identifier="window",
+                         locality_window=self.locality_window,
+                         **self._spec_budget())
+
+    @classmethod
+    def from_spec(cls, spa: SPAConfig) -> "WindowCache":
+        return cls(locality_window=spa.locality_window,
+                   **cls._budget_from_spec(spa))
+
+    def pre_scores(self, n: int, committed: jax.Array):
+        from repro.core.identifiers import locality_scores
+        return locality_scores(n, committed, self.locality_window)
+
+    def prefill_proxy(self, bp, proxy_mat, h_in, x, attn_out, h_out):
+        return None
+
+
+@register("attn_out")
+@dataclasses.dataclass(frozen=True)
+class AttnOutCache(_RhoBudgetStrategy):
+    """Table-1 'attn output' identifier: full attention against the stale
+    cached KV for ALL rows (identification only), sparse FFN after.
+    Suffers the Appendix-B anisotropy masking (fig5_anisotropy)."""
+
+    name: ClassVar[str] = "attn_out"
+    full_attn_ident: ClassVar[bool] = True
+
+    @property
+    def spec(self) -> SPAConfig:
+        return SPAConfig(identifier="attn_out", **self._spec_budget())
+
+    @classmethod
+    def from_spec(cls, spa: SPAConfig) -> "AttnOutCache":
+        return cls(**cls._budget_from_spec(spa))
+
+    def proxy_dim(self, cfg: ModelConfig) -> int:
+        return cfg.d_model
+
+    def prefill_proxy(self, bp, proxy_mat, h_in, x, attn_out, h_out):
+        return attn_out
+
+    def commit(self, cache_sl, idx, h_rows, policy, *, p_now=None,
+               proxy_now=None, attn_all=None):
+        from repro.core import cache as cache_lib
+        cache_sl = dict(cache_lib.write_h(cache_sl, idx, h_rows, policy))
+        # momentum signal: proxy = latest full attention output
+        cache_sl["proxy"] = attn_all.astype(cache_sl["proxy"].dtype)
+        return cache_sl
+
+
+@register("none")
+@dataclasses.dataclass(frozen=True)
+class NoCache(CacheStrategy):
+    """Vanilla full recomputation every refinement step (baseline)."""
+
+    name: ClassVar[str] = "none"
+    uses_cache: ClassVar[bool] = False
+
+    @property
+    def spec(self) -> SPAConfig:
+        return SPAConfig(identifier="none")
+
+    @classmethod
+    def from_spec(cls, spa: SPAConfig) -> "NoCache":
+        return cls()
+
+    def k_schedule(self, cfg: ModelConfig, seq_len: int) -> List[int]:
+        return [seq_len] * cfg.n_layers
+
+    def prefill_proxy(self, bp, proxy_mat, h_in, x, attn_out, h_out):
+        return None
+
+    def init_cache(self, cfg, batch, n, policy=None):
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def strategy_from_spec(spa: SPAConfig) -> CacheStrategy:
+    """Build the strategy described by a (serializable) ``SPAConfig``."""
+    cls = REGISTRY.get(spa.identifier)
+    if cls is None:
+        raise ValueError(
+            f"unknown identifier {spa.identifier!r}; registered: "
+            f"{sorted(REGISTRY)}")
+    return cls.from_spec(spa)
+
+
+def strategy_from_config(cfg: ModelConfig) -> CacheStrategy:
+    return strategy_from_spec(cfg.spa)
+
+
+def resolve_strategy(cfg: ModelConfig,
+                     strategy: Optional[CacheStrategy] = None
+                     ) -> CacheStrategy:
+    """Call-time strategy wins; ``cfg.spa`` is only the default spec."""
+    return strategy if strategy is not None else strategy_from_spec(cfg.spa)

@@ -1,34 +1,45 @@
-"""DLM iterative-unmasking decoding with SPA-Cache.
+"""DLM iterative-unmasking decoding primitives with pluggable caching.
 
   prefill    — full forward over the canvas that populates all layer caches
-               (K, V, H^c, identifier vectors).
-  serve_step — ONE diffusion refinement step: SPA sparse layer updates,
-               candidate-limited logit evaluation, confidence-based commit
-               of >= 1 token (parallel decoding commits every candidate
-               above the confidence threshold — Fast-dLLM style).
-  decode     — the step loop (jitted per-step), plus baseline strategies:
-               vanilla (no cache), dllm_cache (value proxy, uniform rho,
-               optional refresh), dkv_window (locality heuristic).
+               (K, V, H^c, identifier vectors) per the CacheStrategy.
+  serve_step — ONE diffusion refinement step: sparse layer updates driven
+               by the strategy, candidate-limited logit evaluation,
+               confidence-based commit of >= 1 token (parallel decoding
+               commits every candidate above the confidence threshold —
+               Fast-dLLM style).
+
+The step LOOP (prefill + jitted step + periodic refresh + commit policy)
+lives in ``repro.dlm.session.DecodeSession``; ``decode`` and
+``decode_semi_ar`` below are thin compatibility wrappers over it.
+
+All caching policy dispatch goes through ``core.strategy.CacheStrategy``
+(DESIGN.md §2) — this module never inspects identifier strings.
 
 Candidate-limited logits: computing lm-head logits over the full 32k/500k
 canvas each step would dominate all other costs, so logits are evaluated
 only at ``n_candidates`` masked positions per step (a serving design
-choice documented in DESIGN.md).
+choice documented in DESIGN.md §3).
+
+Active-position masks: ``DecodeState.active`` [B, N_text] bool marks the
+canvas positions a session is allowed to commit. Slots outside a
+request's prompt+gen span (serving) or outside the current semi-AR block
+stay ``active=False`` — token ids are never overloaded as sentinels
+(token 0 is a legal vocab id).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTENTION_KINDS, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core import cache as cache_lib
-from repro.core import identifiers, selection, spa_layer
+from repro.core import selection, spa_layer
 from repro.core.cache import CachePolicy
-from repro.models import common, transformer
+from repro.core.strategy import CacheStrategy, resolve_strategy
+from repro.models import transformer
 
 Params = Dict[str, Any]
 
@@ -39,11 +50,18 @@ class DecodeState(NamedTuple):
     step: jax.Array              # scalar int32
     committed: jax.Array         # [B, C] recently committed positions (-1 pad)
     n_masked: jax.Array          # [B] remaining masked counts
-    extras: Dict[str, jax.Array] = {}   # modality stubs (VLM patches)
+    active: Optional[jax.Array] = None   # [B, N_text] bool commit mask
+    extras: Dict[str, jax.Array] = {}    # modality stubs (VLM patches)
 
 
 @dataclasses.dataclass(frozen=True)
 class DecodeSettings:
+    """Per-request decode knobs (hashable: used as an engine lane key).
+
+    ``refresh_interval`` is the ONE source of truth for periodic full
+    cache rebuilds when non-zero; ``DecodeSession`` falls back to the
+    strategy's own default (``CacheStrategy.refresh_interval``) when 0.
+    """
     n_candidates: int = 64
     parallel_threshold: float = 0.0   # 0 = commit exactly 1 token / step
     max_parallel: int = 0             # cap on tokens committed per step
@@ -56,12 +74,15 @@ class DecodeSettings:
 # ---------------------------------------------------------------------------
 
 def prefill(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
-            spa_proxies=None) -> Tuple[jax.Array, Any]:
-    """Full forward building the SPA caches. Returns (h_final, cache)."""
+            spa_proxies=None, strategy: Optional[CacheStrategy] = None
+            ) -> Tuple[jax.Array, Any]:
+    """Full forward building the strategy's caches. Returns (h_final, cache)."""
+    strategy = resolve_strategy(cfg, strategy)
     policy = CachePolicy.from_config(cfg)
     h = transformer.embed_inputs(params, cfg, inputs)
     h, _, raw = transformer.forward_hidden(
-        params, cfg, h, collect_cache=True, spa_proxies=spa_proxies)
+        params, cfg, h, collect_cache=True, spa_proxies=spa_proxies,
+        strategy=strategy)
     cache = {}
     for kind, entries in (raw or {}).items():
         out: Dict[str, jax.Array] = {}
@@ -76,7 +97,7 @@ def prefill(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
             out["h"] = entries["h"].astype(cd)
         if "proxy" in entries:
             out["proxy"] = entries["proxy"].astype(policy.compute_dtype)
-            if cfg.spa.incremental_ident:
+            if strategy.incremental:
                 out["proxy_now"] = out["proxy"]
         cache[kind] = out
     return h, cache
@@ -86,11 +107,13 @@ def prefill(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
 # Serve step
 # ---------------------------------------------------------------------------
 
-def _candidate_positions(tokens: jax.Array, mask_id: int,
-                         n_cand: int) -> jax.Array:
-    """First n_cand masked positions per row (static shape)."""
+def _candidate_positions(tokens: jax.Array, mask_id: int, n_cand: int,
+                         active: Optional[jax.Array] = None) -> jax.Array:
+    """First n_cand open (masked AND active) positions per row."""
     b, n = tokens.shape
     is_masked = tokens == mask_id
+    if active is not None:
+        is_masked = jnp.logical_and(is_masked, active)
     score = jnp.where(is_masked, -jnp.arange(n)[None, :].astype(jnp.float32),
                       -jnp.inf)
     _, idx = jax.lax.top_k(score, min(n_cand, n))
@@ -98,9 +121,11 @@ def _candidate_positions(tokens: jax.Array, mask_id: int,
 
 
 def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
-               settings: DecodeSettings, spa_proxies=None
+               settings: DecodeSettings, spa_proxies=None,
+               strategy: Optional[CacheStrategy] = None
                ) -> Tuple[DecodeState, Dict[str, jax.Array]]:
-    """One SPA-Cache diffusion refinement step."""
+    """One diffusion refinement step under the resolved CacheStrategy."""
+    strategy = resolve_strategy(cfg, strategy)
     tokens, cache = state.tokens, state.cache
     b = tokens.shape[0]
     mask_id = cfg.mask_id
@@ -120,23 +145,20 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
     n_spec = ("pod", "data", "model") if b == 1 else "model"
     h = shard_hint(h, None if b == 1 else "batch", n_spec, None)
 
-    scores_override = None
-    if cfg.spa.identifier == "window":
-        scores_override = identifiers.locality_scores(
-            n, state.committed + offset, cfg.spa.locality_window)
+    scores_override = strategy.pre_scores(n, state.committed + offset)
 
-    if cfg.spa.identifier == "none" or not cache:
+    if not strategy.uses_cache or not cache:
         h, _, _ = transformer.forward_hidden(params, cfg, h)
         new_cache = cache
     else:
         h, new_cache, _ = spa_layer.spa_forward(
             params, cfg, cache, h, spa_proxies=spa_proxies,
             scores_override=scores_override,
-            changed_idx=state.committed)
+            changed_idx=state.committed, strategy=strategy)
 
     # Candidate-limited logit evaluation + commit.
     cand_idx, is_masked = _candidate_positions(
-        tokens, mask_id, settings.n_candidates)
+        tokens, mask_id, settings.n_candidates, state.active)
     h_cand = selection.gather_rows(h, cand_idx + offset)
     logits = transformer.logits_from_hidden(params, cfg, h_cand)
     # the model must never commit the [MASK] token itself
@@ -181,111 +203,61 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
     new_state = DecodeState(
         tokens=new_tokens, cache=new_cache, step=state.step + 1,
         committed=committed,
-        n_masked=state.n_masked - n_committed)
+        n_masked=state.n_masked - n_committed,
+        active=state.active, extras=state.extras)
     info = {"n_committed": n_committed,
             "mean_conf": jnp.mean(jnp.where(jnp.isfinite(conf), conf, 0.0))}
     return new_state, info
 
 
 # ---------------------------------------------------------------------------
-# Decode loop (host-side loop; step is jitted once)
+# Compatibility wrappers over DecodeSession
 # ---------------------------------------------------------------------------
 
 def init_decode_state(cfg: ModelConfig, params: Params, prompt: jax.Array,
                       gen_len: int, spa_proxies=None,
-                      use_cache: bool = True) -> DecodeState:
-    from repro.dlm.noise import mask_canvas
-    if spa_proxies is None and cfg.spa.identifier == "singular":
-        spa_proxies = spa_layer.build_spa_proxies(params, cfg)
-    canvas = mask_canvas(prompt, gen_len, cfg.mask_id)
-    b, n = canvas.shape
-    if use_cache and cfg.spa.identifier != "none":
-        _, cache = prefill(params, cfg, {"tokens": canvas}, spa_proxies)
-    else:
-        cache = {}
-    return DecodeState(
-        tokens=canvas, cache=cache, step=jnp.zeros((), jnp.int32),
-        committed=jnp.full((b, 8), -1, jnp.int32),
-        n_masked=jnp.full((b,), gen_len, jnp.int32), extras={})
+                      use_cache: bool = True,
+                      strategy: Optional[CacheStrategy] = None,
+                      settings: Optional[DecodeSettings] = None
+                      ) -> DecodeState:
+    """Deprecated: use ``DecodeSession.prefill``; kept for old callers."""
+    from repro.dlm.session import DecodeSession
+    sess = DecodeSession(params, cfg, strategy=strategy, settings=settings,
+                         spa_proxies=spa_proxies)
+    return sess.prefill(prompt, gen_len, use_cache=use_cache)
 
 
 def decode(params: Params, cfg: ModelConfig, prompt: jax.Array,
            gen_len: int, settings: Optional[DecodeSettings] = None,
-           spa_proxies=None, max_steps: Optional[int] = None
+           spa_proxies=None, max_steps: Optional[int] = None,
+           strategy: Optional[CacheStrategy] = None
            ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Run the unmasking loop until every slot is committed."""
-    settings = settings or DecodeSettings()
-    if spa_proxies is None and cfg.spa.identifier == "singular":
-        spa_proxies = spa_layer.build_spa_proxies(params, cfg)
-    state = init_decode_state(cfg, params, prompt, gen_len, spa_proxies,
-                              use_cache=cfg.spa.identifier != "none")
-    step_fn = jax.jit(functools.partial(
-        serve_step, params, cfg, settings=settings,
-        spa_proxies=spa_proxies))
-    max_steps = max_steps or gen_len + 4
-    total_steps = 0
-    for _ in range(max_steps):
-        if cfg.spa.refresh_interval and total_steps and \
-                total_steps % cfg.spa.refresh_interval == 0:
-            _, cache = prefill(params, cfg, {"tokens": state.tokens},
-                               spa_proxies)
-            state = state._replace(cache=cache)
-        state, info = step_fn(state)
-        total_steps += 1
-        if int(jax.device_get(jnp.max(state.n_masked))) <= 0:
-            break
-    return state.tokens, {"steps": total_steps}
+    """Run the unmasking loop until every slot is committed.
 
+    Deprecated signature-compatible wrapper over ``DecodeSession``."""
+    from repro.dlm.session import DecodeSession
+    sess = DecodeSession(params, cfg, strategy=strategy, settings=settings,
+                         spa_proxies=spa_proxies)
+    sess.prefill(prompt, gen_len)
+    return sess.run(max_steps)
 
-# ---------------------------------------------------------------------------
-# Semi-autoregressive block decoding (Fast-dLLM / block-diffusion baseline)
-# ---------------------------------------------------------------------------
 
 def decode_semi_ar(params: Params, cfg: ModelConfig, prompt: jax.Array,
                    gen_len: int, block_len: int = 8,
                    settings: Optional[DecodeSettings] = None,
-                   spa_proxies=None):
+                   spa_proxies=None,
+                   strategy: Optional[CacheStrategy] = None):
     """Block-wise semi-AR decoding (Wu et al. 2025: Fast-dLLM; Ma et al.
     2025 family): the canvas is unmasked block-by-block left-to-right;
     within the active block tokens commit by confidence (optionally in
-    parallel). Positions outside the active block are masked out of the
-    candidate set, which is the restrictive trade-off the paper contrasts
-    with SPA-Cache's arbitrary-order updates (§2.2).
+    parallel). Positions outside the active block are excluded through
+    the session's active-position mask — the restrictive trade-off the
+    paper contrasts with SPA-Cache's arbitrary-order updates (§2.2).
 
-    Composable with the SPA cache: each block decode runs serve_step with
-    candidates restricted via the committed-ring locality of the block.
-    """
-    settings = settings or DecodeSettings()
-    if spa_proxies is None and cfg.spa.identifier == "singular":
-        spa_proxies = spa_layer.build_spa_proxies(params, cfg)
-    from repro.dlm.noise import mask_canvas
-    p_len = prompt.shape[1]
-    canvas = mask_canvas(prompt, gen_len, cfg.mask_id)
-    b = canvas.shape[0]
-    total_steps = 0
-    for block_start in range(p_len, p_len + gen_len, block_len):
-        block_end = min(block_start + block_len, p_len + gen_len)
-        # freeze positions outside the active block with a temp token,
-        # restore after the block finishes
-        frozen = canvas[:, block_end:]
-        work = canvas.at[:, block_end:].set(0)
-        use_cache = cfg.spa.identifier != "none"
-        if use_cache:
-            _, cache = prefill(params, cfg, {"tokens": work}, spa_proxies)
-        else:
-            cache = {}
-        state = DecodeState(
-            tokens=work, cache=cache, step=jnp.zeros((), jnp.int32),
-            committed=jnp.full((b, 8), -1, jnp.int32),
-            n_masked=jnp.full((b,), block_end - block_start, jnp.int32),
-            extras={})
-        step_fn = jax.jit(functools.partial(
-            serve_step, params, cfg, settings=settings,
-            spa_proxies=spa_proxies))
-        for _ in range(2 * block_len):
-            state, _ = step_fn(state)
-            total_steps += 1
-            if int(jax.device_get(jnp.max(state.n_masked))) <= 0:
-                break
-        canvas = state.tokens.at[:, block_end:].set(frozen)
-    return canvas, {"steps": total_steps}
+    Deprecated signature-compatible wrapper over
+    ``DecodeSession.run_blocks``."""
+    from repro.dlm.session import DecodeSession
+    sess = DecodeSession(params, cfg, strategy=strategy, settings=settings,
+                         spa_proxies=spa_proxies)
+    sess.prefill(prompt, gen_len)
+    return sess.run_blocks(block_len)

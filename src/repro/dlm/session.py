@@ -1,0 +1,292 @@
+"""DecodeSession — the ONE decode loop (DESIGN.md §3).
+
+Every decode surface in the repo (``decode``, ``decode_semi_ar``, the
+benchmark timing loops, ``ServingEngine``) used to hand-roll its own
+prefill + ``jax.jit(serve_step)`` + refresh loop.  ``DecodeSession``
+owns all of it:
+
+  * the canvas (tokens + active-position mask + masked counts),
+  * the strategy cache and its lifecycle (prefill / periodic refresh),
+  * the jitted step function (compiled once per (strategy, settings)),
+  * the commit policy (confidence / parallel threshold via settings),
+  * row-granular state surgery for continuous batching
+    (``replace_rows`` — swap a finished request's slot for a queued one
+    without touching sibling rows).
+
+Refresh has ONE source of truth here: ``settings.refresh_interval`` when
+non-zero, else the strategy's own ``refresh_interval`` default (which
+``strategy_from_spec`` lifts from ``cfg.spa.refresh_interval``).
+
+Typical use::
+
+    sess = DecodeSession(params, cfg, strategy=SPACache(rank=16))
+    sess.prefill(prompt, gen_len)
+    tokens, info = sess.run()
+    # or streaming:
+    for event in sess.events():
+        print(event.step, event.n_committed)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.strategy import CacheStrategy, resolve_strategy
+from repro.dlm import decoding
+from repro.dlm.decoding import DecodeSettings, DecodeState
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEvent:
+    """One refinement step's outcome, for the streaming iterator."""
+    step: int
+    n_committed: np.ndarray      # [B] tokens committed this step
+    committed: np.ndarray        # [B, ring] positions (-1 pad)
+    done: bool
+    refreshed: bool              # a full cache rebuild preceded this step
+
+
+class DecodeSession:
+    """Owns canvas, cache, jitted step, refresh and commit policy."""
+
+    def __init__(self, params: Params, cfg: ModelConfig, *,
+                 strategy: Optional[CacheStrategy] = None,
+                 settings: Optional[DecodeSettings] = None,
+                 spa_proxies=None):
+        self.params = params
+        self.cfg = cfg
+        self.strategy = resolve_strategy(cfg, strategy)
+        self.settings = settings or DecodeSettings()
+        # ONE source of truth for periodic refresh (see module docstring).
+        self.refresh_interval = (self.settings.refresh_interval
+                                 or self.strategy.refresh_interval)
+        if spa_proxies is None:
+            spa_proxies = self.strategy.build_proxies(params, cfg)
+        self.spa_proxies = spa_proxies
+        self._step_fn = jax.jit(functools.partial(
+            decoding.serve_step, params, cfg, settings=self.settings,
+            spa_proxies=spa_proxies, strategy=self.strategy))
+        self.state: Optional[DecodeState] = None
+        self.steps_taken = 0
+        self.refresh_count = 0
+        self._last_step_refreshed = False
+        self._gen_span: Optional[Tuple[int, int]] = None  # semi-AR bounds
+
+    # ------------------------------------------------------------------
+    # State construction
+    # ------------------------------------------------------------------
+
+    def prefill(self, prompt: jax.Array, gen_len: int, *,
+                use_cache: bool = True,
+                extras: Optional[Dict[str, jax.Array]] = None
+                ) -> DecodeState:
+        """Build the canvas (prompt + gen_len [MASK] slots) and run the
+        full prefill forward that populates the strategy's caches."""
+        from repro.dlm.noise import mask_canvas
+        canvas = mask_canvas(prompt, gen_len, self.cfg.mask_id)
+        b, n = canvas.shape
+        p_len = int(prompt.shape[1])
+        active = jnp.zeros((b, n), bool).at[:, p_len:].set(True)
+        n_masked = jnp.full((b,), gen_len, jnp.int32)
+        state = self.attach(canvas, active=active, n_masked=n_masked,
+                            extras=extras, use_cache=use_cache)
+        self._gen_span = (p_len, p_len + gen_len)
+        return state
+
+    def attach(self, tokens: jax.Array, *,
+               active: Optional[jax.Array] = None,
+               n_masked: Optional[jax.Array] = None,
+               extras: Optional[Dict[str, jax.Array]] = None,
+               use_cache: bool = True) -> DecodeState:
+        """Adopt an externally built canvas (serving engine path)."""
+        tokens = jnp.asarray(tokens)
+        b = tokens.shape[0]
+        if active is None:
+            active = jnp.ones_like(tokens, bool)
+        if n_masked is None:
+            n_masked = jnp.sum(
+                jnp.logical_and(tokens == self.cfg.mask_id, active),
+                axis=-1).astype(jnp.int32)
+        extras = extras or {}
+        cache = self._build_cache(tokens, extras) if use_cache else {}
+        ring = self.settings.commit_ring
+        self.state = DecodeState(
+            tokens=tokens, cache=cache, step=jnp.zeros((), jnp.int32),
+            committed=jnp.full((b, ring), -1, jnp.int32),
+            n_masked=n_masked, active=active, extras=extras)
+        self.steps_taken = 0
+        self.refresh_count = 0
+        self._gen_span = None     # run_blocks needs a prefill()'d canvas
+        return self.state
+
+    def _build_cache(self, tokens, extras):
+        if not self.strategy.uses_cache:
+            return {}
+        inputs = dict(extras)
+        inputs["tokens"] = tokens
+        _, cache = decoding.prefill(self.params, self.cfg, inputs,
+                                    self.spa_proxies, self.strategy)
+        return cache
+
+    # ------------------------------------------------------------------
+    # Stepping
+    # ------------------------------------------------------------------
+
+    def refresh(self) -> None:
+        """Full cache rebuild from the current canvas."""
+        if not self.strategy.uses_cache or self.state is None:
+            return
+        cache = self._build_cache(self.state.tokens, self.state.extras)
+        self.state = self.state._replace(cache=cache)
+        self.refresh_count += 1
+
+    def _maybe_refresh(self) -> bool:
+        if (self.refresh_interval and self.steps_taken
+                and self.steps_taken % self.refresh_interval == 0):
+            self.refresh()
+            return True
+        return False
+
+    def step(self) -> Dict[str, jax.Array]:
+        """One jitted refinement step (auto-refresh applied first)."""
+        assert self.state is not None, "call prefill()/attach() first"
+        self._last_step_refreshed = self._maybe_refresh()
+        self.state, info = self._step_fn(self.state)
+        self.steps_taken += 1
+        return info
+
+    @property
+    def done(self) -> bool:
+        return int(jax.device_get(jnp.max(self.state.n_masked))) <= 0
+
+    @property
+    def tokens(self) -> jax.Array:
+        return self.state.tokens
+
+    def run(self, max_steps: Optional[int] = None
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Step until every active slot is committed (or max_steps)."""
+        assert self.state is not None, "call prefill()/attach() first"
+        if max_steps is None:
+            max_steps = int(jax.device_get(
+                jnp.max(self.state.n_masked))) + 4
+        n = 0
+        for _ in range(max_steps):
+            self.step()
+            n += 1
+            if self.done:
+                break
+        return self.state.tokens, {"steps": n,
+                                   "refreshes": self.refresh_count}
+
+    def events(self, max_steps: Optional[int] = None
+               ) -> Iterator[StepEvent]:
+        """Streaming iterator: yields a StepEvent after every step."""
+        assert self.state is not None, "call prefill()/attach() first"
+        if max_steps is None:
+            max_steps = int(jax.device_get(
+                jnp.max(self.state.n_masked))) + 4
+        for _ in range(max_steps):
+            info = self.step()
+            done = self.done
+            yield StepEvent(
+                step=self.steps_taken,
+                n_committed=np.asarray(info["n_committed"]),
+                committed=np.asarray(self.state.committed),
+                done=done, refreshed=self._last_step_refreshed)
+            if done:
+                break
+
+    # ------------------------------------------------------------------
+    # Active-position control (semi-AR blocks, serving slots)
+    # ------------------------------------------------------------------
+
+    def set_active(self, active: jax.Array) -> None:
+        """Replace the commit mask; recounts open slots from the canvas."""
+        assert self.state is not None
+        n_masked = jnp.sum(
+            jnp.logical_and(self.state.tokens == self.cfg.mask_id, active),
+            axis=-1).astype(jnp.int32)
+        self.state = self.state._replace(active=active, n_masked=n_masked)
+
+    def set_active_span(self, start: int, stop: int) -> None:
+        b, n = self.state.tokens.shape
+        active = jnp.zeros((b, n), bool).at[:, start:stop].set(True)
+        self.set_active(active)
+
+    def run_blocks(self, block_len: int,
+                   max_steps_per_block: Optional[int] = None
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Semi-AR block schedule: activate ``block_len``-wide windows
+        left-to-right over the generation span, refreshing the cache at
+        each block boundary (the committed block changes every row's
+        context)."""
+        assert self._gen_span is not None, "run_blocks needs prefill()"
+        start, stop = self._gen_span
+        total = 0
+        for blk_start in range(start, stop, block_len):
+            blk_end = min(blk_start + block_len, stop)
+            self.set_active_span(blk_start, blk_end)
+            if blk_start > start:
+                self.refresh()
+            cap = max_steps_per_block or 2 * block_len
+            _, info = self.run(max_steps=cap)
+            total += info["steps"]
+        self.set_active_span(start, stop)
+        return self.state.tokens, {"steps": total,
+                                   "refreshes": self.refresh_count}
+
+    # ------------------------------------------------------------------
+    # Row surgery (continuous batching)
+    # ------------------------------------------------------------------
+
+    def replace_rows(self, rows: Sequence[int], row_tokens: np.ndarray,
+                     row_active: np.ndarray,
+                     row_extras: Optional[Dict[str, np.ndarray]] = None
+                     ) -> None:
+        """Swap canvas rows in-place and re-prefill ONLY those rows.
+
+        The fresh cache is computed with a prefill over just the swapped
+        rows (prefill is row-independent, so the per-row results match a
+        full static-batch prefill — asserted byte-for-byte by the
+        continuous-batching parity test) and spliced into the running
+        cache at those batch rows — sibling rows keep their evolved
+        partially-updated caches.
+        """
+        assert self.state is not None
+        idx = jnp.asarray(list(rows), jnp.int32)
+        row_tokens = jnp.asarray(row_tokens)
+        tokens = self.state.tokens.at[idx].set(row_tokens)
+        active = self.state.active.at[idx].set(jnp.asarray(row_active))
+        extras = dict(self.state.extras)
+        for k, v in (row_extras or {}).items():
+            extras[k] = extras[k].at[idx].set(jnp.asarray(v))
+        sub_extras = {k: v[idx] for k, v in extras.items()}
+        n_masked = jnp.sum(
+            jnp.logical_and(tokens == self.cfg.mask_id, active),
+            axis=-1).astype(jnp.int32)
+        committed = self.state.committed.at[idx].set(-1)
+        cache = self.state.cache
+        if self.strategy.uses_cache and cache:
+            fresh = self._build_cache(row_tokens, sub_extras)
+            cache = jax.tree.map(
+                lambda old, new: old.at[:, idx].set(new), cache, fresh)
+        self.state = self.state._replace(
+            tokens=tokens, active=active, n_masked=n_masked,
+            committed=committed, cache=cache, extras=extras)
+
+    def deactivate_rows(self, rows: Sequence[int]) -> None:
+        """Park finished slots with no replacement request."""
+        assert self.state is not None
+        idx = jnp.asarray(list(rows), jnp.int32)
+        active = self.state.active.at[idx].set(False)
+        n_masked = self.state.n_masked.at[idx].set(0)
+        self.state = self.state._replace(active=active, n_masked=n_masked)

@@ -90,6 +90,7 @@ def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
         step=jax.ShapeDtypeStruct((), jnp.int32),
         committed=jax.ShapeDtypeStruct((b, 8), jnp.int32),
         n_masked=jax.ShapeDtypeStruct((b,), jnp.int32),
+        active=jax.ShapeDtypeStruct((b, n_text), jnp.bool_),
         extras=extras,
     )
 
@@ -152,6 +153,7 @@ def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh):
         step=shd.replicated(mesh),
         committed=shd.replicated(mesh),   # tiny ring buffer
         n_masked=shd.replicated(mesh),
+        active=jax.NamedSharding(mesh, shd.data_pspec(shape, mesh, 2)),
         extras={k: jax.NamedSharding(mesh,
                                      shd.data_pspec(shape, mesh, v.ndim))
                 for k, v in abs_state.extras.items()},
@@ -167,6 +169,10 @@ def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh):
         step=shd.replicated(mesh),
         committed=shd.replicated(mesh),
         n_masked=shd.replicated(mesh),
+        active=jax.NamedSharding(mesh, shd.data_pspec(shape, mesh, 2)),
+        extras={k: jax.NamedSharding(mesh,
+                                     shd.data_pspec(shape, mesh, v.ndim))
+                for k, v in abs_out[0].extras.items()},
     ), jax.tree.map(lambda _: shd.replicated(mesh), abs_out[1]))
     return fn, (abs_p, abs_state, abs_prox), in_sh, (1,), out_sh
 
@@ -232,11 +238,12 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     if shape.kind == "prefill":
         return 2.0 * p_active * shape.global_batch * shape.seq_len
     # decode: sparse rows per layer (mean k over layers)
-    ks = budget.k_schedule(cfg.spa, cfg.n_layers, shape.seq_len)
-    if cfg.spa.identifier == "none":
+    from repro.core.strategy import strategy_from_config
+    strat = strategy_from_config(cfg)
+    if not strat.uses_cache:
         mean_k = shape.seq_len
     else:
-        mean_k = float(np.mean(ks))
+        mean_k = float(np.mean(strat.k_schedule(cfg, shape.seq_len)))
     return 2.0 * p_active * shape.global_batch * mean_k
 
 
@@ -274,9 +281,10 @@ def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig,
         cache = b * n * cache_tok * L / n_chips
         return act + p_bytes + cache
     # decode: sparse rows + identification + cache traffic
-    from repro.core import budget as budget_lib
-    ks = budget_lib.k_schedule(cfg.spa, L, n)
-    mean_k = float(np.mean(ks)) if cfg.spa.identifier != "none" else n
+    from repro.core.strategy import strategy_from_config
+    strat = strategy_from_config(cfg)
+    mean_k = (float(np.mean(strat.k_schedule(cfg, n)))
+              if strat.uses_cache else n)
     tok_dev = b * n / n_chips
     ident = tok_dev * d * act_bytes * L * 2.0          # read h + proxy mm
     rows = b * mean_k * d * act_bytes * L * 6.0 / n_chips

@@ -1,18 +1,24 @@
 """Serving launcher: run the batched SPA-Cache engine on a model
 checkpoint (or a freshly initialized reduced model for demo purposes).
 
+The caching policy is selected per run with ``--strategy`` (any
+registered CacheStrategy identifier: singular, value, window, attn_out,
+none, ...) without touching the model config.
+
   PYTHONPATH=src python -m repro.launch.serve --arch llada-8b \
-      --requests 8 --gen-len 16
+      --requests 8 --gen-len 16 --strategy singular
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 
 import jax
 import numpy as np
 
 from repro.configs import get_arch, reduced
+from repro.core.strategy import REGISTRY, strategy_from_spec
 from repro.dlm.decoding import DecodeSettings
 from repro.models import transformer
 from repro.serving.engine import ServingEngine
@@ -28,6 +34,11 @@ def main(argv=None):
     ap.add_argument("--canvas", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--parallel-threshold", type=float, default=0.0)
+    ap.add_argument("--strategy", default="",
+                    choices=[""] + sorted(REGISTRY),
+                    help="cache strategy override (default: cfg.spa)")
+    ap.add_argument("--static-batching", action="store_true",
+                    help="disable step-granular continuous batching")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_arch(args.arch))
@@ -42,8 +53,14 @@ def main(argv=None):
         print(f"{cfg.name} is encoder-only; no decode serving path")
         return 0
 
+    strategy = None
+    if args.strategy:
+        strategy = strategy_from_spec(
+            dataclasses.replace(cfg.spa, identifier=args.strategy))
+
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
+        strategy=strategy, continuous=not args.static_batching,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
@@ -55,6 +72,7 @@ def main(argv=None):
     stats = engine.run()
     print(f"served {stats.requests_done} requests, "
           f"{stats.tokens_committed} tokens, {stats.steps} steps, "
+          f"{stats.swaps} slot swaps, "
           f"{stats.tps(engine._wall):.1f} tok/s")
     for req in engine.done[:3]:
         print(f"  req {req.uid}: out={req.output[:10]}...")

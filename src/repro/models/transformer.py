@@ -153,45 +153,19 @@ def apply_ffn_or_moe(bp: Params, x: jax.Array, cfg: ModelConfig
     return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
 
 
-def _block_proxy(cfg: ModelConfig, bp: Params, proxy_mat, h_in, x,
-                 attn_out, h_out):
-    """Identifier vectors for prefill cache construction (see
-    core.identifiers). Computed in-block so prefill never materializes
-    raw layer inputs across layers.
-
-    Projection-based identifiers use h * (1 + norm_weight) WITHOUT the
-    rms division: cosine drift is invariant to per-row scale, and using
-    the same formula as the serve path makes unchanged rows score
-    cosine == 1.0 bit-exactly (stable top-k ties)."""
-    ident = cfg.spa.identifier
-    scaled = None
-    if ident in ("singular", "value", "query", "key"):
-        scaled = h_in * (1.0 + bp["norm1"]).astype(h_in.dtype)
-    if ident == "singular":
-        return scaled @ proxy_mat
-    if ident == "value":
-        return scaled @ bp["wv"]
-    if ident == "query":
-        return scaled @ bp["wq"]
-    if ident == "key":
-        return scaled @ bp["wk"]
-    if ident == "attn_in":
-        return x
-    if ident == "attn_out":
-        return attn_out
-    return None  # none / window
-
-
 def apply_block_dense(cfg: ModelConfig, kind: str, bp: Params,
                       h: jax.Array, *, collect_cache: bool = False,
-                      proxy_mat: Optional[jax.Array] = None
+                      proxy_mat: Optional[jax.Array] = None,
+                      strategy=None
                       ) -> Tuple[jax.Array, jax.Array,
                                  Optional[Dict[str, jax.Array]]]:
     """One transformer block over the full sequence.
 
     Returns (h_out, aux_loss, cache_entries or None). cache_entries has
-    raw (unquantized) k/v/h/proxy tensors; the caller quantizes via
-    ``cache.fill_from_prefill``.
+    raw (unquantized) k/v/h/proxy tensors built per the CacheStrategy
+    (``strategy.prefill_proxy``, computed in-block so prefill never
+    materializes raw layer inputs across layers); the caller quantizes
+    via ``cache.fill_from_prefill``.
     """
     b, n, _ = h.shape
     aux = jnp.zeros((), jnp.float32)
@@ -219,9 +193,11 @@ def apply_block_dense(cfg: ModelConfig, kind: str, bp: Params,
                                       cfg.norm_eps)
         h_out = h_mid + ffn_out
         if collect_cache:
+            from repro.core.strategy import resolve_strategy
+            strat = resolve_strategy(cfg, strategy)
             entries = {"k": k, "v": v, "h": h_out}
-            prox = _block_proxy(cfg, bp, proxy_mat, h, x, attn_out,
-                                h_out)
+            prox = strat.prefill_proxy(bp, proxy_mat, h, x, attn_out,
+                                       h_out)
             if prox is not None:
                 entries["proxy"] = prox
     elif kind == RGLRU:
@@ -275,7 +251,8 @@ def _slice_kind_stacks(cfg: ModelConfig, blocks: Params, n_full: int):
 
 
 def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
-                   *, collect_cache: bool = False, spa_proxies=None
+                   *, collect_cache: bool = False, spa_proxies=None,
+                   strategy=None
                    ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Run all blocks. Returns (h, total_aux, caches).
 
@@ -322,7 +299,7 @@ def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
                 used[kind] += 1
                 h_c, aux, entries = apply_block_dense(
                     cfg, kind, bp, h_c, collect_cache=collect_cache,
-                    proxy_mat=pm)
+                    proxy_mat=pm, strategy=strategy)
                 aux_c = aux_c + aux
                 if collect_cache and entries is not None:
                     ys.setdefault(kind, []).append(entries)
@@ -357,7 +334,7 @@ def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
             else:
                 h, aux, entries = apply_block_dense(
                     cfg, kind, bp, h, collect_cache=collect_cache,
-                    proxy_mat=pm)
+                    proxy_mat=pm, strategy=strategy)
             aux_total = aux_total + aux
             if collect_cache and entries is not None:
                 caches[kind].append(entries)
@@ -367,7 +344,8 @@ def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
         bp = jax.tree.map(lambda a: a[cfg.kind_index(l)], blocks[kind])
         h, aux, entries = apply_block_dense(
             cfg, kind, bp, h, collect_cache=collect_cache,
-            proxy_mat=_prox_slice(kind, cfg.kind_index(l)))
+            proxy_mat=_prox_slice(kind, cfg.kind_index(l)),
+            strategy=strategy)
         aux_total = aux_total + aux
         if collect_cache and entries is not None and kind in caches:
             caches[kind].append(entries)

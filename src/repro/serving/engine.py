@@ -1,25 +1,36 @@
-"""Batched DLM serving engine with SPA-Cache.
+"""Batched DLM serving engine on DecodeSession (DESIGN.md §3.2).
 
-Requests (prompt + gen_len) are padded onto a fixed canvas, batched up to
-``max_batch``, prefilled once, then refined step-by-step with the SPA
-sparse update; finished sequences are swapped out and pending requests
-swapped in (continuous batching at step granularity).
+Requests (prompt + gen_len + optional per-request DecodeSettings) are
+padded onto fixed canvas rows and served by a ``DecodeSession`` at
+**step granularity**: when a row finishes, its slot is swapped for the
+next queued request mid-loop (``DecodeSession.replace_rows``) while
+sibling rows keep stepping with their evolved caches — no whole-batch
+re-prefill barrier.
+
+Because the jitted step closes over ``DecodeSettings`` statically, the
+queue is partitioned into *lanes* by settings: a lane's batch only ever
+admits requests with identical settings (one compiled step per lane).
+Within a lane, rows are independent (attention, top-k selection and
+commits are all per-row), so continuous batching is byte-identical to
+serving the same requests in static batches — asserted by
+``tests/test_strategy_parity.py``.
+
+Slot bookkeeping uses the session's explicit active-position mask;
+token ids are never overloaded as "committed filler" sentinels.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from collections import deque
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import spa_layer
-from repro.dlm import decoding
+from repro.core.strategy import CacheStrategy, resolve_strategy
+from repro.dlm.decoding import DecodeSettings
+from repro.dlm.session import DecodeSession
 
 
 @dataclasses.dataclass
@@ -27,6 +38,7 @@ class Request:
     uid: int
     prompt: np.ndarray              # [P] int32
     gen_len: int
+    settings: Optional[DecodeSettings] = None
     submitted_at: float = dataclasses.field(default_factory=time.time)
     completed_at: Optional[float] = None
     output: Optional[np.ndarray] = None
@@ -37,6 +49,7 @@ class EngineStats:
     steps: int = 0
     tokens_committed: int = 0
     requests_done: int = 0
+    swaps: int = 0                  # mid-loop slot replacements
 
     def tps(self, wall: float) -> float:
         return self.tokens_committed / max(wall, 1e-9)
@@ -45,77 +58,130 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  canvas_len: int = 64,
-                 settings: Optional[decoding.DecodeSettings] = None):
+                 settings: Optional[DecodeSettings] = None,
+                 strategy: Optional[CacheStrategy] = None,
+                 continuous: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.canvas_len = canvas_len
-        self.settings = settings or decoding.DecodeSettings()
-        self.proxies = spa_layer.build_spa_proxies(params, cfg)
+        self.settings = settings or DecodeSettings()
+        self.strategy = resolve_strategy(cfg, strategy)
+        self.continuous = continuous
+        self.proxies = self.strategy.build_proxies(params, cfg)
         self.queue: deque[Request] = deque()
         self.done: List[Request] = []
         self.stats = EngineStats()
-        self._step_fn = jax.jit(functools.partial(
-            decoding.serve_step, params, cfg, settings=self.settings,
-            spa_proxies=self.proxies))
+        self._sessions: Dict[DecodeSettings, DecodeSession] = {}
 
-    def submit(self, prompt: np.ndarray, gen_len: int) -> int:
+    def submit(self, prompt: np.ndarray, gen_len: int,
+               settings: Optional[DecodeSettings] = None) -> int:
         uid = len(self.done) + len(self.queue)
         self.queue.append(Request(uid, np.asarray(prompt, np.int32),
-                                  gen_len))
+                                  gen_len, settings))
         return uid
 
-    def _make_batch(self) -> List[Request]:
-        batch = []
-        while self.queue and len(batch) < self.max_batch:
-            batch.append(self.queue.popleft())
-        return batch
+    # ------------------------------------------------------------------
 
-    def _canvas_for(self, batch: List[Request]) -> jnp.ndarray:
+    def _session_for(self, settings: DecodeSettings) -> DecodeSession:
+        if settings not in self._sessions:
+            self._sessions[settings] = DecodeSession(
+                self.params, self.cfg, strategy=self.strategy,
+                settings=settings, spa_proxies=self.proxies)
+        return self._sessions[settings]
+
+    def _pop_matching(self, settings: DecodeSettings, k: int
+                      ) -> List[Request]:
+        """Dequeue up to k requests whose settings match the lane."""
+        taken, keep = [], deque()
+        while self.queue and len(taken) < k:
+            req = self.queue.popleft()
+            if (req.settings or self.settings) == settings:
+                taken.append(req)
+            else:
+                keep.append(req)
+        keep.extend(self.queue)
+        self.queue = keep
+        return taken
+
+    def _canvas_row(self, req: Request):
+        """(tokens [N], active [N], prompt_len) for one slot."""
         mask_id = self.cfg.mask_id
-        canvas = np.full((len(batch), self.canvas_len), mask_id,
-                         np.int32)
-        for i, req in enumerate(batch):
-            p = req.prompt[: self.canvas_len - req.gen_len]
-            canvas[i, : len(p)] = p
-            # positions after prompt+gen stay masked but are not required
-            end = len(p) + req.gen_len
-            canvas[i, end:] = 0  # pad with token 0 (committed filler)
-        return jnp.asarray(canvas)
+        row = np.full((self.canvas_len,), mask_id, np.int32)
+        p = req.prompt[: self.canvas_len - req.gen_len]
+        row[: len(p)] = p
+        active = np.zeros((self.canvas_len,), bool)
+        active[len(p): len(p) + req.gen_len] = True
+        return row, active, len(p)
+
+    def _harvest(self, req: Request, toks_row: np.ndarray,
+                 p_len: int) -> None:
+        req.output = toks_row[p_len: p_len + req.gen_len]
+        req.completed_at = time.time()
+        self.done.append(req)
+        self.stats.requests_done += 1
+
+    # ------------------------------------------------------------------
 
     def run(self, max_steps: int = 256) -> EngineStats:
         t0 = time.time()
         while self.queue:
-            batch = self._make_batch()
-            canvas = self._canvas_for(batch)
-            use_cache = self.cfg.spa.identifier != "none"
-            if use_cache:
-                _, cache = decoding.prefill(
-                    self.params, self.cfg, {"tokens": canvas},
-                    self.proxies)
-            else:
-                cache = {}
-            n_masked = jnp.asarray(
-                [min(r.gen_len, self.canvas_len - len(r.prompt))
-                 for r in batch], jnp.int32)
-            state = decoding.DecodeState(
-                tokens=canvas, cache=cache,
-                step=jnp.zeros((), jnp.int32),
-                committed=jnp.full((len(batch), 8), -1, jnp.int32),
-                n_masked=n_masked)
-            for _ in range(max_steps):
-                state, info = self._step_fn(state)
-                self.stats.steps += 1
-                self.stats.tokens_committed += int(
-                    jnp.sum(info["n_committed"]))
-                if int(jax.device_get(jnp.max(state.n_masked))) <= 0:
-                    break
-            toks = np.asarray(state.tokens)
-            for i, req in enumerate(batch):
-                start = len(req.prompt)
-                req.output = toks[i, start: start + req.gen_len]
-                req.completed_at = time.time()
-                self.done.append(req)
-                self.stats.requests_done += 1
+            lane = self.queue[0].settings or self.settings
+            self._run_lane(lane, max_steps)
         self._wall = time.time() - t0
         return self.stats
+
+    def _run_lane(self, settings: DecodeSettings, max_steps: int) -> None:
+        batch = self._pop_matching(settings, self.max_batch)
+        if not batch:
+            return
+        sess = self._session_for(settings)
+        rows = [self._canvas_row(r) for r in batch]
+        tokens = np.stack([r[0] for r in rows])
+        active = np.stack([r[1] for r in rows])
+        slots: List[Optional[Request]] = list(batch)
+        p_lens: List[int] = [r[2] for r in rows]
+        ages = [0] * len(batch)        # max_steps budget is PER REQUEST
+        sess.attach(tokens, active=active)
+
+        while any(s is not None for s in slots):
+            info = sess.step()
+            self.stats.steps += 1
+            self.stats.tokens_committed += int(
+                np.sum(np.asarray(info["n_committed"])))
+            n_masked = np.asarray(sess.state.n_masked)
+            finished = []
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                ages[i] += 1
+                # a request that exhausts its own step budget is
+                # harvested as-is (same semantics as the old
+                # run-to-max_steps static batch loop)
+                if n_masked[i] <= 0 or ages[i] >= max_steps:
+                    finished.append(i)
+            if not finished:
+                continue
+            toks = np.asarray(sess.tokens)
+            swap_rows, swap_tokens, swap_active = [], [], []
+            for i in finished:
+                self._harvest(slots[i], toks[i], p_lens[i])
+                slots[i] = None
+                nxt = (self._pop_matching(settings, 1)
+                       if self.continuous else [])
+                if nxt:
+                    req = nxt[0]
+                    row, act, p_len = self._canvas_row(req)
+                    slots[i] = req
+                    p_lens[i] = p_len
+                    ages[i] = 0
+                    swap_rows.append(i)
+                    swap_tokens.append(row)
+                    swap_active.append(act)
+            if swap_rows:
+                sess.replace_rows(swap_rows, np.stack(swap_tokens),
+                                  np.stack(swap_active))
+                self.stats.swaps += len(swap_rows)
+            parked = [i for i in finished if i not in swap_rows]
+            if parked:
+                sess.deactivate_rows(parked)

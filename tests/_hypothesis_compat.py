@@ -1,0 +1,71 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The property tests (`test_budget`, `test_cache`, `test_selection`,
+`test_svd_proxy`) are written against the hypothesis API, but the
+dependency is optional in this environment. When hypothesis is
+installed it is used directly; otherwise a tiny seeded-random fallback
+provides the same surface (``given``, ``settings``, ``st.integers``,
+``st.floats``) so the tier-1 suite collects and runs without it.
+
+The fallback always exercises the all-min and all-max boundary tuples
+first, then ``max_examples`` seeded-random draws — deterministic across
+runs, no shrinking.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample, low, high):
+            self._sample = sample
+            self.low = low
+            self.high = high
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             min_value, max_value)
+
+    st = _StrategiesModule()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest would introspect the
+            # wrapped signature and treat the generated args as fixtures.
+            def wrapper():
+                n = getattr(fn, "_compat_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                fn(*[s.low for s in strats])
+                fn(*[s.high for s in strats])
+                for _ in range(n):
+                    fn(*[s.sample(rng) for s in strats])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

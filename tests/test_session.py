@@ -1,0 +1,114 @@
+"""DecodeSession behaviour: refresh single-source-of-truth, streaming
+events, active-position masks, semi-AR block schedule."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.strategy import SPACache
+from repro.dlm.decoding import DecodeSettings
+from repro.dlm.session import DecodeSession, StepEvent
+from repro.models import transformer
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("internlm2-1.8b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 10), 0,
+                                cfg.vocab_size - 1)
+    return cfg, params, prompt
+
+
+def test_settings_refresh_interval_fires(small):
+    """DecodeSettings.refresh_interval is honoured (it used to be dead:
+    decode() read only cfg.spa.refresh_interval)."""
+    cfg, params, prompt = small
+    assert cfg.spa.refresh_interval == 0      # config says never
+    sess = DecodeSession(params, cfg,
+                         settings=DecodeSettings(refresh_interval=2))
+    sess.prefill(prompt, gen_len=6)
+    toks, info = sess.run()
+    assert int((toks == cfg.mask_id).sum()) == 0
+    # steps 2 and 4 (at least) trigger a rebuild
+    assert sess.refresh_count == (info["steps"] - 1) // 2
+    assert sess.refresh_count >= 1
+
+
+def test_strategy_refresh_interval_is_fallback(small):
+    """With settings.refresh_interval == 0 the strategy default applies."""
+    cfg, params, prompt = small
+    sess = DecodeSession(
+        params, cfg,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=3))
+    assert sess.refresh_interval == 3
+    sess.prefill(prompt, gen_len=6)
+    sess.run()
+    assert sess.refresh_count >= 1
+
+
+def test_settings_override_strategy_refresh(small):
+    cfg, params, prompt = small
+    sess = DecodeSession(
+        params, cfg,
+        strategy=SPACache(rank=16, refresh_interval=3),
+        settings=DecodeSettings(refresh_interval=5))
+    assert sess.refresh_interval == 5         # one source of truth
+
+
+def test_events_stream(small):
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg)
+    sess.prefill(prompt, gen_len=5)
+    events = list(sess.events())
+    assert all(isinstance(e, StepEvent) for e in events)
+    assert events[-1].done
+    assert sum(int(e.n_committed.sum()) for e in events) == 2 * 5
+    assert [e.step for e in events] == list(range(1, len(events) + 1))
+
+
+def test_active_mask_restricts_commits(small):
+    """Positions outside the active mask are never committed, even though
+    they hold [MASK] tokens — no token-id sentinel hacks."""
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg)
+    sess.prefill(prompt, gen_len=8)
+    p_len = prompt.shape[1]
+    sess.set_active_span(p_len, p_len + 4)    # only first 4 slots open
+    toks, _ = sess.run()
+    toks = np.asarray(toks)
+    assert (toks[:, p_len: p_len + 4] != cfg.mask_id).all()
+    assert (toks[:, p_len + 4:] == cfg.mask_id).all()
+
+
+def test_run_blocks_commits_left_to_right(small):
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg)
+    sess.prefill(prompt, gen_len=8)
+    toks, info = sess.run_blocks(block_len=4)
+    assert int((np.asarray(toks) == cfg.mask_id).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(toks[:, :10]),
+                                  np.asarray(prompt))
+    # block boundaries trigger cache refreshes (one per non-first block)
+    assert sess.refresh_count >= 1
+
+
+def test_token_zero_is_a_legal_output(small):
+    """Token id 0 must survive as a committed value (the old engine used
+    it as a 'committed filler' sentinel)."""
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg)
+    state = sess.prefill(prompt, gen_len=4)
+    # plant a committed token 0 inside the generation span
+    p_len = prompt.shape[1]
+    tokens = state.tokens.at[:, p_len].set(0)
+    sess.state = state._replace(
+        tokens=tokens, n_masked=state.n_masked - 1)
+    toks, _ = sess.run()
+    toks = np.asarray(toks)
+    assert (toks[:, p_len] == 0).all()        # not clobbered
+    assert int((toks == cfg.mask_id).sum()) == 0

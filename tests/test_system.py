@@ -23,10 +23,10 @@ def trained():
     cfg = reduced(get_arch("internlm2-1.8b"), vocab_size=64, d_model=64,
                   n_layers=2, d_ff=128)
     trainer = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=5,
-                                       total_steps=80)).init(
+                                       total_steps=220)).init(
         jax.random.PRNGKey(0))
     data = token_batches(cfg, batch_size=8, seq_len=32, seed=0)
-    hist = trainer.fit(data, n_steps=50, rng=jax.random.PRNGKey(1),
+    hist = trainer.fit(data, n_steps=200, rng=jax.random.PRNGKey(1),
                        log_every=0)
     return cfg, trainer.params, hist
 

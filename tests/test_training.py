@@ -56,10 +56,10 @@ def test_loss_decreases_tiny_training():
     cfg = reduced(get_arch("internlm2-1.8b"), vocab_size=64, d_model=64,
                   d_ff=128)
     trainer = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=5,
-                                       total_steps=60)).init(
+                                       total_steps=180)).init(
         jax.random.PRNGKey(0))
     data = token_batches(cfg, batch_size=8, seq_len=32, seed=0)
-    hist = trainer.fit(data, n_steps=40, rng=jax.random.PRNGKey(1),
+    hist = trainer.fit(data, n_steps=160, rng=jax.random.PRNGKey(1),
                        log_every=0)
     first = np.mean(hist["loss"][:5])
     last = np.mean(hist["loss"][-5:])
