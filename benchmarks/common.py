@@ -47,27 +47,43 @@ def with_spa(cfg: ModelConfig, **kw) -> ModelConfig:
 
 
 def time_decode(cfg, params, prompt, gen_len, settings=None, reps=1,
-                strategy=None) -> Dict[str, float]:
+                strategy=None, scheduler=None,
+                compiled: bool = False) -> Dict[str, float]:
     """Returns tokens/s and time-to-first-step for a decode run.
 
-    ``strategy`` (a ``CacheStrategy``) overrides ``cfg.spa`` at call
-    time — the benchmarks compare caching policies on ONE ModelConfig."""
+    ``strategy`` (a ``CacheStrategy``) overrides ``cfg.spa`` and
+    ``scheduler`` (an ``UnmaskScheduler``) overrides the settings
+    commit knobs at call time — the benchmarks compare caching and
+    commit policies on ONE ModelConfig.  ``compiled=True`` times the
+    device-resident ``run_compiled`` loop instead of the host loop."""
     from repro.dlm.session import DecodeSession
     sess = DecodeSession(params, cfg, strategy=strategy,
-                         settings=settings)
-    t0 = time.perf_counter()
-    sess.prefill(prompt, gen_len)
-    sess.step()                        # compile + first step
-    jax.block_until_ready(sess.tokens)
-    ttft = time.perf_counter() - t0
+                         settings=settings, scheduler=scheduler)
+    if compiled:
+        t0 = time.perf_counter()
+        sess.prefill(prompt, gen_len)
+        sess.run_compiled(max_steps=1)     # compile + first step
+        jax.block_until_ready(sess.tokens)
+        ttft = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, info = sess.run_compiled(max_steps=gen_len * 2)
+        jax.block_until_ready(sess.tokens)
+        dt = time.perf_counter() - t0
+        n_steps = info["steps"]
+    else:
+        t0 = time.perf_counter()
+        sess.prefill(prompt, gen_len)
+        sess.step()                        # compile + first step
+        jax.block_until_ready(sess.tokens)
+        ttft = time.perf_counter() - t0
 
-    n_steps = 0
-    t0 = time.perf_counter()
-    while not sess.done and n_steps < gen_len * 2:
-        sess.step()
-        n_steps += 1
-    jax.block_until_ready(sess.tokens)
-    dt = time.perf_counter() - t0
+        n_steps = 0
+        t0 = time.perf_counter()
+        while not sess.done and n_steps < gen_len * 2:
+            sess.step()
+            n_steps += 1
+        jax.block_until_ready(sess.tokens)
+        dt = time.perf_counter() - t0
     committed = gen_len * prompt.shape[0] - int(
         jnp.sum(jnp.maximum(sess.state.n_masked, 0)))
     return {

@@ -1,6 +1,12 @@
 """Paper Figure 4: component-wise latency decomposition of one serve
 layer — identification vs attention vs FFN — for the vanilla / value-proxy
-/ singular-proxy variants. Measured on jitted per-component functions."""
+/ singular-proxy variants. Measured on jitted per-component functions.
+
+Also measures the decode-LOOP overhead: per-step latency of the host
+step loop (one jitted step dispatch + one ``n_masked`` host sync per
+step) vs ``DecodeSession.run_compiled`` (the whole loop as a single
+``lax.while_loop``).  The delta is pure dispatch/sync cost — recorded
+in EXPERIMENTS.md §Perf."""
 from __future__ import annotations
 
 import time
@@ -25,6 +31,32 @@ def timeit(fn, *args, reps=20):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def loop_overhead(cfg, params, quick: bool = False):
+    """Mean per-step ms of the host run() loop vs run_compiled()."""
+    from repro.core.strategy import SPACache
+    from repro.dlm.session import DecodeSession
+
+    gen_len = 16 if quick else 32
+    prompt = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size - 1, (2, 16)),
+        jnp.int32)
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.25)
+    out = []
+    for name, runner in (("decode_loop_host", "run"),
+                         ("decode_loop_compiled", "run_compiled")):
+        sess = DecodeSession(params, cfg, strategy=strat)
+        sess.prefill(prompt, gen_len)
+        getattr(sess, runner)()            # compile + warm caches
+        sess.prefill(prompt, gen_len)
+        t0 = time.perf_counter()
+        _, info = getattr(sess, runner)()
+        jax.block_until_ready(sess.tokens)
+        dt = time.perf_counter() - t0
+        out.append({"component": name,
+                    "ms": round(dt * 1e3 / max(info["steps"], 1), 3)})
+    return out
 
 
 def run(quick: bool = False):
@@ -75,8 +107,10 @@ def run(quick: bool = False):
     def ffn_full(h):
         return apply_ffn_or_moe(bp, h, cfg)[0]
 
+    loop_rows = loop_overhead(cfg, params, quick=quick)
+
     reps = 5 if quick else 20
-    rows = [
+    rows = loop_rows + [
         {"component": "identify_value_proxy",
          "ms": round(timeit(ident_value, h, reps=reps), 3)},
         {"component": "identify_singular_proxy",

@@ -3,6 +3,10 @@
 ``python -m benchmarks.run``            — full pass
 ``python -m benchmarks.run --quick``    — reduced iteration counts
 ``python -m benchmarks.run --only t2``  — single benchmark
+``python -m benchmarks.run --smoke``    — CI wiring check: table2+table3
+                                          at the tiniest configs (fails
+                                          fast on strategy/scheduler
+                                          plumbing regressions)
 """
 from __future__ import annotations
 
@@ -19,7 +23,12 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="t1|t2|t3|t4|t5|fig2|fig4|fig5|roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: quick table2+table3 only (numbers are "
+                         "meaningless; exercises decode wiring)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.quick = True
 
     from benchmarks import (fig2_drift, fig4_latency, fig5_anisotropy,
                             roofline, table1_identifiers, table2_main,
@@ -35,7 +44,12 @@ def main(argv=None) -> None:
         "fig5": ("Fig 5 anisotropy", fig5_anisotropy.run),
         "roofline": ("Roofline table", roofline.run),
     }
-    names = [args.only] if args.only else list(registry)
+    if args.smoke:
+        names = ["t2", "t3"]
+    elif args.only:
+        names = [args.only]
+    else:
+        names = list(registry)
     for name in names:
         title, fn = registry[name]
         t0 = time.time()

@@ -1,12 +1,20 @@
 """Paper Table 3: SPA-Cache composed with confidence-parallel decoding
-(Fast-dLLM style) — the speedups multiply."""
+(Fast-dLLM style) — the speedups multiply.
+
+The commit policy is a call-time ``UnmaskScheduler`` (mirroring how the
+caching policy is a call-time ``CacheStrategy``): sequential vs
+parallel vs semi-AR block schedules run on ONE ModelConfig.  The last
+row times the same spa+parallel combo through the device-resident
+``run_compiled`` loop (a single ``lax.while_loop``) instead of the
+host step loop."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.dlm import decoding
+from repro.dlm.scheduler import (BlockScheduler, ConfidenceScheduler,
+                                 ParallelThresholdScheduler)
 
 
 def run(quick: bool = False):
@@ -20,20 +28,24 @@ def run(quick: bool = False):
                           schedule="adaptive", rho_peak=0.25,
                           rho_first=0.03, rho_last=0.13)
     vanilla = common.with_spa(cfg0, identifier="none")
-    seq = decoding.DecodeSettings()
-    par = decoding.DecodeSettings(parallel_threshold=0.05, max_parallel=4)
+    seq = ConfidenceScheduler()
+    par = ParallelThresholdScheduler(threshold=0.05, max_parallel=4)
+    blk = BlockScheduler(block_len=4, threshold=0.05, max_parallel=4)
 
     combos = [
-        ("baseline", vanilla, seq),
-        ("spa", spa, seq),
-        ("parallel_only", vanilla, par),
-        ("spa+parallel", spa, par),
+        ("baseline", vanilla, seq, False),
+        ("spa", spa, seq, False),
+        ("parallel_only", vanilla, par, False),
+        ("spa+parallel", spa, par, False),
+        ("spa+semi_ar_block", spa, blk, False),
+        ("spa+parallel_compiled", spa, par, True),
     ]
     base = None
     rows = []
-    for name, cfg, settings in combos:
+    for name, cfg, scheduler, compiled in combos:
         stats = common.time_decode(cfg, params, prompt, gen_len,
-                                   settings=settings)
+                                   scheduler=scheduler,
+                                   compiled=compiled)
         if name == "baseline":
             base = stats["tps"]
         rows.append({"method": name, "tps": round(stats["tps"], 2),

@@ -3,8 +3,11 @@
 the same prompt with (a) vanilla full recomputation and (b) SPA-Cache,
 printing the speedup and token agreement.
 
-The caching policy is a call-time ``CacheStrategy`` — the ModelConfig
-never changes between the two runs.
+The caching policy is a call-time ``CacheStrategy`` and the commit
+policy a call-time ``UnmaskScheduler`` — the ModelConfig never changes
+between runs.  Both decodes use ``DecodeSession.run_compiled()``: the
+whole unmasking loop is ONE ``lax.while_loop`` on device (no per-step
+Python dispatch).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,6 +23,7 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.core.strategy import NoCache, SPACache
 from repro.data.synthetic import token_batches
+from repro.dlm.scheduler import ParallelThresholdScheduler
 from repro.dlm.session import DecodeSession
 from repro.training.optimizer import AdamWConfig
 from repro.training.trainer import Trainer
@@ -47,20 +51,23 @@ def main():
     vanilla = NoCache()
     spa = SPACache(rank=16, schedule="adaptive", rho_peak=0.25,
                    rho_first=0.03, rho_last=0.13)
+    # commit up to 4 confident tokens per refinement step (Fast-dLLM)
+    scheduler = ParallelThresholdScheduler(threshold=0.3, max_parallel=4)
 
     print("\ndecoding with vanilla full recomputation ...")
     t0 = time.time()
-    sess = DecodeSession(params, cfg, strategy=vanilla)
+    sess = DecodeSession(params, cfg, strategy=vanilla,
+                         scheduler=scheduler)
     sess.prefill(prompt, gen_len)
-    toks_v, info_v = sess.run()
+    toks_v, info_v = sess.run_compiled()
     t_v = time.time() - t0
     print(f"  {info_v['steps']} steps, {t_v:.2f}s")
 
     print("decoding with SPA-Cache (singular proxy r=16, adaptive rho) ...")
     t0 = time.time()
-    sess = DecodeSession(params, cfg, strategy=spa)
+    sess = DecodeSession(params, cfg, strategy=spa, scheduler=scheduler)
     sess.prefill(prompt, gen_len)
-    toks_s, info_s = sess.run()
+    toks_s, info_s = sess.run_compiled()
     t_s = time.time() - t0
     print(f"  {info_s['steps']} steps, {t_s:.2f}s")
 

@@ -3,6 +3,11 @@
 with SPA-Cache sparse refinement, and reports throughput vs the vanilla
 engine on the same queue.
 
+Half the requests decode with a Fast-dLLM parallel-commit scheduler and
+half with a semi-AR block scheduler — per-request ``UnmaskScheduler``s
+are lane-partitioned by the engine exactly like per-request settings
+(one compiled step per (settings, strategy, scheduler) lane).
+
   PYTHONPATH=src python examples/serve_batch.py
 """
 import sys
@@ -16,6 +21,7 @@ from repro.configs import get_arch, reduced
 from repro.core.strategy import NoCache, SPACache
 from repro.data.synthetic import token_batches
 from repro.dlm.decoding import DecodeSettings
+from repro.dlm.scheduler import BlockScheduler, ParallelThresholdScheduler
 from repro.serving.engine import ServingEngine
 from repro.training.optimizer import AdamWConfig
 from repro.training.trainer import Trainer
@@ -37,6 +43,10 @@ def main():
                             rng.integers(8, 20)).astype(np.int32)
                for _ in range(8)]
 
+    schedulers = [ParallelThresholdScheduler(threshold=0.3,
+                                             max_parallel=2),
+                  BlockScheduler(block_len=8, threshold=0.3,
+                                 max_parallel=2)]
     results = {}
     for name, strategy in (
         ("vanilla", NoCache()),
@@ -46,11 +56,9 @@ def main():
     ):
         engine = ServingEngine(
             cfg, trainer.params, max_batch=4, canvas_len=48,
-            strategy=strategy,
-            settings=DecodeSettings(parallel_threshold=0.3,
-                                    max_parallel=2))
-        for p in prompts:
-            engine.submit(p, gen_len=16)
+            strategy=strategy, settings=DecodeSettings())
+        for i, p in enumerate(prompts):
+            engine.submit(p, gen_len=16, scheduler=schedulers[i % 2])
         stats = engine.run()
         results[name] = (stats, engine._wall)
         print(f"[{name:9s}] {stats.requests_done} requests, "

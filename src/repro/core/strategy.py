@@ -163,6 +163,26 @@ class CacheStrategy:
                     cache_sl["proxy_now"].dtype)
         return cache_sl
 
+    def refresh_cache(self, params: Params, cfg: ModelConfig,
+                      tokens: jax.Array,
+                      extras: Optional[Dict[str, jax.Array]] = None,
+                      spa_proxies=None) -> Dict[str, Dict[str, jax.Array]]:
+        """Full cache rebuild from the current canvas (periodic refresh).
+
+        Pure jax — shared verbatim by the host loop
+        (``DecodeSession.refresh``) and the device-resident loop
+        (``run_compiled``'s ``lax.cond`` branch), so the two paths
+        cannot drift.  Strategies may override to refresh cheaper than
+        a full prefill (e.g. keep offline artefacts, rebuild only KV).
+        """
+        if not self.uses_cache:
+            return {}
+        from repro.dlm import decoding
+        inputs = dict(extras) if extras else {}
+        inputs["tokens"] = tokens
+        _, cache = decoding.prefill(params, cfg, inputs, spa_proxies, self)
+        return cache
+
     # ---- offline artefacts ----
 
     def build_proxies(self, params: Params, cfg: ModelConfig

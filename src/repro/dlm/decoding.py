@@ -3,17 +3,19 @@
   prefill    — full forward over the canvas that populates all layer caches
                (K, V, H^c, identifier vectors) per the CacheStrategy.
   serve_step — ONE diffusion refinement step: sparse layer updates driven
-               by the strategy, candidate-limited logit evaluation,
-               confidence-based commit of >= 1 token (parallel decoding
-               commits every candidate above the confidence threshold —
-               Fast-dLLM style).
+               by the strategy, candidate-limited logit evaluation, and
+               the commit decision delegated to an ``UnmaskScheduler``
+               (greedy confidence / Fast-dLLM parallel / entropy /
+               stochastic / random-order / semi-AR blocks).
 
-The step LOOP (prefill + jitted step + periodic refresh + commit policy)
-lives in ``repro.dlm.session.DecodeSession``; ``decode`` and
-``decode_semi_ar`` below are thin compatibility wrappers over it.
+The step LOOP (prefill + jitted step + periodic refresh) lives in
+``repro.dlm.session.DecodeSession``; ``decode`` and ``decode_semi_ar``
+below are thin compatibility wrappers over it.
 
 All caching policy dispatch goes through ``core.strategy.CacheStrategy``
-(DESIGN.md §2) — this module never inspects identifier strings.
+(DESIGN.md §2) and all commit policy through
+``dlm.scheduler.UnmaskScheduler`` (DESIGN.md §2.5) — this module never
+inspects identifier strings or branches on schedule flags itself.
 
 Candidate-limited logits: computing lm-head logits over the full 32k/500k
 canvas each step would dominate all other costs, so logits are evaluated
@@ -39,6 +41,8 @@ from repro.core import cache as cache_lib
 from repro.core import selection, spa_layer
 from repro.core.cache import CachePolicy
 from repro.core.strategy import CacheStrategy, resolve_strategy
+from repro.dlm.scheduler import (CommitView, UnmaskScheduler,
+                                 resolve_scheduler)
 from repro.models import transformer
 
 Params = Dict[str, Any]
@@ -51,16 +55,26 @@ class DecodeState(NamedTuple):
     committed: jax.Array         # [B, C] recently committed positions (-1 pad)
     n_masked: jax.Array          # [B] remaining masked counts
     active: Optional[jax.Array] = None   # [B, N_text] bool commit mask
-    extras: Dict[str, jax.Array] = {}    # modality stubs (VLM patches)
+    # None (NOT a dict literal: NamedTuple defaults are shared across
+    # every instance, so a mutable {} leaks writes between sessions);
+    # DecodeSession normalizes to a fresh dict at construction.
+    extras: Optional[Dict[str, jax.Array]] = None  # modality stubs (VLM)
+    rng: Optional[jax.Array] = None      # stochastic-scheduler key chain
 
 
 @dataclasses.dataclass(frozen=True)
 class DecodeSettings:
     """Per-request decode knobs (hashable: used as an engine lane key).
 
-    ``refresh_interval`` is the ONE source of truth for periodic full
-    cache rebuilds when non-zero; ``DecodeSession`` falls back to the
-    strategy's own default (``CacheStrategy.refresh_interval``) when 0.
+    ``refresh_interval`` — periodic full cache rebuilds, single-sourced
+    in ``DecodeSession``:  R > 0 rebuilds every R steps, 0 falls back to
+    the strategy's own default (``CacheStrategy.refresh_interval``), and
+    -1 explicitly DISABLES refresh even when the strategy has one.
+
+    ``parallel_threshold``/``max_parallel`` are the legacy spec form of
+    the commit policy; ``dlm.scheduler.resolve_scheduler`` maps them to
+    a ``ParallelThresholdScheduler`` (byte-identical commits).  Prefer
+    passing ``scheduler=`` to the decode surfaces directly.
     """
     n_candidates: int = 64
     parallel_threshold: float = 0.0   # 0 = commit exactly 1 token / step
@@ -122,15 +136,20 @@ def _candidate_positions(tokens: jax.Array, mask_id: int, n_cand: int,
 
 def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
                settings: DecodeSettings, spa_proxies=None,
-               strategy: Optional[CacheStrategy] = None
+               strategy: Optional[CacheStrategy] = None,
+               scheduler: Optional[UnmaskScheduler] = None
                ) -> Tuple[DecodeState, Dict[str, jax.Array]]:
-    """One diffusion refinement step under the resolved CacheStrategy."""
+    """One diffusion refinement step under the resolved CacheStrategy;
+    the commit decision is the resolved ``UnmaskScheduler``'s.  Fully
+    device-resident (no host syncs), so ``DecodeSession.run_compiled``
+    can run it inside a single ``lax.while_loop``."""
     strategy = resolve_strategy(cfg, strategy)
+    scheduler = resolve_scheduler(settings, scheduler)
     tokens, cache = state.tokens, state.cache
     b = tokens.shape[0]
     mask_id = cfg.mask_id
 
-    inputs = dict(state.extras)
+    inputs = dict(state.extras) if state.extras else {}
     inputs["tokens"] = tokens
     h = transformer.embed_inputs(params, cfg, inputs)
     n = h.shape[1]                     # full canvas (incl. patch tokens)
@@ -171,17 +190,22 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
         is_masked[..., None], cand_idx)[..., 0]
     conf = jnp.where(cand_is_masked, conf, -jnp.inf)
 
-    best = jnp.argmax(conf, axis=-1)                 # [B]
-    commit = jax.nn.one_hot(best, conf.shape[-1], dtype=bool)
-    if settings.parallel_threshold > 0.0:
-        par = conf > settings.parallel_threshold
-        if settings.max_parallel > 0:
-            _, topp = jax.lax.top_k(conf, min(settings.max_parallel,
-                                              conf.shape[-1]))
-            in_top = jnp.zeros_like(par).at[
-                jnp.arange(b)[:, None], topp].set(True)
-            par = jnp.logical_and(par, in_top)
-        commit = jnp.logical_or(commit, par)
+    # Commit decision is the scheduler's (dlm/scheduler.py).  The rng
+    # chain lives in DecodeState so stochastic schedules replay exactly
+    # in both the host loop and run_compiled's while_loop.
+    rng_next, step_rng = state.rng, None
+    if scheduler.uses_rng:
+        assert state.rng is not None, \
+            f"scheduler {scheduler.name!r} needs an rng: pass rng= to " \
+            "DecodeSession.prefill()/attach()"
+        rng_next, step_rng = jax.random.split(state.rng)
+    active = state.active if state.active is not None \
+        else jnp.ones_like(tokens, bool)
+    view = CommitView(
+        logits=logits, conf=conf, pred=pred, cand_idx=cand_idx,
+        cand_open=cand_is_masked, open_mask=is_masked, active=active,
+        rng=step_rng)
+    commit, pred = scheduler.select_commits(view)
     commit = jnp.logical_and(commit, cand_is_masked)
 
     new_vals = jnp.where(commit, pred, selection.gather_rows(
@@ -204,7 +228,7 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
         tokens=new_tokens, cache=new_cache, step=state.step + 1,
         committed=committed,
         n_masked=state.n_masked - n_committed,
-        active=state.active, extras=state.extras)
+        active=state.active, extras=state.extras, rng=rng_next)
     info = {"n_committed": n_committed,
             "mean_conf": jnp.mean(jnp.where(jnp.isfinite(conf), conf, 0.0))}
     return new_state, info
@@ -230,15 +254,17 @@ def init_decode_state(cfg: ModelConfig, params: Params, prompt: jax.Array,
 def decode(params: Params, cfg: ModelConfig, prompt: jax.Array,
            gen_len: int, settings: Optional[DecodeSettings] = None,
            spa_proxies=None, max_steps: Optional[int] = None,
-           strategy: Optional[CacheStrategy] = None
+           strategy: Optional[CacheStrategy] = None,
+           scheduler: Optional[UnmaskScheduler] = None,
+           rng: Optional[jax.Array] = None
            ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Run the unmasking loop until every slot is committed.
 
     Deprecated signature-compatible wrapper over ``DecodeSession``."""
     from repro.dlm.session import DecodeSession
     sess = DecodeSession(params, cfg, strategy=strategy, settings=settings,
-                         spa_proxies=spa_proxies)
-    sess.prefill(prompt, gen_len)
+                         spa_proxies=spa_proxies, scheduler=scheduler)
+    sess.prefill(prompt, gen_len, rng=rng)
     return sess.run(max_steps)
 
 
@@ -246,18 +272,24 @@ def decode_semi_ar(params: Params, cfg: ModelConfig, prompt: jax.Array,
                    gen_len: int, block_len: int = 8,
                    settings: Optional[DecodeSettings] = None,
                    spa_proxies=None,
-                   strategy: Optional[CacheStrategy] = None):
+                   strategy: Optional[CacheStrategy] = None,
+                   scheduler: Optional[UnmaskScheduler] = None,
+                   rng: Optional[jax.Array] = None):
     """Block-wise semi-AR decoding (Wu et al. 2025: Fast-dLLM; Ma et al.
     2025 family): the canvas is unmasked block-by-block left-to-right;
-    within the active block tokens commit by confidence (optionally in
-    parallel). Positions outside the active block are excluded through
-    the session's active-position mask — the restrictive trade-off the
-    paper contrasts with SPA-Cache's arbitrary-order updates (§2.2).
+    within the active block tokens commit per the scheduler (confidence
+    by default, optionally in parallel). Positions outside the active
+    block are excluded through the session's active-position mask — the
+    restrictive trade-off the paper contrasts with SPA-Cache's
+    arbitrary-order updates (§2.2).  ``BlockScheduler`` expresses the
+    same schedule as data inside the step (no host loop, compatible
+    with ``run_compiled``); this wrapper keeps the host ``run_blocks``
+    path, which additionally refreshes caches at block boundaries.
 
     Deprecated signature-compatible wrapper over
     ``DecodeSession.run_blocks``."""
     from repro.dlm.session import DecodeSession
     sess = DecodeSession(params, cfg, strategy=strategy, settings=settings,
-                         spa_proxies=spa_proxies)
-    sess.prefill(prompt, gen_len)
+                         spa_proxies=spa_proxies, scheduler=scheduler)
+    sess.prefill(prompt, gen_len, rng=rng)
     return sess.run_blocks(block_len)

@@ -1,0 +1,268 @@
+"""First-class unmask schedulers (the ``UnmaskScheduler`` protocol).
+
+SPA-Cache makes *caching* policy pluggable (``core.strategy``); this
+module does the same for the *commit* policy — which masked positions
+unmask at each refinement step.  The decoding schedules the paper
+benchmarks against (greedy confidence, Fast-dLLM parallel thresholds,
+semi-AR blocks §2.2, dKV-Cache-style order heuristics) are all
+instances of one protocol instead of flags scattered over
+``DecodeSettings`` and host-side loops.
+
+A scheduler is a frozen (hashable) dataclass, so jitted step functions
+close over it statically — exactly like ``CacheStrategy``: switching
+scheduler retraces once, switching request does not.  Every decode
+surface (``DecodeSession``, ``decode``, ``decode_semi_ar``,
+``ServingEngine``) accepts ``scheduler=`` at call time; the legacy
+``DecodeSettings.parallel_threshold``/``max_parallel`` knobs remain as
+a spec bridge resolved by :func:`resolve_scheduler`.
+
+The protocol is ONE method::
+
+    commit, pred = scheduler.select_commits(view)
+
+where ``view`` (a :class:`CommitView`) exposes this step's candidate
+set — logits, confidences, greedy predictions, candidate positions,
+open flags, the full open/active masks, and (for stochastic
+schedulers) a per-step rng.  ``commit`` is a [B, C] bool mask over
+candidates and ``pred`` the [B, C] token ids to write where committed.
+``serve_step`` intersects ``commit`` with the open-candidate flags, so
+schedulers never have to re-guard closed slots.
+
+Schedulers run entirely on device (no host syncs, no data-dependent
+Python), which is what makes ``DecodeSession.run_compiled()`` — the
+whole decode loop as one ``jax.lax.while_loop`` — possible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+# Registry of scheduler classes keyed by their serializable name.
+SCHEDULERS: Dict[str, Type["UnmaskScheduler"]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        SCHEDULERS[name] = cls
+        return cls
+
+    return deco
+
+
+class CommitView(NamedTuple):
+    """Everything a scheduler may look at when picking commits.
+
+    All arrays are per refinement step; C = ``settings.n_candidates``.
+    ``conf`` is already ``-inf`` at closed candidates, so plain
+    ``argmax(conf)`` is safe.
+    """
+
+    logits: jax.Array            # [B, C, V] ([MASK] already -inf)
+    conf: jax.Array              # [B, C] max prob, -inf at closed cands
+    pred: jax.Array              # [B, C] greedy token ids
+    cand_idx: jax.Array          # [B, C] canvas positions of candidates
+    cand_open: jax.Array         # [B, C] candidate is masked AND active
+    open_mask: jax.Array         # [B, N] full canvas open mask
+    active: jax.Array            # [B, N] full active-position mask
+    rng: Optional[jax.Array]     # per-step key (uses_rng schedulers only)
+
+
+def _argmax_commit(conf: jax.Array) -> jax.Array:
+    """One-hot bool mask of the per-row argmax candidate."""
+    return jax.nn.one_hot(jnp.argmax(conf, axis=-1), conf.shape[-1],
+                          dtype=bool)
+
+
+def _commit_with_parallel(score: jax.Array, par: Optional[jax.Array],
+                          max_parallel: int) -> jax.Array:
+    """Fast-dLLM parallel commit: the argmax-``score`` candidate plus
+    every candidate in ``par`` (optionally capped at the ``max_parallel``
+    highest-scoring) — op-for-op the pre-scheduler ``serve_step``
+    branch, so the settings bridge is byte-identical."""
+    commit = _argmax_commit(score)
+    if par is not None:
+        if max_parallel > 0:
+            b = score.shape[0]
+            _, topp = jax.lax.top_k(score, min(max_parallel,
+                                               score.shape[-1]))
+            in_top = jnp.zeros_like(par).at[
+                jnp.arange(b)[:, None], topp].set(True)
+            par = jnp.logical_and(par, in_top)
+        commit = jnp.logical_or(commit, par)
+    return commit
+
+
+@dataclasses.dataclass(frozen=True)
+class UnmaskScheduler:
+    """Protocol base: frozen, hashable, device-only commit policy."""
+
+    name: ClassVar[str] = "abstract"
+    uses_rng: ClassVar[bool] = False   # True -> DecodeState carries an rng
+
+    def select_commits(self, view: CommitView
+                       ) -> Tuple[jax.Array, jax.Array]:
+        """Return (commit [B, C] bool, pred [B, C] token ids)."""
+        raise NotImplementedError
+
+
+@register("confidence")
+@dataclasses.dataclass(frozen=True)
+class ConfidenceScheduler(UnmaskScheduler):
+    """Greedy argmax-confidence: exactly one commit per row per step
+    (the repo's historical default)."""
+
+    name: ClassVar[str] = "confidence"
+
+    def select_commits(self, view):
+        return _argmax_commit(view.conf), view.pred
+
+
+@register("parallel")
+@dataclasses.dataclass(frozen=True)
+class ParallelThresholdScheduler(UnmaskScheduler):
+    """Fast-dLLM-style parallel commit (absorbs the legacy
+    ``DecodeSettings.parallel_threshold``/``max_parallel`` knobs)."""
+
+    threshold: float = 0.05
+    max_parallel: int = 0            # 0 = uncapped
+
+    name: ClassVar[str] = "parallel"
+
+    def select_commits(self, view):
+        par = (view.conf > self.threshold) if self.threshold > 0.0 \
+            else None
+        return _commit_with_parallel(view.conf, par,
+                                     self.max_parallel), view.pred
+
+
+@register("entropy")
+@dataclasses.dataclass(frozen=True)
+class EntropyScheduler(UnmaskScheduler):
+    """Commit the minimum-entropy candidate (full-distribution
+    uncertainty instead of top-1 confidence); ``threshold`` > 0
+    additionally commits every candidate whose entropy (in nats) is
+    below it, capped at ``max_parallel``."""
+
+    threshold: float = 0.0
+    max_parallel: int = 0
+
+    name: ClassVar[str] = "entropy"
+
+    def select_commits(self, view):
+        probs = jax.nn.softmax(view.logits, axis=-1)
+        ent = -jnp.sum(probs * jnp.log(jnp.clip(probs, 1e-30)), axis=-1)
+        # negate: the shared parallel helper expects HIGH = commit
+        neg_ent = jnp.where(view.cand_open, -ent, -jnp.inf)
+        par = (neg_ent > -self.threshold) if self.threshold > 0.0 \
+            else None
+        return _commit_with_parallel(neg_ent, par,
+                                     self.max_parallel), view.pred
+
+
+@register("temperature")
+@dataclasses.dataclass(frozen=True)
+class TemperatureSampler(UnmaskScheduler):
+    """Stochastic commit: the position is sampled ∝ softmax(conf/T) over
+    open candidates (Gumbel-max) and the token is sampled from
+    softmax(logits/T) — rng threaded through ``DecodeState.rng``."""
+
+    temperature: float = 1.0
+
+    name: ClassVar[str] = "temperature"
+    uses_rng: ClassVar[bool] = True
+
+    def select_commits(self, view):
+        k_pos, k_tok = jax.random.split(view.rng)
+        t = max(self.temperature, 1e-6)
+        g_tok = jax.random.gumbel(k_tok, view.logits.shape,
+                                  jnp.float32)
+        pred = jnp.argmax(view.logits.astype(jnp.float32) / t + g_tok,
+                          axis=-1).astype(view.pred.dtype)
+        g_pos = jax.random.gumbel(k_pos, view.conf.shape, jnp.float32)
+        score = jnp.where(view.cand_open, view.conf / t + g_pos,
+                          -jnp.inf)
+        return _argmax_commit(score), pred
+
+
+@register("random_order")
+@dataclasses.dataclass(frozen=True)
+class RandomOrderScheduler(UnmaskScheduler):
+    """Uniformly random unmask order with greedy tokens — the
+    order-heuristic ablation (dKV-Cache family contrasts decode order
+    against confidence order)."""
+
+    name: ClassVar[str] = "random_order"
+    uses_rng: ClassVar[bool] = True
+
+    def select_commits(self, view):
+        score = jnp.where(view.cand_open,
+                          jax.random.uniform(view.rng, view.conf.shape),
+                          -jnp.inf)
+        return _argmax_commit(score), view.pred
+
+
+@register("block")
+@dataclasses.dataclass(frozen=True)
+class BlockScheduler(UnmaskScheduler):
+    """Semi-AR blocks expressed as DATA instead of a host loop: commits
+    are restricted to the current ``block_len``-wide window of the
+    generation span, and the window advances automatically once its
+    slots drain (the leftmost open position defines the current block).
+    Inside the window, commits follow confidence with an optional
+    Fast-dLLM parallel threshold — the §2.2 restrictive schedule the
+    paper contrasts with SPA-Cache's arbitrary-order updates, now
+    runnable inside ``run_compiled``'s single ``lax.while_loop``."""
+
+    block_len: int = 8
+    threshold: float = 0.0
+    max_parallel: int = 0
+
+    name: ClassVar[str] = "block"
+
+    def select_commits(self, view):
+        b, n = view.active.shape
+        pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+        # generation span start = first active position per row
+        gen_start = jnp.min(jnp.where(view.active, pos, n),
+                            axis=-1).astype(jnp.int32)      # [B]
+        first_open = jnp.min(jnp.where(view.open_mask, pos, n),
+                             axis=-1).astype(jnp.int32)     # [B]
+        blk = jnp.maximum(first_open - gen_start, 0) // self.block_len
+        win_lo = gen_start + blk * self.block_len
+        win_hi = win_lo + self.block_len
+        in_win = jnp.logical_and(view.cand_idx >= win_lo[:, None],
+                                 view.cand_idx < win_hi[:, None])
+        conf = jnp.where(in_win, view.conf, -jnp.inf)
+        par = (conf > self.threshold) if self.threshold > 0.0 else None
+        return _commit_with_parallel(conf, par,
+                                     self.max_parallel), view.pred
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def scheduler_from_name(name: str, **kw) -> UnmaskScheduler:
+    cls = SCHEDULERS.get(name)
+    if cls is None:
+        raise ValueError(f"unknown scheduler {name!r}; registered: "
+                         f"{sorted(SCHEDULERS)}")
+    return cls(**kw)
+
+
+def resolve_scheduler(settings=None,
+                      scheduler: Optional[UnmaskScheduler] = None
+                      ) -> UnmaskScheduler:
+    """Call-time scheduler wins; else the legacy ``DecodeSettings``
+    parallel knobs map onto their scheduler equivalents (byte-identical
+    commits), else greedy confidence."""
+    if scheduler is not None:
+        return scheduler
+    if settings is not None and settings.parallel_threshold > 0.0:
+        return ParallelThresholdScheduler(
+            threshold=settings.parallel_threshold,
+            max_parallel=settings.max_parallel)
+    return ConfidenceScheduler()

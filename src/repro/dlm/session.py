@@ -7,22 +7,37 @@ owns all of it:
 
   * the canvas (tokens + active-position mask + masked counts),
   * the strategy cache and its lifecycle (prefill / periodic refresh),
-  * the jitted step function (compiled once per (strategy, settings)),
-  * the commit policy (confidence / parallel threshold via settings),
+  * the jitted step function (compiled once per
+    (strategy, settings, scheduler)),
+  * the commit policy — an ``UnmaskScheduler`` (dlm/scheduler.py);
+    legacy ``DecodeSettings.parallel_threshold`` resolves to one,
   * row-granular state surgery for continuous batching
     (``replace_rows`` — swap a finished request's slot for a queued one
     without touching sibling rows).
 
-Refresh has ONE source of truth here: ``settings.refresh_interval`` when
-non-zero, else the strategy's own ``refresh_interval`` default (which
-``strategy_from_spec`` lifts from ``cfg.spa.refresh_interval``).
+Refresh has ONE source of truth here: ``settings.refresh_interval`` > 0
+wins, 0 falls back to the strategy's own ``refresh_interval`` default
+(which ``strategy_from_spec`` lifts from ``cfg.spa.refresh_interval``),
+and -1 explicitly disables refresh.
+
+Two run modes with byte-identical outputs (asserted per scheduler in
+``tests/test_scheduler.py``):
+
+  * ``run()``        — host loop: one jitted step per iteration, a host
+                       sync on ``n_masked`` per step; supports
+                       streaming ``events()`` and mid-loop row surgery.
+  * ``run_compiled()`` — the WHOLE loop as a single ``jax.lax.while_loop``
+                       (periodic refresh folded in via ``lax.cond``):
+                       no per-step dispatch, no host syncs until the
+                       loop exits.  The serving hot path.
 
 Typical use::
 
-    sess = DecodeSession(params, cfg, strategy=SPACache(rank=16))
+    sess = DecodeSession(params, cfg, strategy=SPACache(rank=16),
+                         scheduler=ParallelThresholdScheduler(0.1))
     sess.prefill(prompt, gen_len)
-    tokens, info = sess.run()
-    # or streaming:
+    tokens, info = sess.run_compiled()
+    # or streaming (host loop):
     for event in sess.events():
         print(event.step, event.n_committed)
 """
@@ -40,6 +55,7 @@ from repro.configs.base import ModelConfig
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm import decoding
 from repro.dlm.decoding import DecodeSettings, DecodeState
+from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
 
 Params = Dict[str, Any]
 
@@ -60,20 +76,26 @@ class DecodeSession:
     def __init__(self, params: Params, cfg: ModelConfig, *,
                  strategy: Optional[CacheStrategy] = None,
                  settings: Optional[DecodeSettings] = None,
+                 scheduler: Optional[UnmaskScheduler] = None,
                  spa_proxies=None):
         self.params = params
         self.cfg = cfg
         self.strategy = resolve_strategy(cfg, strategy)
         self.settings = settings or DecodeSettings()
-        # ONE source of truth for periodic refresh (see module docstring).
-        self.refresh_interval = (self.settings.refresh_interval
-                                 or self.strategy.refresh_interval)
+        self.scheduler = resolve_scheduler(self.settings, scheduler)
+        # ONE source of truth for periodic refresh (see module docstring):
+        # settings > 0 wins, 0 falls back to the strategy, -1 disables.
+        ri = self.settings.refresh_interval
+        self.refresh_interval = (0 if ri < 0
+                                 else ri or self.strategy.refresh_interval)
         if spa_proxies is None:
             spa_proxies = self.strategy.build_proxies(params, cfg)
         self.spa_proxies = spa_proxies
         self._step_fn = jax.jit(functools.partial(
             decoding.serve_step, params, cfg, settings=self.settings,
-            spa_proxies=spa_proxies, strategy=self.strategy))
+            spa_proxies=spa_proxies, strategy=self.strategy,
+            scheduler=self.scheduler))
+        self._loop_fns: Dict[bool, Any] = {}   # run_compiled, by can_refresh
         self.state: Optional[DecodeState] = None
         self.steps_taken = 0
         self.refresh_count = 0
@@ -86,8 +108,8 @@ class DecodeSession:
 
     def prefill(self, prompt: jax.Array, gen_len: int, *,
                 use_cache: bool = True,
-                extras: Optional[Dict[str, jax.Array]] = None
-                ) -> DecodeState:
+                extras: Optional[Dict[str, jax.Array]] = None,
+                rng: Optional[jax.Array] = None) -> DecodeState:
         """Build the canvas (prompt + gen_len [MASK] slots) and run the
         full prefill forward that populates the strategy's caches."""
         from repro.dlm.noise import mask_canvas
@@ -97,7 +119,7 @@ class DecodeSession:
         active = jnp.zeros((b, n), bool).at[:, p_len:].set(True)
         n_masked = jnp.full((b,), gen_len, jnp.int32)
         state = self.attach(canvas, active=active, n_masked=n_masked,
-                            extras=extras, use_cache=use_cache)
+                            extras=extras, use_cache=use_cache, rng=rng)
         self._gen_span = (p_len, p_len + gen_len)
         return state
 
@@ -105,7 +127,8 @@ class DecodeSession:
                active: Optional[jax.Array] = None,
                n_masked: Optional[jax.Array] = None,
                extras: Optional[Dict[str, jax.Array]] = None,
-               use_cache: bool = True) -> DecodeState:
+               use_cache: bool = True,
+               rng: Optional[jax.Array] = None) -> DecodeState:
         """Adopt an externally built canvas (serving engine path)."""
         tokens = jnp.asarray(tokens)
         b = tokens.shape[0]
@@ -115,34 +138,46 @@ class DecodeSession:
             n_masked = jnp.sum(
                 jnp.logical_and(tokens == self.cfg.mask_id, active),
                 axis=-1).astype(jnp.int32)
-        extras = extras or {}
+        # fresh dict per state — never share or alias the caller's
+        # (DecodeState's extras default used to be a shared {} literal).
+        extras = dict(extras) if extras else {}
         cache = self._build_cache(tokens, extras) if use_cache else {}
         ring = self.settings.commit_ring
         self.state = DecodeState(
             tokens=tokens, cache=cache, step=jnp.zeros((), jnp.int32),
             committed=jnp.full((b, ring), -1, jnp.int32),
-            n_masked=n_masked, active=active, extras=extras)
+            n_masked=n_masked, active=active, extras=extras,
+            rng=self._as_rng(rng))
         self.steps_taken = 0
         self.refresh_count = 0
         self._gen_span = None     # run_blocks needs a prefill()'d canvas
         return self.state
 
+    def _as_rng(self, rng) -> Optional[jax.Array]:
+        """Normalize the rng argument: ints become keys; stochastic
+        schedulers get a default key so replay is seeded by default."""
+        if rng is None:
+            return (jax.random.PRNGKey(0) if self.scheduler.uses_rng
+                    else None)
+        if isinstance(rng, (int, np.integer)):
+            return jax.random.PRNGKey(int(rng))
+        return jnp.asarray(rng)
+
     def _build_cache(self, tokens, extras):
-        if not self.strategy.uses_cache:
-            return {}
-        inputs = dict(extras)
-        inputs["tokens"] = tokens
-        _, cache = decoding.prefill(self.params, self.cfg, inputs,
-                                    self.spa_proxies, self.strategy)
-        return cache
+        return self.strategy.refresh_cache(self.params, self.cfg, tokens,
+                                           extras, self.spa_proxies)
 
     # ------------------------------------------------------------------
     # Stepping
     # ------------------------------------------------------------------
 
     def refresh(self) -> None:
-        """Full cache rebuild from the current canvas."""
-        if not self.strategy.uses_cache or self.state is None:
+        """Full cache rebuild from the current canvas.  A session running
+        cache-less (``attach(use_cache=False)`` or ``NoCache``) never
+        grows one — matching ``run_compiled``, whose carry structure is
+        fixed at trace time."""
+        if (not self.strategy.uses_cache or self.state is None
+                or not self.state.cache):
             return
         cache = self._build_cache(self.state.tokens, self.state.extras)
         self.state = self.state._replace(cache=cache)
@@ -151,8 +186,9 @@ class DecodeSession:
     def _maybe_refresh(self) -> bool:
         if (self.refresh_interval and self.steps_taken
                 and self.steps_taken % self.refresh_interval == 0):
+            before = self.refresh_count
             self.refresh()
-            return True
+            return self.refresh_count > before
         return False
 
     def step(self) -> Dict[str, jax.Array]:
@@ -180,12 +216,92 @@ class DecodeSession:
                 jnp.max(self.state.n_masked))) + 4
         n = 0
         for _ in range(max_steps):
-            self.step()
-            n += 1
+            # check-first, like run_compiled's while_loop cond: an
+            # already-finished session runs 0 steps in BOTH modes (and
+            # never shifts the refresh cadence with no-commit steps)
             if self.done:
                 break
+            self.step()
+            n += 1
         return self.state.tokens, {"steps": n,
                                    "refreshes": self.refresh_count}
+
+    # ------------------------------------------------------------------
+    # Device-resident loop
+    # ------------------------------------------------------------------
+
+    def run_compiled(self, max_steps: Optional[int] = None
+                     ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """The whole decode loop as ONE ``jax.lax.while_loop``.
+
+        Eliminates the per-step Python dispatch and the per-step host
+        sync on ``n_masked`` that ``run()`` pays; periodic refresh is
+        folded into the loop body via ``lax.cond`` on
+        ``step % refresh_interval`` (same schedule as the host loop, so
+        outputs are byte-identical — asserted per scheduler in
+        ``tests/test_scheduler.py``).  ``max_steps`` is a dynamic
+        argument: changing it never retraces.
+        """
+        assert self.state is not None, "call prefill()/attach() first"
+        if max_steps is None:
+            max_steps = int(jax.device_get(
+                jnp.max(self.state.n_masked))) + 4
+        can_refresh = bool(self.refresh_interval
+                           and self.strategy.uses_cache
+                           and self.state.cache)
+        if can_refresh not in self._loop_fns:
+            self._loop_fns[can_refresh] = self._build_loop_fn(can_refresh)
+        state, n_done, n_ref = self._loop_fns[can_refresh](
+            self.state, jnp.asarray(max_steps, jnp.int32))
+        self.state = state
+        n_done = int(jax.device_get(n_done))
+        n_ref = int(jax.device_get(n_ref))
+        self.steps_taken += n_done
+        self.refresh_count += n_ref
+        return state.tokens, {"steps": n_done,
+                              "refreshes": self.refresh_count}
+
+    def _build_loop_fn(self, can_refresh: bool):
+        """while_loop(cond=open slots remain, body=maybe-refresh + step).
+
+        The refresh branch reuses ``CacheStrategy.refresh_cache`` — the
+        exact function the host loop calls — under a ``lax.cond`` on the
+        step counter (``state.step`` == completed steps, so the rebuild
+        lands before steps R, 2R, ... exactly like ``_maybe_refresh``).
+        """
+        step_fn = functools.partial(
+            decoding.serve_step, self.params, self.cfg,
+            settings=self.settings, spa_proxies=self.spa_proxies,
+            strategy=self.strategy, scheduler=self.scheduler)
+        interval = self.refresh_interval
+        params, cfg = self.params, self.cfg
+        strategy, proxies = self.strategy, self.spa_proxies
+
+        def rebuilt(state: DecodeState) -> DecodeState:
+            cache = strategy.refresh_cache(params, cfg, state.tokens,
+                                           state.extras, proxies)
+            return state._replace(cache=cache)
+
+        def loop(state0: DecodeState, max_steps: jax.Array):
+            def cond(carry):
+                state, n_done, _ = carry
+                return jnp.logical_and(n_done < max_steps,
+                                       jnp.max(state.n_masked) > 0)
+
+            def body(carry):
+                state, n_done, n_ref = carry
+                if can_refresh:
+                    do = jnp.logical_and(state.step > 0,
+                                         state.step % interval == 0)
+                    state = jax.lax.cond(do, rebuilt, lambda s: s, state)
+                    n_ref = n_ref + do.astype(jnp.int32)
+                state, _ = step_fn(state)
+                return state, n_done + 1, n_ref
+
+            zero = jnp.zeros((), jnp.int32)
+            return jax.lax.while_loop(cond, body, (state0, zero, zero))
+
+        return jax.jit(loop)
 
     def events(self, max_steps: Optional[int] = None
                ) -> Iterator[StepEvent]:

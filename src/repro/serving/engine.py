@@ -1,19 +1,24 @@
 """Batched DLM serving engine on DecodeSession (DESIGN.md §3.2).
 
-Requests (prompt + gen_len + optional per-request DecodeSettings) are
-padded onto fixed canvas rows and served by a ``DecodeSession`` at
-**step granularity**: when a row finishes, its slot is swapped for the
-next queued request mid-loop (``DecodeSession.replace_rows``) while
-sibling rows keep stepping with their evolved caches — no whole-batch
-re-prefill barrier.
+Requests (prompt + gen_len + optional per-request DecodeSettings /
+CacheStrategy / UnmaskScheduler) are padded onto fixed canvas rows and
+served by a ``DecodeSession`` at **step granularity**: when a row
+finishes, its slot is swapped for the next queued request mid-loop
+(``DecodeSession.replace_rows``) while sibling rows keep stepping with
+their evolved caches — no whole-batch re-prefill barrier.
 
-Because the jitted step closes over ``DecodeSettings`` statically, the
-queue is partitioned into *lanes* by settings: a lane's batch only ever
-admits requests with identical settings (one compiled step per lane).
-Within a lane, rows are independent (attention, top-k selection and
-commits are all per-row), so continuous batching is byte-identical to
-serving the same requests in static batches — asserted by
-``tests/test_strategy_parity.py``.
+Because the jitted step closes over settings, strategy and scheduler
+statically, the queue is partitioned into *lanes* keyed on the full
+``(DecodeSettings, CacheStrategy, UnmaskScheduler)`` triple: a lane's
+batch only ever admits requests with an identical triple (one compiled
+step per lane; all three are frozen hashable dataclasses).  Within a
+lane, rows are independent (attention, top-k selection and commits are
+all per-row), so for deterministic schedulers continuous batching is
+byte-identical to serving the same requests in static batches —
+asserted by ``tests/test_strategy_parity.py``.  Stochastic schedulers
+(``uses_rng``) draw from ONE batch-global rng chain per lane, so their
+sampled outputs depend on batch composition and swap order; runs are
+reproducible per engine configuration but NOT invariant to scheduling.
 
 Slot bookkeeping uses the session's explicit active-position mask;
 token ids are never overloaded as "committed filler" sentinels.
@@ -23,14 +28,19 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm.decoding import DecodeSettings
+from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
 from repro.dlm.session import DecodeSession
+
+# (settings, strategy, scheduler): everything the compiled step closes
+# over statically — one DecodeSession (one executable) per distinct key.
+LaneKey = Tuple[DecodeSettings, CacheStrategy, UnmaskScheduler]
 
 
 @dataclasses.dataclass
@@ -39,9 +49,12 @@ class Request:
     prompt: np.ndarray              # [P] int32
     gen_len: int
     settings: Optional[DecodeSettings] = None
+    strategy: Optional[CacheStrategy] = None
+    scheduler: Optional[UnmaskScheduler] = None
     submitted_at: float = dataclasses.field(default_factory=time.time)
     completed_at: Optional[float] = None
     output: Optional[np.ndarray] = None
+    lane: Optional[LaneKey] = None  # resolved ONCE at submit()
 
 
 @dataclasses.dataclass
@@ -60,6 +73,7 @@ class ServingEngine:
                  canvas_len: int = 64,
                  settings: Optional[DecodeSettings] = None,
                  strategy: Optional[CacheStrategy] = None,
+                 scheduler: Optional[UnmaskScheduler] = None,
                  continuous: bool = True):
         self.cfg = cfg
         self.params = params
@@ -67,36 +81,73 @@ class ServingEngine:
         self.canvas_len = canvas_len
         self.settings = settings or DecodeSettings()
         self.strategy = resolve_strategy(cfg, strategy)
+        self.scheduler = scheduler    # None -> derived from settings
         self.continuous = continuous
-        self.proxies = self.strategy.build_proxies(params, cfg)
         self.queue: deque[Request] = deque()
         self.done: List[Request] = []
         self.stats = EngineStats()
-        self._sessions: Dict[DecodeSettings, DecodeSession] = {}
+        self._sessions: Dict[LaneKey, DecodeSession] = {}
+        # offline proxy artefacts are per STRATEGY, shared across lanes
+        self._proxies: Dict[CacheStrategy, object] = {}
 
     def submit(self, prompt: np.ndarray, gen_len: int,
-               settings: Optional[DecodeSettings] = None) -> int:
+               settings: Optional[DecodeSettings] = None,
+               strategy: Optional[CacheStrategy] = None,
+               scheduler: Optional[UnmaskScheduler] = None) -> int:
         uid = len(self.done) + len(self.queue)
-        self.queue.append(Request(uid, np.asarray(prompt, np.int32),
-                                  gen_len, settings))
+        req = Request(uid, np.asarray(prompt, np.int32), gen_len,
+                      settings, strategy, scheduler)
+        req.lane = self._lane_of(req)   # freeze vs later default changes
+        self.queue.append(req)
         return uid
 
     # ------------------------------------------------------------------
 
-    def _session_for(self, settings: DecodeSettings) -> DecodeSession:
-        if settings not in self._sessions:
-            self._sessions[settings] = DecodeSession(
-                self.params, self.cfg, strategy=self.strategy,
-                settings=settings, spa_proxies=self.proxies)
-        return self._sessions[settings]
+    def _lane_of(self, req: Request) -> LaneKey:
+        """Resolve a request's lane: per-request overrides win WHOLESALE
+        (a request that passes settings gets that settings' commit
+        policy, including ``parallel_threshold=0.0`` = sequential),
+        engine defaults fill the gaps, legacy settings knobs map to
+        their scheduler equivalent.  The parallel knobs are normalized
+        OUT of the keyed settings once the scheduler is resolved
+        (serve_step never reads them again), so a request submitted
+        with ``parallel_threshold=0.1`` shares an executable with one
+        submitted with ``ParallelThresholdScheduler(0.1)``."""
+        settings = req.settings or self.settings
+        strategy = req.strategy or self.strategy
+        # precedence: request scheduler > request settings knobs >
+        # engine scheduler > engine settings knobs > confidence default
+        if req.scheduler is not None:
+            scheduler = req.scheduler
+        elif req.settings is not None:
+            scheduler = resolve_scheduler(req.settings)
+        else:
+            scheduler = resolve_scheduler(self.settings, self.scheduler)
+        settings = dataclasses.replace(settings, parallel_threshold=0.0,
+                                       max_parallel=0)
+        return settings, strategy, scheduler
 
-    def _pop_matching(self, settings: DecodeSettings, k: int
-                      ) -> List[Request]:
-        """Dequeue up to k requests whose settings match the lane."""
+    def _proxies_for(self, strategy: CacheStrategy):
+        if strategy not in self._proxies:
+            self._proxies[strategy] = strategy.build_proxies(
+                self.params, self.cfg)
+        return self._proxies[strategy]
+
+    def _session_for(self, lane: LaneKey) -> DecodeSession:
+        if lane not in self._sessions:
+            settings, strategy, scheduler = lane
+            self._sessions[lane] = DecodeSession(
+                self.params, self.cfg, strategy=strategy,
+                settings=settings, scheduler=scheduler,
+                spa_proxies=self._proxies_for(strategy))
+        return self._sessions[lane]
+
+    def _pop_matching(self, lane: LaneKey, k: int) -> List[Request]:
+        """Dequeue up to k requests whose (submit-time) lane matches."""
         taken, keep = [], deque()
         while self.queue and len(taken) < k:
             req = self.queue.popleft()
-            if (req.settings or self.settings) == settings:
+            if req.lane == lane:
                 taken.append(req)
             else:
                 keep.append(req)
@@ -126,16 +177,16 @@ class ServingEngine:
     def run(self, max_steps: int = 256) -> EngineStats:
         t0 = time.time()
         while self.queue:
-            lane = self.queue[0].settings or self.settings
+            lane = self.queue[0].lane
             self._run_lane(lane, max_steps)
         self._wall = time.time() - t0
         return self.stats
 
-    def _run_lane(self, settings: DecodeSettings, max_steps: int) -> None:
-        batch = self._pop_matching(settings, self.max_batch)
+    def _run_lane(self, lane: LaneKey, max_steps: int) -> None:
+        batch = self._pop_matching(lane, self.max_batch)
         if not batch:
             return
-        sess = self._session_for(settings)
+        sess = self._session_for(lane)
         rows = [self._canvas_row(r) for r in batch]
         tokens = np.stack([r[0] for r in rows])
         active = np.stack([r[1] for r in rows])
@@ -167,7 +218,7 @@ class ServingEngine:
             for i in finished:
                 self._harvest(slots[i], toks[i], p_lens[i])
                 slots[i] = None
-                nxt = (self._pop_matching(settings, 1)
+                nxt = (self._pop_matching(lane, 1)
                        if self.continuous else [])
                 if nxt:
                     req = nxt[0]

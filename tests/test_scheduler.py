@@ -1,0 +1,289 @@
+"""UnmaskScheduler protocol + device-resident decode loop.
+
+(a) registry covers every commit policy and the legacy DecodeSettings
+    knobs resolve to byte-identical schedulers,
+(b) for EVERY registered scheduler, ``run_compiled()`` (one
+    ``lax.while_loop``, refresh via ``lax.cond``) produces byte-identical
+    tokens to the host ``run()`` loop under the same rng/settings,
+(c) BlockScheduler realizes the semi-AR §2.2 schedule as data (strict
+    left-to-right block order, no host loop),
+(d) stochastic schedulers replay exactly from the rng chain threaded
+    through ``DecodeState``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.strategy import NoCache, SPACache
+from repro.dlm import decoding, scheduler as sched_lib
+from repro.dlm.decoding import DecodeSettings
+from repro.dlm.scheduler import (BlockScheduler, ConfidenceScheduler,
+                                 EntropyScheduler,
+                                 ParallelThresholdScheduler,
+                                 RandomOrderScheduler, TemperatureSampler,
+                                 resolve_scheduler)
+from repro.dlm.session import DecodeSession
+from repro.models import transformer
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("internlm2-1.8b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 10), 0,
+                                cfg.vocab_size - 1)
+    return cfg, params, prompt
+
+
+def _test_instance(name: str) -> sched_lib.UnmaskScheduler:
+    """A small test-sized instance of each registered scheduler."""
+    return {
+        "confidence": ConfidenceScheduler(),
+        "parallel": ParallelThresholdScheduler(threshold=0.05,
+                                               max_parallel=4),
+        "entropy": EntropyScheduler(threshold=3.0, max_parallel=4),
+        "temperature": TemperatureSampler(temperature=0.8),
+        "random_order": RandomOrderScheduler(),
+        "block": BlockScheduler(block_len=4),
+    }[name]
+
+
+def test_registry_covers_all_schedulers():
+    assert set(sched_lib.SCHEDULERS) == {
+        "confidence", "parallel", "entropy", "temperature",
+        "random_order", "block"}
+    for name, cls in sched_lib.SCHEDULERS.items():
+        inst = _test_instance(name)
+        assert isinstance(inst, cls) and cls.name == name
+        hash(inst)                      # lane keys require hashability
+        assert sched_lib.scheduler_from_name(name) == cls()
+
+
+def test_settings_knobs_resolve_to_schedulers():
+    """The legacy DecodeSettings parallel knobs are a spec bridge."""
+    assert resolve_scheduler(DecodeSettings()) == ConfidenceScheduler()
+    assert resolve_scheduler(
+        DecodeSettings(parallel_threshold=0.1, max_parallel=2)
+    ) == ParallelThresholdScheduler(threshold=0.1, max_parallel=2)
+    # call-time scheduler wins over the settings knobs
+    assert resolve_scheduler(
+        DecodeSettings(parallel_threshold=0.1),
+        RandomOrderScheduler()) == RandomOrderScheduler()
+
+
+@pytest.mark.parametrize("name", sorted(sched_lib.SCHEDULERS))
+def test_run_compiled_matches_host_loop(small, name):
+    """(b) byte-identical host/device decode per scheduler, with
+    periodic refresh exercised inside the while_loop."""
+    cfg, params, prompt = small
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                     refresh_interval=3)
+
+    def fresh():
+        sess = DecodeSession(params, cfg, strategy=strat,
+                             scheduler=_test_instance(name))
+        sess.prefill(prompt, gen_len=6, rng=7)
+        return sess
+
+    host = fresh()
+    toks_h, info_h = host.run()
+    comp = fresh()
+    toks_c, info_c = comp.run_compiled()
+    np.testing.assert_array_equal(np.asarray(toks_h), np.asarray(toks_c))
+    assert int((np.asarray(toks_c) == cfg.mask_id).sum()) == 0
+    assert info_h["steps"] == info_c["steps"]
+    assert host.refresh_count == comp.refresh_count >= 1
+
+
+def test_run_compiled_matches_host_no_cache(small):
+    """The compiled loop also covers cache-less (NoCache) sessions,
+    where the refresh cond is statically elided."""
+    cfg, params, prompt = small
+    outs = []
+    for runner in ("run", "run_compiled"):
+        sess = DecodeSession(params, cfg, strategy=NoCache())
+        sess.prefill(prompt, gen_len=6)
+        toks, _ = getattr(sess, runner)()
+        outs.append(np.asarray(toks))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_scheduler_path_reproduces_settings_path(small):
+    """ConfidenceScheduler / ParallelThresholdScheduler reproduce the
+    pre-refactor settings-flag decode outputs exactly."""
+    cfg, params, prompt = small
+    # sequential: default settings == explicit ConfidenceScheduler
+    t_set, _ = decoding.decode(params, cfg, prompt, gen_len=8)
+    t_sch, _ = decoding.decode(params, cfg, prompt, gen_len=8,
+                               scheduler=ConfidenceScheduler())
+    np.testing.assert_array_equal(np.asarray(t_set), np.asarray(t_sch))
+    # parallel: threshold knobs == explicit ParallelThresholdScheduler
+    t_set, _ = decoding.decode(
+        params, cfg, prompt, gen_len=8,
+        settings=DecodeSettings(parallel_threshold=0.05, max_parallel=4))
+    t_sch, _ = decoding.decode(
+        params, cfg, prompt, gen_len=8,
+        scheduler=ParallelThresholdScheduler(threshold=0.05,
+                                             max_parallel=4))
+    np.testing.assert_array_equal(np.asarray(t_set), np.asarray(t_sch))
+
+
+def test_block_scheduler_commits_blocks_in_order(small):
+    """(c) semi-AR as data: with BlockScheduler, no position in block
+    i+1 commits while block i still has open slots."""
+    cfg, params, prompt = small
+    block_len, gen_len = 4, 8
+    sess = DecodeSession(params, cfg,
+                         scheduler=BlockScheduler(block_len=block_len))
+    sess.prefill(prompt, gen_len=gen_len)
+    p_len = prompt.shape[1]
+    commit_step = np.full((2, gen_len), -1)
+    for step in range(1, 2 * gen_len + 1):
+        sess.step()
+        gen = np.asarray(sess.tokens)[:, p_len:]
+        newly = np.logical_and(gen != cfg.mask_id, commit_step < 0)
+        commit_step[newly] = step
+        if sess.done:
+            break
+    assert (commit_step >= 0).all()
+    for row in commit_step:
+        assert row[:block_len].max() < row[block_len:].min()
+
+
+def test_block_scheduler_respects_active_mask(small):
+    """Window derivation starts at the first ACTIVE position, so block
+    windows stay inside the generation span."""
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg,
+                         scheduler=BlockScheduler(block_len=4))
+    sess.prefill(prompt, gen_len=8)
+    toks, _ = sess.run_compiled()
+    toks = np.asarray(toks)
+    np.testing.assert_array_equal(toks[:, :prompt.shape[1]],
+                                  np.asarray(prompt))
+    assert int((toks == cfg.mask_id).sum()) == 0
+
+
+def test_stochastic_schedulers_replay_from_seed(small):
+    """(d) same rng seed -> identical decode; the key chain lives in
+    DecodeState, so host and compiled loops consume it identically."""
+    cfg, params, prompt = small
+    for scheduler in (TemperatureSampler(temperature=0.8),
+                      RandomOrderScheduler()):
+        outs = []
+        for _ in range(2):
+            sess = DecodeSession(params, cfg, scheduler=scheduler)
+            sess.prefill(prompt, gen_len=6, rng=123)
+            toks, _ = sess.run()
+            outs.append(np.asarray(toks))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        # the chain advanced (rng was actually consumed)
+        assert not np.array_equal(
+            np.asarray(sess.state.rng),
+            np.asarray(jax.random.PRNGKey(123)))
+
+
+def test_rng_required_for_stochastic_is_defaulted(small):
+    """Omitting rng= with a stochastic scheduler falls back to a seeded
+    default key rather than crashing (documented in _as_rng)."""
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg, scheduler=RandomOrderScheduler())
+    sess.prefill(prompt, gen_len=4)
+    assert sess.state.rng is not None
+    toks, _ = sess.run()
+    assert int((np.asarray(toks) == cfg.mask_id).sum()) == 0
+
+
+def test_parallel_scheduler_commits_more_per_step(small):
+    cfg, params, prompt = small
+    steps = {}
+    for name, scheduler in (
+            ("seq", ConfidenceScheduler()),
+            ("par", ParallelThresholdScheduler(threshold=0.05,
+                                               max_parallel=4))):
+        sess = DecodeSession(params, cfg, scheduler=scheduler)
+        sess.prefill(prompt, gen_len=12)
+        _, info = sess.run_compiled()
+        steps[name] = info["steps"]
+    assert steps["par"] <= steps["seq"]
+
+
+def test_engine_lane_per_scheduler(small):
+    """Requests with different schedulers are lane-partitioned; legacy
+    parallel settings share a lane with the equivalent scheduler."""
+    from repro.serving.engine import ServingEngine
+    cfg, params, _ = small
+    engine = ServingEngine(cfg, params, max_batch=2, canvas_len=24,
+                           strategy=NoCache())
+    rng = np.random.default_rng(3)
+    par_settings = DecodeSettings(parallel_threshold=0.05, max_parallel=2)
+    par_sched = ParallelThresholdScheduler(threshold=0.05, max_parallel=2)
+    for i in range(6):
+        prompt = rng.integers(0, cfg.vocab_size - 1, 6).astype(np.int32)
+        if i % 3 == 0:
+            engine.submit(prompt, gen_len=4)
+        elif i % 3 == 1:
+            engine.submit(prompt, gen_len=4, settings=par_settings)
+        else:
+            engine.submit(prompt, gen_len=4, scheduler=par_sched)
+    stats = engine.run()
+    assert stats.requests_done == 6
+    # TWO lanes only: the legacy parallel knobs are normalized out of
+    # the lane key once resolved, so the knob form and the explicit
+    # ParallelThresholdScheduler share one compiled executable
+    assert len(engine._sessions) == 2
+    assert {lane[2] for lane in engine._sessions} == {
+        ConfidenceScheduler(), par_sched}
+    for req in engine.done:
+        assert (req.output != cfg.mask_id).all()
+
+
+def test_engine_request_knobs_beat_engine_scheduler(small):
+    """A request's legacy parallel knobs are a per-request override and
+    must win over the ENGINE-level default scheduler."""
+    from repro.serving.engine import ServingEngine
+    cfg, params, _ = small
+    engine = ServingEngine(cfg, params, max_batch=2, canvas_len=24,
+                           strategy=NoCache(),
+                           scheduler=ConfidenceScheduler())
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size - 1, 6).astype(np.int32)
+    engine.submit(prompt, gen_len=4,
+                  settings=DecodeSettings(parallel_threshold=0.3,
+                                          max_parallel=4))
+    engine.submit(prompt, gen_len=4)
+    engine.run()
+    assert {lane[2] for lane in engine._sessions} == {
+        ConfidenceScheduler(),
+        ParallelThresholdScheduler(threshold=0.3, max_parallel=4)}
+
+
+def test_engine_request_settings_win_wholesale(small):
+    """Explicit request settings with parallel_threshold=0.0 mean
+    SEQUENTIAL even when the engine default scheduler is parallel."""
+    from repro.serving.engine import ServingEngine
+    cfg, params, _ = small
+    engine = ServingEngine(
+        cfg, params, max_batch=2, canvas_len=24, strategy=NoCache(),
+        scheduler=ParallelThresholdScheduler(threshold=0.3,
+                                             max_parallel=4))
+    prompt = np.arange(6, dtype=np.int32) % (cfg.vocab_size - 1)
+    engine.submit(prompt, gen_len=4, settings=DecodeSettings())
+    engine.run()
+    assert {lane[2] for lane in engine._sessions} == {
+        ConfidenceScheduler()}
+
+
+def test_finished_session_runs_zero_steps_both_modes(small):
+    """run() and run_compiled() agree on an already-finished session:
+    zero steps, no refresh-cadence drift from no-commit forwards."""
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg)
+    sess.prefill(prompt, gen_len=4)
+    sess.run()
+    for runner in ("run", "run_compiled"):
+        toks, info = getattr(sess, runner)()
+        assert info["steps"] == 0
+        assert int((np.asarray(toks) == cfg.mask_id).sum()) == 0

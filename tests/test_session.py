@@ -60,6 +60,25 @@ def test_settings_override_strategy_refresh(small):
     assert sess.refresh_interval == 5         # one source of truth
 
 
+def test_refresh_interval_minus_one_disables(small):
+    """refresh_interval=-1 means NEVER refresh — it does not fall back
+    to the strategy default the way 0 does."""
+    cfg, params, prompt = small
+    sess = DecodeSession(
+        params, cfg,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=2),
+        settings=DecodeSettings(refresh_interval=-1))
+    assert sess.refresh_interval == 0
+    sess.prefill(prompt, gen_len=6)
+    sess.run()
+    assert sess.refresh_count == 0
+    # and the compiled loop agrees
+    sess.prefill(prompt, gen_len=6)
+    sess.run_compiled()
+    assert sess.refresh_count == 0
+
+
 def test_events_stream(small):
     cfg, params, prompt = small
     sess = DecodeSession(params, cfg)
@@ -95,6 +114,98 @@ def test_run_blocks_commits_left_to_right(small):
                                   np.asarray(prompt))
     # block boundaries trigger cache refreshes (one per non-first block)
     assert sess.refresh_count >= 1
+
+
+def test_decode_state_extras_not_shared(small):
+    """The old ``extras: Dict = {}`` NamedTuple default was ONE dict
+    shared by every DecodeState; a session mutating it leaked into
+    sibling sessions.  Defaults must be None and sessions must own a
+    fresh dict."""
+    from repro.dlm.decoding import DecodeState
+    assert DecodeState._field_defaults["extras"] is None
+    cfg, params, prompt = small
+    s1 = DecodeSession(params, cfg)
+    s2 = DecodeSession(params, cfg)
+    shared = {}
+    st1 = s1.prefill(prompt, gen_len=4, extras=shared)
+    st2 = s2.prefill(prompt, gen_len=4)
+    st1.extras["leak"] = jnp.zeros(())
+    assert "leak" not in st2.extras           # no cross-session leak
+    assert "leak" not in shared               # caller's dict not aliased
+
+
+def _vision_setup():
+    """Tiny vision-frontend model: extras carry real patch embeddings."""
+    cfg = reduced(get_arch("internvl2-76b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    f = max(cfg.frontend_tokens, 4)
+    return cfg, params, f
+
+
+def _vision_canvas(cfg, rng, n_text, gen_len):
+    p_len = n_text - gen_len
+    row = np.full((n_text,), cfg.mask_id, np.int32)
+    row[:p_len] = rng.integers(0, cfg.vocab_size - 1, p_len)
+    active = np.zeros((n_text,), bool)
+    active[p_len:] = True
+    return row, active
+
+
+def test_replace_rows_with_extras():
+    """Row surgery splices BOTH the canvas and the per-row extras (VLM
+    patches), and the swapped row's decode is byte-identical to a fresh
+    session attached directly to the replacement canvas."""
+    cfg, params, f = _vision_setup()
+    rng = np.random.default_rng(5)
+    n_text, gen_len = 16, 4
+    r0, a0 = _vision_canvas(cfg, rng, n_text, gen_len)
+    r1a, a1a = _vision_canvas(cfg, rng, n_text, gen_len)
+    r1b, a1b = _vision_canvas(cfg, rng, n_text, gen_len)
+    patches = rng.standard_normal((3, f, cfg.d_model)).astype(np.float32) \
+        * 0.02
+    p0, p1a, p1b = patches[0], patches[1], patches[2]
+
+    sess = DecodeSession(params, cfg)
+    sess.attach(np.stack([r0, r1a]), active=np.stack([a0, a1a]),
+                extras={"patches": jnp.asarray(np.stack([p0, p1a]))})
+    sess.step()
+    sess.step()
+    sess.replace_rows([1], r1b[None], a1b[None],
+                      row_extras={"patches": p1b[None]})
+    np.testing.assert_array_equal(
+        np.asarray(sess.state.extras["patches"][1]), p1b)
+    toks, _ = sess.run()
+
+    ref = DecodeSession(params, cfg)
+    ref.attach(np.stack([r1b, r1b]), active=np.stack([a1b, a1b]),
+               extras={"patches": jnp.asarray(np.stack([p1b, p1b]))})
+    ref_toks, _ = ref.run()
+    # rows are independent: the spliced row replays the fresh decode
+    np.testing.assert_array_equal(np.asarray(toks)[1],
+                                  np.asarray(ref_toks)[0])
+    assert int((np.asarray(toks) == cfg.mask_id).sum()) == 0
+
+
+def test_deactivate_rows_parks_slot(small):
+    """A parked slot stops committing (its masks survive) while the
+    sibling row decodes to completion."""
+    cfg, params, prompt = small
+    sess = DecodeSession(params, cfg)
+    sess.prefill(prompt, gen_len=6)
+    p_len = prompt.shape[1]
+    sess.deactivate_rows([1])
+    assert int(np.asarray(sess.state.n_masked)[1]) == 0
+    toks, _ = sess.run()
+    toks = np.asarray(toks)
+    assert (toks[0, p_len:] != cfg.mask_id).all()     # row 0 finished
+    assert (toks[1, p_len:] == cfg.mask_id).all()     # row 1 parked
+    # the parked row can be revived later via set_active
+    b, n = toks.shape
+    active = jnp.zeros((b, n), bool).at[1, p_len:].set(True)
+    sess.set_active(active)
+    assert int(np.asarray(sess.state.n_masked)[1]) == 6
+    toks2, _ = sess.run()
+    assert int((np.asarray(toks2) == cfg.mask_id).sum()) == 0
 
 
 def test_token_zero_is_a_legal_output(small):
