@@ -1,0 +1,116 @@
+"""Per-kernel microbench: Pallas kernels vs their jnp oracles.
+
+Times each serve-hot-path kernel (proxy_score, cosine_drift,
+gather_norm, sparse_attention, scatter_update_multi) against the
+equivalent XLA-op implementation at paper-flavoured shapes, and emits
+``BENCH_kernels.json`` to seed the perf trajectory.
+
+On this CPU container the Pallas side runs in INTERPRET mode, so its
+wall-clock is a correctness-wiring check, not a speed claim — the
+meaningful CPU numbers are the XLA-side baselines and the recorded
+shapes; on a TPU backend the same file reports real Mosaic timings.
+The JSON records which flavor ran (``pallas_mode``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+from repro.kernels import ops
+from repro.models import common
+from repro.models.attention import flash_attention
+from repro.core.svd_proxy import cosine_similarity
+
+OUT_PATH = "BENCH_kernels.json"
+
+
+def _time_us(fn: Callable, *args, reps: int = 5) -> float:
+    out = fn(*args)                      # warm-up / compile
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _shapes(quick: bool) -> Dict[str, int]:
+    if quick:
+        return dict(b=2, n=256, d=128, r=32, h=4, kvh=2, hd=32, k=64)
+    # LLaDA-8B-flavoured serve step: 4k canvas, rank-128 proxy, k=rho*N
+    return dict(b=2, n=4096, d=2048, r=128, h=16, kvh=16, hd=128, k=1024)
+
+
+def run(quick: bool = False) -> None:
+    s = _shapes(quick)
+    b, n, d, r, h, kvh, hd, k = (s[x] for x in
+                                 "b n d r h kvh hd k".split())
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    x = jax.random.normal(ks[0], (b, n, d))
+    w_r = jax.random.normal(ks[1], (d, r))
+    pc = jax.random.normal(ks[2], (b, n, r))
+    q = jax.random.normal(ks[3], (b, k, h, hd))
+    kv_k = jax.random.normal(ks[4], (b, n, kvh, hd))
+    kv_v = jax.random.normal(ks[5], (b, n, kvh, hd))
+    idx = jnp.sort(jax.random.randint(ks[6], (b, k), 0, n))
+    norm_w = jax.random.normal(ks[7], (d,)) * 0.1
+    h_rows = jax.random.normal(ks[0], (b, k, d))
+    kv_rows = jax.random.normal(ks[1], (b, k, kvh, hd))
+
+    # Arrays go in as jit ARGUMENTS on both sides: a nullary closure
+    # bakes them into the HLO as constants and XLA folds the whole op at
+    # compile time (the "timing" is then a constant fetch, ~45x off).
+    xla: Dict[str, tuple] = {
+        "proxy_score": (jax.jit(lambda a, w, p: (
+            cosine_similarity((a @ w).astype(a.dtype), p))), (x, w_r, pc)),
+        "cosine_drift": (jax.jit(lambda a, p: cosine_similarity(a, p)),
+                         (pc, pc)),
+        "gather_norm": (jax.jit(lambda a, i, w: common.rms_norm(
+            selection.gather_rows(a, i), w)), (x, idx, norm_w)),
+        "sparse_attention": (jax.jit(lambda qq, kk, vv, i: flash_attention(
+            qq, kk, vv, q_positions=i)), (q, kv_k, kv_v, idx)),
+        "scatter_update_multi": (jax.jit(lambda ck, cv, ch, i, rk, rv, rh: (
+            selection.scatter_rows(ck, i, rk),
+            selection.scatter_rows(cv, i, rv),
+            selection.scatter_rows(ch, i, rh))),
+            (kv_k, kv_v, x, idx, kv_rows, kv_rows, h_rows)),
+    }
+    pallas: Dict[str, tuple] = {
+        "proxy_score": (ops.proxy_score, (x, w_r, pc)),
+        "cosine_drift": (ops.cosine_drift, (pc, pc)),
+        "gather_norm": (ops.gather_norm, (x, idx, norm_w)),
+        "sparse_attention": (ops.sparse_attention, (q, kv_k, kv_v, idx)),
+        "scatter_update_multi": (
+            lambda ck, cv, ch, i, rk, rv, rh: ops.scatter_update_multi(
+                [ck, cv, ch], i, [rk, rv, rh]),
+            (kv_k, kv_v, x, idx, kv_rows, kv_rows, h_rows)),
+    }
+
+    mode = "mosaic" if jax.default_backend() == "tpu" else "interpret"
+    results: Dict[str, Dict] = {
+        "_meta": {"backend": jax.default_backend(), "pallas_mode": mode,
+                  "quick": quick, "shapes": s}}
+    print(f"{'kernel':24s} {'xla_us':>12s} {'pallas_us':>12s}   "
+          f"(pallas={mode})")
+    for name in xla:
+        fn_x, args_x = xla[name]
+        fn_p, args_p = pallas[name]
+        t_x = _time_us(fn_x, *args_x)
+        t_p = _time_us(fn_p, *args_p)
+        results[name] = {"xla_us": round(t_x, 1),
+                         "pallas_us": round(t_p, 1)}
+        print(f"{name:24s} {t_x:12.1f} {t_p:12.1f}")
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv or "-q" in sys.argv)

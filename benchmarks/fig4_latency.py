@@ -34,7 +34,10 @@ def timeit(fn, *args, reps=20):
 
 
 def loop_overhead(cfg, params, quick: bool = False):
-    """Mean per-step ms of the host run() loop vs run_compiled()."""
+    """Mean per-step ms of the host run() loop vs run_compiled(), on
+    both kernel backends (DESIGN.md §4.5).  Off-TPU the pallas row runs
+    the kernels in interpret mode — a wiring/latency sanity row, not a
+    speed claim (real Mosaic timings appear on a TPU backend)."""
     from repro.core.strategy import SPACache
     from repro.dlm.session import DecodeSession
 
@@ -44,9 +47,11 @@ def loop_overhead(cfg, params, quick: bool = False):
         jnp.int32)
     strat = SPACache(rank=16, schedule="uniform", rho_peak=0.25)
     out = []
-    for name, runner in (("decode_loop_host", "run"),
-                         ("decode_loop_compiled", "run_compiled")):
-        sess = DecodeSession(params, cfg, strategy=strat)
+    for name, runner, backend in (
+            ("decode_loop_host", "run", None),
+            ("decode_loop_compiled", "run_compiled", None),
+            ("decode_loop_compiled_pallas", "run_compiled", "pallas")):
+        sess = DecodeSession(params, cfg, strategy=strat, backend=backend)
         sess.prefill(prompt, gen_len)
         getattr(sess, runner)()            # compile + warm caches
         sess.prefill(prompt, gen_len)

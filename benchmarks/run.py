@@ -4,8 +4,9 @@
 ``python -m benchmarks.run --quick``    — reduced iteration counts
 ``python -m benchmarks.run --only t2``  — single benchmark
 ``python -m benchmarks.run --smoke``    — CI wiring check: table2+table3
-                                          at the tiniest configs (fails
-                                          fast on strategy/scheduler
+                                          at the tiniest configs plus the
+                                          kernel microbench (fails fast
+                                          on strategy/scheduler/backend
                                           plumbing regressions)
 """
 from __future__ import annotations
@@ -30,9 +31,10 @@ def main(argv=None) -> None:
     if args.smoke:
         args.quick = True
 
-    from benchmarks import (fig2_drift, fig4_latency, fig5_anisotropy,
-                            roofline, table1_identifiers, table2_main,
-                            table3_parallel, table4_ablation, table5_rank)
+    from benchmarks import (bench_kernels, fig2_drift, fig4_latency,
+                            fig5_anisotropy, roofline, table1_identifiers,
+                            table2_main, table3_parallel, table4_ablation,
+                            table5_rank)
     registry = {
         "t1": ("Table 1 identifiers", table1_identifiers.run),
         "t2": ("Table 2 main speedups", table2_main.run),
@@ -43,9 +45,11 @@ def main(argv=None) -> None:
         "fig4": ("Fig 4 latency decomposition", fig4_latency.run),
         "fig5": ("Fig 5 anisotropy", fig5_anisotropy.run),
         "roofline": ("Roofline table", roofline.run),
+        "kernels": ("Kernel microbench (BENCH_kernels.json)",
+                    bench_kernels.run),
     }
     if args.smoke:
-        names = ["t2", "t3"]
+        names = ["t2", "t3", "kernels"]
     elif args.only:
         names = [args.only]
     else:

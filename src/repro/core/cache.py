@@ -106,36 +106,48 @@ def init_model_cache(cfg: ModelConfig, batch: int, n: int, strategy=None
     return out
 
 
+def scatter_buffers(cache: Dict[str, jax.Array], idx: jax.Array,
+                    upd: Dict[str, jax.Array],
+                    backend=None) -> Dict[str, jax.Array]:
+    """Scatter row payloads ``upd`` [B,k,...] into the named cache
+    buffers at idx, through the KernelBackend — ONE aliased multi-buffer
+    kernel call on ``PallasBackend``, per-buffer XLA scatters otherwise.
+    Quantization (if any) happens before this, in XLA, on both backends.
+    """
+    if backend is None:
+        from repro.kernels.backend import XLA_BACKEND as backend
+    cache = dict(cache)
+    cache.update(backend.scatter_multi(
+        {name: cache[name] for name in upd}, idx, upd))
+    return cache
+
+
+def h_row_update(h_rows: jax.Array, policy: CachePolicy
+                 ) -> Dict[str, jax.Array]:
+    """Row payloads for an H^c commit ({"h"[, "h_scale"]})."""
+    if policy.quantized:
+        hq, hs = quantize_rows(h_rows)
+        return {"h": hq, "h_scale": hs}
+    return {"h": h_rows}
+
+
 def write_kv(cache: Dict[str, jax.Array], idx: jax.Array,
              k_rows: jax.Array, v_rows: jax.Array,
-             policy: CachePolicy) -> Dict[str, jax.Array]:
+             policy: CachePolicy, backend=None) -> Dict[str, jax.Array]:
     """Scatter new K/V rows ([B,k,KVH,HD]) into the layer cache at idx."""
-    from repro.core.selection import scatter_rows
-    cache = dict(cache)
     if policy.quantized:
         kq, ks = quantize_rows(k_rows)
         vq, vs = quantize_rows(v_rows)
-        cache["k"] = scatter_rows(cache["k"], idx, kq)
-        cache["v"] = scatter_rows(cache["v"], idx, vq)
-        cache["k_scale"] = scatter_rows(cache["k_scale"], idx, ks)
-        cache["v_scale"] = scatter_rows(cache["v_scale"], idx, vs)
+        upd = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     else:
-        cache["k"] = scatter_rows(cache["k"], idx, k_rows)
-        cache["v"] = scatter_rows(cache["v"], idx, v_rows)
-    return cache
+        upd = {"k": k_rows, "v": v_rows}
+    return scatter_buffers(cache, idx, upd, backend)
 
 
 def write_h(cache: Dict[str, jax.Array], idx: jax.Array, h_rows: jax.Array,
-            policy: CachePolicy) -> Dict[str, jax.Array]:
-    from repro.core.selection import scatter_rows
-    cache = dict(cache)
-    if policy.quantized:
-        hq, hs = quantize_rows(h_rows)
-        cache["h"] = scatter_rows(cache["h"], idx, hq)
-        cache["h_scale"] = scatter_rows(cache["h_scale"], idx, hs)
-    else:
-        cache["h"] = scatter_rows(cache["h"], idx, h_rows)
-    return cache
+            policy: CachePolicy, backend=None) -> Dict[str, jax.Array]:
+    return scatter_buffers(cache, idx, h_row_update(h_rows, policy),
+                           backend)
 
 
 def read_kv_for_attention(cache: Dict[str, jax.Array],

@@ -16,6 +16,11 @@ Execution modes:
   * unrolled  — exact per-layer k (small models, hybrids)
   * bucketed  — contiguous layer buckets with shared k compiled as
                 ``lax.scan`` segments (full-size models; DESIGN.md §4.4)
+
+The kernel-shaped stages of every phase (identification, gather+norm,
+attention, commits) dispatch through ``strategy.backend`` — a
+``KernelBackend`` (DESIGN.md §4.5): XLA ops by default, the Pallas TPU
+kernel suite with ``PallasBackend`` (selection/top-k always stays XLA).
 """
 from __future__ import annotations
 
@@ -30,7 +35,6 @@ from repro.core import budget, cache as cache_lib, identifiers, selection
 from repro.core.cache import CachePolicy
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.models import common
-from repro.models.attention import flash_attention
 from repro.models.transformer import (apply_block_dense, apply_ffn_or_moe,
                                       layer_window, qkv_project)
 
@@ -81,11 +85,17 @@ def _identifier_scores(strategy: CacheStrategy, bp: Params, proxy_mat, x,
                        cache_sl, scores_override, prev_idx=None):
     """Returns (scores, p_now_full_or_None, proxy_now_cache_or_None).
 
+    Projection + drift scoring run on ``strategy.backend`` — the fused
+    Pallas identification kernel on ``PallasBackend``, jnp ops on
+    ``XlaBackend`` (DESIGN.md §4.5).
+
     Incremental mode (beyond-paper, DESIGN.md §6): only rows whose
     INPUTS changed (= rows refreshed by the previous layer, or newly
     committed tokens at layer 0) can have drifted proxies, so the rank-r
     projection runs on those k rows instead of all N — identification HBM
-    traffic drops from N*d to k*d per layer."""
+    traffic drops from N*d to k*d per layer.  The full-N rescore against
+    the cached identifiers is the backend's score-only pass."""
+    backend = strategy.backend
     if scores_override is not None:
         return scores_override, None, None
     if (strategy.incremental and prev_idx is not None
@@ -94,11 +104,11 @@ def _identifier_scores(strategy: CacheStrategy, bp: Params, proxy_mat, x,
         p_rows = strategy.project(rows, bp, proxy_mat)
         proxy_now = selection.scatter_rows(cache_sl["proxy_now"],
                                            prev_idx, p_rows)
-        scores = strategy.score(
-            proxy_now.astype(jnp.float32), cache_sl["proxy"])
+        scores = backend.score_drift(
+            strategy, proxy_now.astype(jnp.float32), cache_sl["proxy"])
         return scores, None, proxy_now
-    p_now = strategy.project(x, bp, proxy_mat)
-    scores = strategy.score(p_now, cache_sl["proxy"])
+    scores, p_now = backend.identifier_scores(strategy, bp, proxy_mat, x,
+                                              cache_sl["proxy"])
     return scores, p_now, None
 
 
@@ -147,14 +157,16 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
     # MEASURED WORSE (7x compute): GSPMD lowers a cross-shard gather with
     # sharded output to a one-hot matmul (B*k*N*d FLOPs). Rows stay
     # replicated over "model"; the gather costs one all-reduce per layer.
-    h_rows = selection.gather_rows(h, idx)          # ONE bf16 gather
-    x_rows = common.rms_norm(h_rows, bp["norm1"], cfg.norm_eps)
+    # The backend's gather_norm emits BOTH the raw rows (residual) and
+    # the rms-normed rows (QKV input) in one pass over the k rows.
+    h_rows, x_rows = strategy.backend.gather_norm(h, idx, bp["norm1"],
+                                                  cfg.norm_eps)
 
     # ---- Phase 2: attention with partially cached KV ----
     q, k_new, v_new = qkv_project(bp, x_rows, cfg, idx)
     cache_sl = strategy.commit_kv(cache_sl, idx, k_new, v_new, policy)
     kf, vf, ks, vs = cache_lib.read_kv_for_attention(cache_sl, policy)
-    attn = flash_attention(
+    attn = strategy.backend.attention(
         q, kf, vf, k_scale=ks, v_scale=vs, q_positions=idx, window=w,
         soft_cap=cfg.attn_softcap, banded=(w > 0 and span > 0),
         q_span=span)
@@ -198,14 +210,15 @@ def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
     positions = jnp.broadcast_to(jnp.arange(n)[None], (b, n))
     q_all, k_all, v_all = qkv_project(bp, x, cfg, positions)
     kf, vf, ks, vs = cache_lib.read_kv_for_attention(cache_sl, policy)
-    attn_all = flash_attention(
+    attn_all = strategy.backend.attention(
         q_all, kf, vf, k_scale=ks, v_scale=vs, window=w,
         soft_cap=cfg.attn_softcap, banded=(w > 0))
     attn_all = attn_all.reshape(b, n, cfg.q_dim) @ bp["wo"]
     if cfg.post_norms:
         attn_all = common.rms_norm(attn_all, bp["norm_post_attn"],
                                    cfg.norm_eps)
-    scores = strategy.score(attn_all, cache_sl["proxy"])
+    scores = strategy.backend.score_drift(strategy, attn_all,
+                                          cache_sl["proxy"])
     idx = selection.select_topk_drift(scores, k_upd)
 
     cache_sl = strategy.commit_kv(
@@ -240,7 +253,8 @@ def spa_forward(params: Params, cfg: ModelConfig,
                 spa_proxies: Optional[Dict[str, jax.Array]] = None,
                 scores_override: Optional[jax.Array] = None,
                 changed_idx: Optional[jax.Array] = None,
-                strategy: Optional[CacheStrategy] = None
+                strategy: Optional[CacheStrategy] = None,
+                backend=None
                 ) -> Tuple[jax.Array, Dict, jax.Array]:
     """Run all blocks with the given CacheStrategy on attention layers.
 
@@ -248,9 +262,13 @@ def spa_forward(params: Params, cfg: ModelConfig,
     prefill). changed_idx [B, c]: positions whose INPUT rows changed since
     the previous step (newly committed tokens) — used by the incremental
     identifier. strategy defaults to ``cfg.spa`` resolved through the
-    registry. Returns (h_final, new_cache, aux).
+    registry; ``backend`` (a KernelBackend or "xla"/"pallas") overrides
+    the strategy's kernel backend for this call. Returns (h_final,
+    new_cache, aux).
     """
     strategy = resolve_strategy(cfg, strategy)
+    if backend is not None:
+        strategy = strategy.with_backend(backend)
     policy = CachePolicy.from_config(cfg)
     b, n = h.shape[0], h.shape[1]
     ks = strategy.k_schedule(cfg, n)

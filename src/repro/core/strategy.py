@@ -31,7 +31,11 @@ A strategy owns:
 
 Strategies are hashable (frozen dataclasses) so jitted step functions
 close over them statically — switching strategy retraces, switching
-request does not.
+request does not.  The same applies to the ``backend`` field (a
+:class:`repro.kernels.backend.KernelBackend`): it selects whether the
+hot-path stages (identification, gather+norm, attention, commits) run
+through XLA ops or the Pallas TPU kernel suite, per call, without
+touching the serializable spec.
 """
 from __future__ import annotations
 
@@ -42,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTENTION_KINDS, ModelConfig, SPAConfig
+from repro.kernels.backend import XLA_BACKEND, KernelBackend
 
 Params = Dict[str, Any]
 
@@ -66,10 +71,14 @@ class CacheStrategy:
     ``refresh_interval`` — full cache rebuild every R steps (0 = never);
     the *session* owns the loop, this is just the strategy's default.
     ``n_buckets`` — lax.scan budget quantization (DESIGN.md §4.4).
+    ``backend`` — KernelBackend running the hot-path stages (DESIGN.md
+    §4.5); not part of the serializable spec (``from_spec`` yields the
+    XLA default — use :meth:`with_backend` to select kernels).
     """
 
     refresh_interval: int = 0
     n_buckets: int = 6
+    backend: KernelBackend = XLA_BACKEND
 
     name: ClassVar[str] = "abstract"
     uses_cache: ClassVar[bool] = True     # False only for NoCache
@@ -82,6 +91,12 @@ class CacheStrategy:
     @property
     def spec(self) -> SPAConfig:
         raise NotImplementedError
+
+    def with_backend(self, backend) -> "CacheStrategy":
+        """Same strategy, hot path on the given KernelBackend (or
+        registry name "xla"/"pallas")."""
+        from repro.kernels.backend import resolve_backend
+        return dataclasses.replace(self, backend=resolve_backend(backend))
 
     # ---- budget ----
 
@@ -99,6 +114,15 @@ class CacheStrategy:
                 proxy_mat: Optional[jax.Array] = None) -> jax.Array:
         """Project (scaled) input states to identifier vectors p."""
         raise NotImplementedError(f"{self.name} has no projection")
+
+    def projection_matrix(self, bp: Params,
+                          proxy_mat: Optional[jax.Array] = None
+                          ) -> Optional[jax.Array]:
+        """The [d, r] matrix M with ``project(h) == h @ M``, when the
+        projection is a plain matmul — lets ``PallasBackend`` run the
+        fused projection+scoring kernel.  None means "not expressible";
+        the backend then falls back to ``project``/``score``."""
+        return None
 
     def score(self, p_now: jax.Array, p_cached: jax.Array) -> jax.Array:
         """Similarity per row [B, N]; LOW = drifted = update."""
@@ -135,9 +159,11 @@ class CacheStrategy:
     def commit_kv(self, cache_sl: Dict[str, jax.Array], idx: jax.Array,
                   k_rows: jax.Array, v_rows: jax.Array, policy
                   ) -> Dict[str, jax.Array]:
-        """Scatter refreshed K/V rows into the layer cache at idx."""
+        """Scatter refreshed K/V rows into the layer cache at idx (one
+        aliased multi-buffer kernel call on the Pallas backend)."""
         from repro.core import cache as cache_lib
-        return cache_lib.write_kv(cache_sl, idx, k_rows, v_rows, policy)
+        return cache_lib.write_kv(cache_sl, idx, k_rows, v_rows, policy,
+                                  backend=self.backend)
 
     def commit(self, cache_sl: Dict[str, jax.Array], idx: jax.Array,
                h_rows: jax.Array, policy, *,
@@ -145,22 +171,25 @@ class CacheStrategy:
                proxy_now: Optional[jax.Array] = None,
                attn_all: Optional[jax.Array] = None
                ) -> Dict[str, jax.Array]:
-        """Scatter refreshed block outputs + identifier vectors at idx."""
+        """Scatter refreshed block outputs + identifier vectors at idx.
+
+        H rows (+ int8 scale) and the proxy rows commit in ONE
+        multi-buffer scatter (aliased kernel call on PallasBackend)."""
         from repro.core import cache as cache_lib
         from repro.core import selection
-        cache_sl = dict(cache_lib.write_h(cache_sl, idx, h_rows, policy))
+        upd = cache_lib.h_row_update(h_rows, policy)
         if proxy_now is not None:   # incremental path keeps both buffers
+            upd["proxy"] = selection.gather_rows(proxy_now, idx)
+        elif p_now is not None and "proxy" in cache_sl:
+            upd["proxy"] = selection.gather_rows(p_now, idx)
+        cache_sl = cache_lib.scatter_buffers(cache_sl, idx, upd,
+                                             backend=self.backend)
+        if proxy_now is not None:
             cache_sl["proxy_now"] = proxy_now.astype(
                 cache_sl["proxy_now"].dtype)
-            cache_sl["proxy"] = selection.scatter_rows(
-                cache_sl["proxy"], idx,
-                selection.gather_rows(proxy_now, idx))
-        elif p_now is not None:
-            cache_sl["proxy"] = selection.scatter_rows(
-                cache_sl["proxy"], idx, selection.gather_rows(p_now, idx))
-            if "proxy_now" in cache_sl:
-                cache_sl["proxy_now"] = p_now.astype(
-                    cache_sl["proxy_now"].dtype)
+        elif p_now is not None and "proxy_now" in cache_sl:
+            cache_sl["proxy_now"] = p_now.astype(
+                cache_sl["proxy_now"].dtype)
         return cache_sl
 
     def refresh_cache(self, params: Params, cfg: ModelConfig,
@@ -238,6 +267,10 @@ class SPACache(CacheStrategy):
     def project(self, h, bp, proxy_mat=None):
         assert proxy_mat is not None, "SPACache needs offline proxies"
         return h @ proxy_mat
+
+    def projection_matrix(self, bp, proxy_mat=None):
+        assert proxy_mat is not None, "SPACache needs offline proxies"
+        return proxy_mat
 
     def build_proxies(self, params, cfg):
         """Offline SVD of value projections -> {kind: [Lk, d, r]}."""
@@ -332,6 +365,10 @@ class ValueProxyCache(_RhoBudgetStrategy):
             return h @ bp["wk"]
         return h                      # attn_in: raw inputs
 
+    def projection_matrix(self, bp, proxy_mat=None):
+        w = {"value": "wv", "query": "wq", "key": "wk"}.get(self.projection)
+        return bp[w] if w else None   # attn_in: identity (score-only)
+
 
 @register("window")
 @dataclasses.dataclass(frozen=True)
@@ -389,7 +426,8 @@ class AttnOutCache(_RhoBudgetStrategy):
     def commit(self, cache_sl, idx, h_rows, policy, *, p_now=None,
                proxy_now=None, attn_all=None):
         from repro.core import cache as cache_lib
-        cache_sl = dict(cache_lib.write_h(cache_sl, idx, h_rows, policy))
+        cache_sl = cache_lib.write_h(cache_sl, idx, h_rows, policy,
+                                     backend=self.backend)
         # momentum signal: proxy = latest full attention output
         cache_sl["proxy"] = attn_all.astype(cache_sl["proxy"].dtype)
         return cache_sl

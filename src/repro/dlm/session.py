@@ -8,7 +8,8 @@ owns all of it:
   * the canvas (tokens + active-position mask + masked counts),
   * the strategy cache and its lifecycle (prefill / periodic refresh),
   * the jitted step function (compiled once per
-    (strategy, settings, scheduler)),
+    (strategy, settings, scheduler) — the strategy's ``KernelBackend``
+    (``backend=`` here, "xla" or "pallas") is part of that key),
   * the commit policy — an ``UnmaskScheduler`` (dlm/scheduler.py);
     legacy ``DecodeSettings.parallel_threshold`` resolves to one,
   * row-granular state surgery for continuous batching
@@ -77,10 +78,15 @@ class DecodeSession:
                  strategy: Optional[CacheStrategy] = None,
                  settings: Optional[DecodeSettings] = None,
                  scheduler: Optional[UnmaskScheduler] = None,
-                 spa_proxies=None):
+                 spa_proxies=None, backend=None):
         self.params = params
         self.cfg = cfg
         self.strategy = resolve_strategy(cfg, strategy)
+        if backend is not None:
+            # hot-path kernel dispatch (KernelBackend or "xla"/"pallas");
+            # rides on the strategy so the jitted step/loop close over it
+            # statically, exactly like the strategy and scheduler.
+            self.strategy = self.strategy.with_backend(backend)
         self.settings = settings or DecodeSettings()
         self.scheduler = resolve_scheduler(self.settings, scheduler)
         # ONE source of truth for periodic refresh (see module docstring):

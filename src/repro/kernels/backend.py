@@ -1,0 +1,205 @@
+"""KernelBackend — pluggable kernel dispatch for the serve hot path.
+
+The per-step hot loop of ``core.spa_layer.spa_attn_block`` has four
+kernel-shaped stages: Phase-1 identification (projection + drift
+scoring), the Phase-1 epilogue (gather + rms_norm of the selected
+rows), Phase-2 gathered-query attention, and the Phase-2/3 cache
+commits (row scatters).  A :class:`KernelBackend` owns all four, so the
+whole layer step runs either through pure-XLA ops or through the Pallas
+TPU kernel suite — selected per ``DecodeSession``/``spa_forward`` call
+and threaded through ``CacheStrategy`` (a frozen-dataclass field), so
+jitted steps close over the backend statically exactly like strategies
+and schedulers: switching backend retraces once, switching request does
+not.
+
+  ``XlaBackend``    — the current jnp ops (the oracle; default).
+  ``PallasBackend`` — TPU kernels (``kernels/*``); interpret mode on
+                      CPU.  Decodes byte-identically to ``XlaBackend``
+                      for every registered strategy and scheduler
+                      (tests/test_backend_parity.py) because the
+                      kernels mirror the XLA numerics op-for-op.
+
+Dispatch rules (DESIGN.md §4.5): top-k/stratified SELECTION always
+stays in XLA (tiny, latency-bound, and ``jax.lax.top_k`` is already
+optimal on TPU); the Pallas identification path engages only when the
+strategy's projection is a plain matrix (``projection_matrix``) or the
+identity, and only when the strategy keeps the base cosine ``score`` —
+anything else falls back to the strategy's own ops, so custom
+strategies stay correct on either backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """Protocol base: the four hot-path stages of one SPA layer step."""
+
+    name: ClassVar[str] = "abstract"
+
+    def identifier_scores(self, strategy, bp: Params, proxy_mat,
+                          x: jax.Array, p_cached: jax.Array):
+        """Phase 1: project x and score drift. Returns (scores, p_now)."""
+        raise NotImplementedError
+
+    def score_drift(self, strategy, p_now: jax.Array,
+                    p_cached: jax.Array) -> jax.Array:
+        """Score-only drift (incremental rescore, attn_out momentum)."""
+        raise NotImplementedError
+
+    def gather_norm(self, h: jax.Array, idx: jax.Array,
+                    weight: jax.Array, eps: float):
+        """Phase-1 epilogue: returns (rows [B,k,d], rms-normed rows)."""
+        raise NotImplementedError
+
+    def attention(self, q, k, v, *, k_scale=None, v_scale=None,
+                  q_positions=None, window: int = 0, soft_cap: float = 0.0,
+                  banded: bool = False, q_span: int = 0) -> jax.Array:
+        """Phase 2: (gathered-)query flash attention vs the KV cache."""
+        raise NotImplementedError
+
+    def scatter_multi(self, buffers: Dict[str, jax.Array], idx: jax.Array,
+                      rows: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Phase 2/3 commit: scatter row payloads into cache buffers."""
+        raise NotImplementedError
+
+    # -- shared fallback helpers ------------------------------------
+
+    @staticmethod
+    def _base_score(strategy) -> bool:
+        """Whether the strategy keeps the protocol's cosine ``score``."""
+        from repro.core.strategy import CacheStrategy
+        return type(strategy).score is CacheStrategy.score
+
+
+@dataclasses.dataclass(frozen=True)
+class XlaBackend(KernelBackend):
+    """Pure-jnp ops (the oracle): exactly the pre-backend serve path."""
+
+    name: ClassVar[str] = "xla"
+
+    def identifier_scores(self, strategy, bp, proxy_mat, x, p_cached):
+        p_now = strategy.project(x, bp, proxy_mat)
+        return strategy.score(p_now, p_cached), p_now
+
+    def score_drift(self, strategy, p_now, p_cached):
+        return strategy.score(p_now, p_cached)
+
+    def gather_norm(self, h, idx, weight, eps):
+        from repro.core import selection
+        from repro.models import common
+        rows = selection.gather_rows(h, idx)
+        return rows, common.rms_norm(rows, weight, eps)
+
+    def attention(self, q, k, v, *, k_scale=None, v_scale=None,
+                  q_positions=None, window=0, soft_cap=0.0, banded=False,
+                  q_span=0):
+        from repro.models.attention import flash_attention
+        return flash_attention(q, k, v, k_scale=k_scale, v_scale=v_scale,
+                               q_positions=q_positions, window=window,
+                               soft_cap=soft_cap, banded=banded,
+                               q_span=q_span)
+
+    def scatter_multi(self, buffers, idx, rows):
+        from repro.core import selection
+        return {name: selection.scatter_rows(buffers[name], idx, r)
+                for name, r in rows.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(KernelBackend):
+    """The Pallas TPU kernel suite on the hot path.
+
+    ``interpret=None`` resolves per process: real Mosaic lowering on a
+    TPU backend, interpret mode elsewhere (CPU CI validates the exact
+    TPU program logic).  ``block_q``/``block_k`` mirror the XLA flash
+    defaults so the online-softmax block structure — and therefore the
+    f32 accumulation order — is identical across backends.
+    """
+
+    interpret: Optional[bool] = None
+    block_q: int = 512
+    block_k: int = 512
+
+    name: ClassVar[str] = "pallas"
+
+    def _interp(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def identifier_scores(self, strategy, bp, proxy_mat, x, p_cached):
+        from repro.kernels import proxy_score as ps
+        if not self._base_score(strategy):
+            return XLA_BACKEND.identifier_scores(strategy, bp, proxy_mat,
+                                                 x, p_cached)
+        mat = strategy.projection_matrix(bp, proxy_mat)
+        if mat is not None:
+            return ps.proxy_score(x, mat, p_cached,
+                                  interpret=self._interp())
+        p_now = strategy.project(x, bp, proxy_mat)
+        if p_now is x:      # identity projection (attn_in): score-only
+            return ps.cosine_drift(x, p_cached,
+                                   interpret=self._interp()), p_now
+        # inexpressible projection: strategy's own ops (stays correct)
+        return strategy.score(p_now, p_cached), p_now
+
+    def score_drift(self, strategy, p_now, p_cached):
+        from repro.kernels import proxy_score as ps
+        if not self._base_score(strategy):
+            return strategy.score(p_now, p_cached)
+        return ps.cosine_drift(p_now, p_cached, interpret=self._interp())
+
+    def gather_norm(self, h, idx, weight, eps):
+        from repro.kernels import proxy_score as ps
+        return ps.gather_norm(h, idx, weight, eps,
+                              interpret=self._interp())
+
+    def attention(self, q, k, v, *, k_scale=None, v_scale=None,
+                  q_positions=None, window=0, soft_cap=0.0, banded=False,
+                  q_span=0):
+        from repro.kernels import sparse_attention as sa
+        b, sq = q.shape[:2]
+        if q_positions is None:     # contiguous canvas: span = q block
+            q_positions = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+            q_span = min(self.block_q, sq)
+        return sa.sparse_attention(
+            q, k, v, q_positions, k_scale=k_scale, v_scale=v_scale,
+            window=window, soft_cap=soft_cap, banded=banded,
+            q_span=q_span, block_q=self.block_q, block_k=self.block_k,
+            interpret=self._interp())
+
+    def scatter_multi(self, buffers, idx, rows):
+        from repro.kernels import scatter_update as sc
+        names = sorted(rows)        # deterministic kernel operand order
+        outs = sc.scatter_update_multi(
+            [buffers[n] for n in names], idx, [rows[n] for n in names],
+            interpret=self._interp())
+        return dict(zip(names, outs))
+
+
+XLA_BACKEND = XlaBackend()
+PALLAS_BACKEND = PallasBackend()
+
+REGISTRY: Dict[str, KernelBackend] = {
+    "xla": XLA_BACKEND,
+    "pallas": PALLAS_BACKEND,
+}
+
+
+def resolve_backend(backend) -> KernelBackend:
+    """Accept a KernelBackend instance or a registry name."""
+    if isinstance(backend, str):
+        try:
+            return REGISTRY[backend]
+        except KeyError:
+            raise ValueError(f"unknown kernel backend {backend!r}; "
+                             f"registered: {sorted(REGISTRY)}") from None
+    return backend

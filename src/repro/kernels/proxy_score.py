@@ -1,14 +1,34 @@
-"""Pallas kernel: fused singular-proxy projection + drift scoring.
+"""Pallas kernels for SPA-Cache Phase 1 (identification) hot spots.
 
-The paper's identification hot spot (Fig. 4): p = x @ W_r followed by a
-rowwise cosine similarity against the cached identifiers. On GPU these are
-two kernels with an HBM round-trip for p; on TPU we fuse them — x streams
-HBM -> VMEM once per block, the projection runs on the MXU (r is padded to
-a multiple of 128 by construction), and the similarity reduction runs on
-the VPU while the block is still resident.
+``proxy_score``: the paper's identification kernel (Fig. 4): p = x @ W_r
+followed by a rowwise cosine similarity against the cached identifiers.
+On GPU these are two kernels with an HBM round-trip for p; on TPU we fuse
+them — x streams HBM -> VMEM once per block, the projection runs on the
+MXU (r is padded to a multiple of 128 by construction), and the
+similarity reduction runs on the VPU while the block is still resident.
+The batch dimension is a real grid axis (serve batches never round-trip
+through a vmap-of-interpret shim).
 
-Grid: (N / block_n,). VMEM per step: block_n*d (x) + d*r (W_r) +
-2*block_n*r (p_now, p_cached) floats — block_n chosen so this fits ~8 MB.
+``cosine_drift``: the projection-free variant (attn_in identifier, the
+incremental-identifier full-N rescore): same single pass over the rows,
+no matmul.
+
+``gather_norm``: Phase-1 epilogue — the k SELECTED rows are gathered
+from the full residual stream and rms-normed in one pass, emitting both
+the raw rows (for the residual add) and the normed rows (for QKV): one
+HBM read of k rows instead of a gather plus a second norm pass.
+
+Numerics are matched to the XLA serve path bit-for-bit: the projection
+accumulates in f32, rounds through the storage dtype, and the cosine is
+computed on the ROUNDED p (exactly what ``strategy.project`` followed by
+``strategy.score`` produces), so ``PallasBackend`` decodes byte-identically
+to ``XlaBackend`` (tests/test_backend_parity.py).
+
+Grids: proxy_score/cosine_drift (B, N / block_n) — VMEM per step:
+block_n*d (x) + d*r (W_r) + 2*block_n*r floats, block_n chosen to fit
+~8 MB.  gather_norm (B, k / block_g) with the row indices in SMEM and the
+full stream in ANY memory; each row moves HBM->VMEM once (the per-row
+dynamic-slice load lowers to a DMA, like scatter_update's stores).
 """
 from __future__ import annotations
 
@@ -17,19 +37,34 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cosine(p: jax.Array, pc: jax.Array, eps: float) -> jax.Array:
+    num = jnp.sum(p * pc, axis=-1)
+    den = jnp.sqrt(jnp.sum(p * p, axis=-1) * jnp.sum(pc * pc, axis=-1))
+    return num / jnp.maximum(den, eps)
 
 
 def _proxy_score_kernel(x_ref, w_ref, pc_ref, scores_ref, pnow_ref, *,
                         eps: float):
-    x = x_ref[...].astype(jnp.float32)           # [bn, d]
+    x = x_ref[0].astype(jnp.float32)             # [bn, d]
     w = w_ref[...].astype(jnp.float32)           # [d, r]
-    pc = pc_ref[...].astype(jnp.float32)         # [bn, r]
+    pc = pc_ref[0].astype(jnp.float32)           # [bn, r]
     p = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    num = jnp.sum(p * pc, axis=-1)
-    den = jnp.sqrt(jnp.sum(p * p, axis=-1) * jnp.sum(pc * pc, axis=-1))
-    scores_ref[...] = num / jnp.maximum(den, eps)
-    pnow_ref[...] = p.astype(pnow_ref.dtype)
+    # round p through the storage dtype BEFORE scoring — the XLA path
+    # scores on the bf16 projection it commits, and byte-parity of the
+    # selections requires scoring the same values.
+    p_store = p.astype(pnow_ref.dtype)
+    scores_ref[0] = _cosine(p_store.astype(jnp.float32), pc, eps)
+    pnow_ref[0] = p_store
+
+
+def _cosine_drift_kernel(x_ref, pc_ref, scores_ref, *, eps: float):
+    x = x_ref[0].astype(jnp.float32)
+    pc = pc_ref[0].astype(jnp.float32)
+    scores_ref[0] = _cosine(x, pc, eps)
 
 
 def proxy_score_block_n(d: int, r: int, vmem_budget: int = 8 * 2 ** 20
@@ -40,37 +75,135 @@ def proxy_score_block_n(d: int, r: int, vmem_budget: int = 8 * 2 ** 20
     return max(8, (bn // 8) * 8)
 
 
+def _batched(*arrays):
+    """Add a size-1 batch axis to 2D inputs (legacy unbatched callers)."""
+    return tuple(a if a is None or a.ndim == 3 else a[None]
+                 for a in arrays)
+
+
 def proxy_score(x: jax.Array, proxy_mat: jax.Array, p_cached: jax.Array,
                 *, eps: float = 1e-8, block_n: int = 0,
                 interpret: bool = False):
-    """x: [N, d]; proxy_mat: [d, r]; p_cached: [N, r].
-    Returns (scores [N] f32, p_now [N, r] in x.dtype)."""
-    n, d = x.shape
+    """x: [B, N, d] (or [N, d]); proxy_mat: [d, r]; p_cached: [B, N, r].
+    Returns (scores [B, N] f32, p_now [B, N, r] in x.dtype)."""
+    unbatched = x.ndim == 2
+    x, p_cached = _batched(x, p_cached)
+    b, n, d = x.shape
     r = proxy_mat.shape[1]
     bn = block_n or proxy_score_block_n(d, r)
     bn = min(bn, n)
     pad = (-n) % bn
     if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-        p_cached = jnp.pad(p_cached, ((0, pad), (0, 0)))
-    n_p = x.shape[0]
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        p_cached = jnp.pad(p_cached, ((0, 0), (0, pad), (0, 0)))
+    n_p = x.shape[1]
 
     scores, p_now = pl.pallas_call(
         functools.partial(_proxy_score_kernel, eps=eps),
-        grid=(n_p // bn,),
+        grid=(b, n_p // bn),
         in_specs=[
-            pl.BlockSpec((bn, d), lambda i: (i, 0)),
-            pl.BlockSpec((d, r), lambda i: (0, 0)),
-            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+            pl.BlockSpec((1, bn, d), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec((d, r), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, bn, r), lambda bb, i: (bb, i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+            pl.BlockSpec((1, bn), lambda bb, i: (bb, i)),
+            pl.BlockSpec((1, bn, r), lambda bb, i: (bb, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_p,), jnp.float32),
-            jax.ShapeDtypeStruct((n_p, r), x.dtype),
+            jax.ShapeDtypeStruct((b, n_p), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_p, r), x.dtype),
         ],
         interpret=interpret,
     )(x, proxy_mat, p_cached)
-    return scores[:n], p_now[:n]
+    scores, p_now = scores[:, :n], p_now[:, :n]
+    return (scores[0], p_now[0]) if unbatched else (scores, p_now)
+
+
+def cosine_drift(x: jax.Array, p_cached: jax.Array, *, eps: float = 1e-8,
+                 block_n: int = 0, interpret: bool = False) -> jax.Array:
+    """Projection-free drift: cosine(x, p_cached) per row.
+    x, p_cached: [B, N, r] (or [N, r]).  Returns [B, N] f32."""
+    unbatched = x.ndim == 2
+    x, p_cached = _batched(x, p_cached)
+    b, n, r = x.shape
+    bn = block_n or proxy_score_block_n(r, r)
+    bn = min(bn, n)
+    pad = (-n) % bn
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        p_cached = jnp.pad(p_cached, ((0, 0), (0, pad), (0, 0)))
+    n_p = x.shape[1]
+
+    scores = pl.pallas_call(
+        functools.partial(_cosine_drift_kernel, eps=eps),
+        grid=(b, n_p // bn),
+        in_specs=[
+            pl.BlockSpec((1, bn, r), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec((1, bn, r), lambda bb, i: (bb, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda bb, i: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_p), jnp.float32),
+        interpret=interpret,
+    )(x, p_cached)
+    scores = scores[:, :n]
+    return scores[0] if unbatched else scores
+
+
+def _gather_norm_kernel(idx_ref, w_ref, h_ref, rows_ref, normed_ref, *,
+                        eps: float, gb: int):
+    bb = pl.program_id(0)
+    w = w_ref[...].astype(jnp.float32)            # [d]
+
+    def body(j, carry):
+        ri = idx_ref[0, j]
+        row = h_ref[pl.dslice(bb, 1), pl.dslice(ri, 1), :]     # [1, 1, d]
+        rows_ref[0, pl.dslice(j, 1), :] = row[0]
+        rf = row[0, 0].astype(jnp.float32)
+        var = jnp.mean(rf * rf)
+        normed = (rf * jax.lax.rsqrt(var + eps)) * (1.0 + w)
+        normed_ref[0, pl.dslice(j, 1), :] = normed[None].astype(
+            normed_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, gb, body, 0)
+
+
+def gather_norm(h: jax.Array, idx: jax.Array, weight: jax.Array,
+                eps: float = 1e-6, *, block_g: int = 128,
+                interpret: bool = False):
+    """Fused gathered-row rms_norm (Phase-1 epilogue).
+
+    h: [B, N, d]; idx: [B, k] (out-of-range clamps like a "clip"-mode
+    gather); weight: [d] rms_norm scale.  Returns (rows [B, k, d] raw,
+    normed [B, k, d]) — one pass over the k selected rows.
+    """
+    b, n, d = h.shape
+    k = idx.shape[1]
+    idx = jnp.clip(idx.astype(jnp.int32), 0, n - 1)
+    gb = min(block_g, k)
+    pad = (-k) % gb
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))   # clamped dupes, sliced off
+    kp = idx.shape[1]
+
+    rows, normed = pl.pallas_call(
+        functools.partial(_gather_norm_kernel, eps=eps, gb=gb),
+        grid=(b, kp // gb),
+        in_specs=[
+            pl.BlockSpec((1, gb), lambda bb, i: (bb, i),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((d,), lambda bb, i: (0,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, gb, d), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec((1, gb, d), lambda bb, i: (bb, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kp, d), h.dtype),
+            jax.ShapeDtypeStruct((b, kp, d), h.dtype),
+        ],
+        interpret=interpret,
+    )(idx, weight, h)
+    return rows[:, :k], normed[:, :k]

@@ -8,15 +8,18 @@ import jax.numpy as jnp
 def proxy_score_ref(x: jax.Array, proxy_mat: jax.Array,
                     p_cached: jax.Array, eps: float = 1e-8):
     """x: [N, d]; proxy_mat: [d, r]; p_cached: [N, r].
-    Returns (scores [N], p_now [N, r]) — scores = cosine(p_now, p_cached).
+    Returns (scores [N], p_now [N, r]) — scores = cosine(p_now, p_cached),
+    scored on p_now AFTER rounding through x.dtype (the value the serve
+    path commits and scores — the kernel matches this bit-for-bit).
     """
-    p_now = (x.astype(jnp.float32) @ proxy_mat.astype(jnp.float32))
+    p_now = (x.astype(jnp.float32)
+             @ proxy_mat.astype(jnp.float32)).astype(x.dtype)
+    pf = p_now.astype(jnp.float32)
     pc = p_cached.astype(jnp.float32)
-    num = jnp.sum(p_now * pc, axis=-1)
-    den = jnp.sqrt(jnp.sum(p_now * p_now, axis=-1)
-                   * jnp.sum(pc * pc, axis=-1))
+    num = jnp.sum(pf * pc, axis=-1)
+    den = jnp.sqrt(jnp.sum(pf * pf, axis=-1) * jnp.sum(pc * pc, axis=-1))
     scores = num / jnp.maximum(den, eps)
-    return scores, p_now.astype(x.dtype)
+    return scores, p_now
 
 
 def sparse_attention_ref(q, k, v, q_pos, *, k_scale=None, v_scale=None,

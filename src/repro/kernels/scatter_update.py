@@ -1,20 +1,29 @@
-"""Pallas kernel: scatter k refreshed rows into a cache buffer in place.
+"""Pallas kernel: scatter k refreshed rows into cache buffers in place.
 
-The Upd module of Algorithm 1 (K/V/H cache writes). The cache is aliased
-input->output (no copy); the grid walks index blocks, row indices live in
-SMEM, row payloads stream through VMEM, and each row is written with a
-dynamic-slice store.
+The Upd module of Algorithm 1 (K/V/H^c/proxy cache writes).  All buffers
+are aliased input->output (no copy); the grid walks (batch, index-block)
+steps, row indices live in SMEM, row payloads stream through VMEM, and
+rows are written with dynamic-slice stores into the full cache refs.
 
-NOTE on hardware: the per-row store to the full-cache ref lowers to a
-VMEM->HBM DMA per row on TPU; a production variant would batch rows into
-contiguous runs (sorted indices make runs common) and issue strided
-async copies. Correctness is validated in interpret mode against
-ref.scatter_update_ref; the batching optimization only changes DMA
+``scatter_update_multi`` commits an arbitrary set of cache buffers (K,
+V, H, proxy, int8 scales — any mix of dtypes/row widths) for a whole
+[B, N, ·] cache slice in ONE aliased call, so a layer's Phase-2 commit
+(k+v+scales) and Phase-3 commit (h+scale+proxy) each cost a single
+kernel launch instead of one scatter per buffer.
+
+DMA granularity: selection indices arrive SORTED (top-k positions are
+sorted before the gather), so runs of consecutive indices are common.
+The kernel walks ``run``-sized chunks and, when a chunk is exactly
+contiguous (idx[i+t] == idx[i]+t for every t), issues ONE ``run``-row
+dynamic-slice store per buffer — a batched VMEM->HBM DMA — falling back
+to per-row stores otherwise.  Correctness is validated in interpret
+mode against ref.scatter_update_ref; the batching only changes DMA
 granularity.
 """
 from __future__ import annotations
 
 import functools
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,21 +31,102 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _scatter_kernel(idx_ref, rows_ref, cache_ref, o_ref, *, bk: int,
-                    n: int):
-    del cache_ref  # aliased with o_ref; only written
+def _scatter_multi_kernel(idx_ref, *refs, n_bufs: int, bk: int, run: int,
+                          n: int):
+    rows_refs = refs[:n_bufs]
+    o_refs = refs[2 * n_bufs:]          # cache_refs aliased; only written
+    bb = pl.program_id(0)
 
-    def body(i, carry):
-        row_idx = idx_ref[i]
+    def store(row_idx, src_off, length):
+        for o_ref, r_ref in zip(o_refs, rows_refs):
+            o_ref[pl.dslice(bb, 1), pl.dslice(row_idx, length), :] = (
+                r_ref[0, pl.dslice(src_off, length), :].astype(
+                    o_ref.dtype)[None])
 
-        @pl.when(row_idx < n)
-        def _():
-            o_ref[pl.dslice(row_idx, 1), :] = (
-                rows_ref[pl.dslice(i, 1), :].astype(o_ref.dtype))
+    def chunk(c, carry):
+        i0 = c * run
+        first = idx_ref[0, i0]
+        last = idx_ref[0, i0 + run - 1]
+
+        # Endpoint spread alone is NOT sufficient (an unsorted chunk like
+        # [5, 20, 7, 9, 2, 3, 4, 12] has last - first == run - 1): every
+        # element must sit exactly at first + t for the batched DMA store
+        # to land rows where they belong.
+        def elem_ok(t, ok):
+            return jnp.logical_and(ok, idx_ref[0, i0 + t] == first + t)
+
+        contig = jax.lax.fori_loop(
+            1, run, elem_ok,
+            jnp.logical_and(first >= 0, last < n))
+
+        @pl.when(contig)
+        def _batched():
+            store(first, i0, run)
+
+        @pl.when(jnp.logical_not(contig))
+        def _rowwise():
+            def one(t, cc):
+                ri = idx_ref[0, i0 + t]
+
+                @pl.when(jnp.logical_and(ri >= 0, ri < n))
+                def _():
+                    store(ri, i0 + t, 1)
+
+                return cc
+
+            jax.lax.fori_loop(0, run, one, 0)
 
         return carry
 
-    jax.lax.fori_loop(0, bk, body, 0)
+    jax.lax.fori_loop(0, bk // run, chunk, 0)
+
+
+def _flat(a: jax.Array) -> jax.Array:
+    """[B, N, *f] -> [B, N, prod(f)] (row payload as one minor axis)."""
+    b, n = a.shape[:2]
+    return a.reshape(b, n, -1) if a.ndim != 3 else a
+
+
+def scatter_update_multi(caches: Sequence[jax.Array], idx: jax.Array,
+                         rows: Sequence[jax.Array], *, block_k: int = 128,
+                         run: int = 8, interpret: bool = False
+                         ) -> Tuple[jax.Array, ...]:
+    """caches[i]: [B, N, ...]; idx: [B, k] int32 (any order; entries
+    outside [0, N) are dropped; SORTED indices batch into contiguous DMA
+    stores); rows[i]: [B, k, ...] payloads.  Returns the updated caches
+    (all buffers committed in one aliased call)."""
+    shapes = [c.shape for c in caches]
+    caches = [_flat(c) for c in caches]
+    rows = [_flat(r) for r in rows]
+    b, n = caches[0].shape[:2]
+    k = idx.shape[1]
+    bk = min(block_k, k)
+    pad = (-k) % bk
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=n)
+        rows = [jnp.pad(r, ((0, 0), (0, pad), (0, 0))) for r in rows]
+    kp = idx.shape[1]
+    run = max(1, min(run, bk))
+    while bk % run:
+        run -= 1
+    m = len(caches)
+
+    outs = pl.pallas_call(
+        functools.partial(_scatter_multi_kernel, n_bufs=m, bk=bk,
+                          run=run, n=n),
+        grid=(b, kp // bk),
+        in_specs=(
+            [pl.BlockSpec((1, bk), lambda bb, i: (bb, i),
+                          memory_space=pltpu.SMEM)]
+            + [pl.BlockSpec((1, bk, r.shape[-1]),
+                            lambda bb, i: (bb, i, 0)) for r in rows]
+            + [pl.BlockSpec(memory_space=pl.ANY)] * m),
+        out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * m,
+        out_shape=[jax.ShapeDtypeStruct(c.shape, c.dtype) for c in caches],
+        input_output_aliases={1 + m + j: j for j in range(m)},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), *rows, *caches)
+    return tuple(o.reshape(s) for o, s in zip(outs, shapes))
 
 
 def scatter_update(cache: jax.Array, idx: jax.Array, rows: jax.Array,
@@ -44,27 +134,9 @@ def scatter_update(cache: jax.Array, idx: jax.Array, rows: jax.Array,
                    interpret: bool = False) -> jax.Array:
     """cache: [N, d]; idx: [k] int32; rows: [k, d]. Returns updated cache.
 
-    The cache buffer is donated (input_output_aliases) — in-place on TPU.
-    """
-    n, d = cache.shape
-    k = idx.shape[0]
-    bk = min(block_k, k)
-    pad = (-k) % bk
-    if pad:
-        idx = jnp.pad(idx, (0, pad), constant_values=n + 1)  # masked out
-        rows = jnp.pad(rows, ((0, pad), (0, 0)))
-    kp = idx.shape[0]
-
-    return pl.pallas_call(
-        functools.partial(_scatter_kernel, bk=bk, n=n),
-        grid=(kp // bk,),
-        in_specs=[
-            pl.BlockSpec((bk,), lambda i: (i,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((bk, d), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((n, d), cache.dtype),
-        input_output_aliases={2: 0},
-        interpret=interpret,
-    )(idx.astype(jnp.int32), rows, cache)
+    Single-buffer unbatched form of ``scatter_update_multi`` (the cache
+    buffer is aliased input->output — in-place on TPU when the caller's
+    buffer is donatable)."""
+    (out,) = scatter_update_multi([cache[None]], idx[None], [rows[None]],
+                                  block_k=block_k, interpret=interpret)
+    return out[0]

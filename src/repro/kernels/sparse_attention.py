@@ -5,13 +5,23 @@ SPA-Cache Phase 2 on TPU: k selected query rows attend to the whole
 running (m, l, acc) state held in VMEM scratch across the sequential
 kv-block grid dimension. Supports GQA (kv head = q head // G),
 bidirectional sliding windows (query positions are arbitrary gathered
-indices), gemma2 attention-logit softcap, and int8 KV with per-row
-dequant scales.
+indices), gemma2 attention-logit softcap, int8 KV with per-row dequant
+scales, a real batch grid axis, and the stratified long-context banded
+path: with ``banded=True`` and a static ``q_span`` bound (guaranteed by
+stratified selection — DESIGN.md §4) each q block visits only the
+``band_width`` kv blocks covering its window, starting at a per-q-block
+offset delivered through TPU scalar prefetch (the same
+``banded_starts`` the XLA path uses, so the two paths select identical
+kv blocks and stay byte-identical).
 
-Grid: (H, nq, nk) — nk minor (sequential on TPU), so VMEM scratch carries
-the softmax state per (head, q-block). VMEM per step: bq*hd (q) +
-2*bk*hd (kv) + bq*bk (scores) + scratch — (128, 512) blocks with hd<=256
-stay under ~2 MB.
+Numerics mirror ``models.attention.flash_attention`` op-for-op (scale
+applied after the QK dot, masking before the running-max update, f32
+state) so the backends decode byte-identically.
+
+Grid: (B, H, nq, nk_or_band) — the kv axis minor (sequential on TPU), so
+VMEM scratch carries the softmax state per (batch, head, q-block). VMEM
+per step: bq*hd (q) + 2*bk*hd (kv) + bq*bk (scores) + scratch — (512,
+512) blocks with hd<=256 stay under ~4 MB.
 """
 from __future__ import annotations
 
@@ -25,11 +35,10 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _sparse_attn_kernel(qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                        o_ref, m_scr, l_scr, acc_scr, *,
-                        nk: int, bk: int, window: int, soft_cap: float,
-                        n_valid: int, scale: float):
-    j = pl.program_id(2)
+def _attn_step(qpos, q, k, v, ks, vs, o_ref, m_scr, l_scr, acc_scr, *,
+               kv_base, j, nj, window: int, soft_cap: float,
+               n_valid: int, scale: float):
+    """One kv-block online-softmax update (shared by both grid flavors)."""
 
     @pl.when(j == 0)
     def _init():
@@ -37,22 +46,20 @@ def _sparse_attn_kernel(qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
-    k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
-    v = v_ref[0].astype(jnp.float32)
-    k = k * ks_ref[0][:, None].astype(jnp.float32)
-    v = v * vs_ref[0][:, None].astype(jnp.float32)
+    qf = q.astype(jnp.float32)                        # [bq, hd]
+    kf = k.astype(jnp.float32) * ks[:, None].astype(jnp.float32)
+    vf = v.astype(jnp.float32) * vs[:, None].astype(jnp.float32)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [bq, bk]
+    s = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
     if soft_cap > 0.0:
         s = soft_cap * jnp.tanh(s / soft_cap)
 
-    kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    kv_pos = kv_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = kv_pos < n_valid
     if window > 0:
-        qpos = qpos_ref[...][:, None]                 # [bq, 1]
-        valid = jnp.logical_and(valid, jnp.abs(qpos - kv_pos) <= window)
+        valid = jnp.logical_and(valid,
+                                jnp.abs(qpos[:, None] - kv_pos) <= window)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_scr[...]
@@ -62,28 +69,58 @@ def _sparse_attn_kernel(qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
     l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1)
     acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())),
+        p, vf, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
     m_scr[...] = m_new
     l_scr[...] = l_new
     acc_scr[...] = acc
 
-    @pl.when(j == nk - 1)
+    @pl.when(j == nj - 1)
     def _finalize():
         l_safe = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
-        o_ref[0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def _dense_kernel(qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, nk: int, bk: int, window: int,
+                  soft_cap: float, n_valid: int, scale: float):
+    j = pl.program_id(3)
+    _attn_step(qpos_ref[0], q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+               ks_ref[0, 0], vs_ref[0, 0], o_ref, m_scr, l_scr, acc_scr,
+               kv_base=j * bk, j=j, nj=nk, window=window,
+               soft_cap=soft_cap, n_valid=n_valid, scale=scale)
+
+
+def _banded_kernel(starts_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref,
+                   vs_ref, o_ref, m_scr, l_scr, acc_scr, *, n_band: int,
+                   bk: int, window: int, soft_cap: float, n_valid: int,
+                   scale: float):
+    i, j = pl.program_id(2), pl.program_id(3)
+    _attn_step(qpos_ref[0], q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
+               ks_ref[0, 0], vs_ref[0, 0], o_ref, m_scr, l_scr, acc_scr,
+               kv_base=(starts_ref[i] + j) * bk, j=j, nj=n_band,
+               window=window, soft_cap=soft_cap, n_valid=n_valid,
+               scale=scale)
 
 
 def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      q_pos: jax.Array, *, k_scale=None, v_scale=None,
                      window: int = 0, soft_cap: float = 0.0,
-                     block_q: int = 128, block_k: int = 512,
+                     banded: bool = False, q_span: int = 0,
+                     block_q: int = 512, block_k: int = 512,
                      interpret: bool = False) -> jax.Array:
-    """q: [kq, H, hd]; k/v: [N, KVH, hd]; q_pos: [kq].
-    k_scale/v_scale: [N, KVH] or None. Returns [kq, H, hd]."""
-    kq, h, hd = q.shape
-    n, kvh, _ = k.shape
+    """q: [B, kq, H, hd]; k/v: [B, N, KVH, hd]; q_pos: [B, kq]
+    (2D/3D unbatched forms also accepted).  k_scale/v_scale: [B, N, KVH]
+    or None.  ``banded`` + ``q_span`` enable the stratified banded path
+    (requires window > 0).  Returns [B, kq, H, hd] in q.dtype."""
+    unbatched = q.ndim == 3
+    if unbatched:
+        q, k, v, q_pos = q[None], k[None], v[None], q_pos[None]
+        if k_scale is not None:
+            k_scale, v_scale = k_scale[None], v_scale[None]
+    b, kq, h, hd = q.shape
+    n, kvh = k.shape[1], k.shape[2]
     assert h % kvh == 0
     g = h // kvh
     scale = 1.0 / (hd ** 0.5)
@@ -93,48 +130,100 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     pad_q = (-kq) % bq
     pad_k = (-n) % bk
     if pad_q:
-        q = jnp.pad(q, ((0, pad_q), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=2 ** 30)
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)),
+                        constant_values=2 ** 30)
     if pad_k:
-        k = jnp.pad(k, ((0, pad_k), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, pad_k), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     if k_scale is None:
-        k_scale = jnp.ones((k.shape[0], kvh), jnp.float32)
-        v_scale = jnp.ones((k.shape[0], kvh), jnp.float32)
+        k_scale = jnp.ones((b, k.shape[1], kvh), jnp.float32)
+        v_scale = jnp.ones((b, k.shape[1], kvh), jnp.float32)
     elif pad_k:
-        k_scale = jnp.pad(k_scale, ((0, pad_k), (0, 0)))
-        v_scale = jnp.pad(v_scale, ((0, pad_k), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k), (0, 0)))
 
-    qt = jnp.swapaxes(q, 0, 1)                      # [H, kq_p, hd]
-    kt = jnp.swapaxes(k, 0, 1)                      # [KVH, N_p, hd]
-    vt = jnp.swapaxes(v, 0, 1)
-    kst = jnp.swapaxes(k_scale, 0, 1).astype(jnp.float32)  # [KVH, N_p]
-    vst = jnp.swapaxes(v_scale, 0, 1).astype(jnp.float32)
+    qt = jnp.swapaxes(q, 1, 2)                      # [B, H, kq_p, hd]
+    kt = jnp.swapaxes(k, 1, 2)                      # [B, KVH, N_p, hd]
+    vt = jnp.swapaxes(v, 1, 2)
+    kst = jnp.swapaxes(k_scale, 1, 2).astype(jnp.float32)  # [B, KVH, N_p]
+    vst = jnp.swapaxes(v_scale, 1, 2).astype(jnp.float32)
+    q_pos = q_pos.astype(jnp.int32)
 
-    nq = qt.shape[1] // bq
-    nk = kt.shape[1] // bk
+    kq_p, skv_p = qt.shape[2], kt.shape[2]
+    nq = kq_p // bq
+    nk = skv_p // bk
 
-    out = pl.pallas_call(
-        functools.partial(_sparse_attn_kernel, nk=nk, bk=bk,
-                          window=window, soft_cap=soft_cap, n_valid=n,
-                          scale=scale),
-        grid=(h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((bq,), lambda hh, i, j: (i,)),
-            pl.BlockSpec((1, bq, hd), lambda hh, i, j: (hh, i, 0)),
-            pl.BlockSpec((1, bk, hd), lambda hh, i, j: (hh // g, j, 0)),
-            pl.BlockSpec((1, bk, hd), lambda hh, i, j: (hh // g, j, 0)),
-            pl.BlockSpec((1, bk), lambda hh, i, j: (hh // g, j)),
-            pl.BlockSpec((1, bk), lambda hh, i, j: (hh // g, j)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda hh, i, j: (hh, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((h, qt.shape[1], hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, hd), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q_pos, qt, kt, vt, kst, vst)
-    out = jnp.swapaxes(out, 0, 1)                   # [kq_p, H, hd]
-    return out[:kq]
+    out_shape = jax.ShapeDtypeStruct((b, h, kq_p, hd), q.dtype)
+    scratch = [
+        pltpu.VMEM((bq,), jnp.float32),
+        pltpu.VMEM((bq,), jnp.float32),
+        pltpu.VMEM((bq, hd), jnp.float32),
+    ]
+    use_band = (banded and window > 0 and q_span > 0
+                and n > (q_span + 2 * window + 2 * bk))
+
+    if use_band:
+        from repro.models.attention import band_width, banded_starts
+        n_band = band_width(q_span, window, bk, nk)
+        starts = banded_starts(q_pos.reshape(b, nq, bq), window, skv_p,
+                               n_band, bk)
+
+        def kvi(bb, hh, i, j, st):
+            return (bb, hh // g, st[i] + j)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, nq, n_band),
+            in_specs=[
+                pl.BlockSpec((1, bq), lambda bb, hh, i, j, st: (bb, i)),
+                pl.BlockSpec((1, 1, bq, hd),
+                             lambda bb, hh, i, j, st: (bb, hh, i, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda bb, hh, i, j, st: kvi(bb, hh, i, j, st)
+                             + (0,)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda bb, hh, i, j, st: kvi(bb, hh, i, j, st)
+                             + (0,)),
+                pl.BlockSpec((1, 1, bk), kvi),
+                pl.BlockSpec((1, 1, bk), kvi),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, hd), lambda bb, hh, i, j, st: (bb, hh, i, 0)),
+            scratch_shapes=scratch,
+        )
+        out = pl.pallas_call(
+            functools.partial(_banded_kernel, n_band=n_band, bk=bk,
+                              window=window, soft_cap=soft_cap, n_valid=n,
+                              scale=scale),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(starts, q_pos, qt, kt, vt, kst, vst)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_dense_kernel, nk=nk, bk=bk, window=window,
+                              soft_cap=soft_cap, n_valid=n, scale=scale),
+            grid=(b, h, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, bq), lambda bb, hh, i, j: (bb, i)),
+                pl.BlockSpec((1, 1, bq, hd),
+                             lambda bb, hh, i, j: (bb, hh, i, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+                pl.BlockSpec((1, 1, bk),
+                             lambda bb, hh, i, j: (bb, hh // g, j)),
+                pl.BlockSpec((1, 1, bk),
+                             lambda bb, hh, i, j: (bb, hh // g, j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, hd), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(q_pos, qt, kt, vt, kst, vst)
+
+    out = jnp.swapaxes(out, 1, 2)[:, :kq]           # [B, kq, H, hd]
+    return out[0] if unbatched else out

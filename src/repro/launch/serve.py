@@ -37,6 +37,11 @@ def main(argv=None):
     ap.add_argument("--strategy", default="",
                     choices=[""] + sorted(REGISTRY),
                     help="cache strategy override (default: cfg.spa)")
+    ap.add_argument("--kernel-backend", default="",
+                    choices=["", "xla", "pallas"],
+                    help="hot-path kernel backend (DESIGN.md §4.5; "
+                         "default xla; pallas = TPU kernel suite, "
+                         "interpret mode off-TPU)")
     ap.add_argument("--static-batching", action="store_true",
                     help="disable step-granular continuous batching")
     args = ap.parse_args(argv)
@@ -57,6 +62,9 @@ def main(argv=None):
     if args.strategy:
         strategy = strategy_from_spec(
             dataclasses.replace(cfg.spa, identifier=args.strategy))
+    if args.kernel_backend:
+        strategy = (strategy or strategy_from_spec(cfg.spa)) \
+            .with_backend(args.kernel_backend)
 
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,

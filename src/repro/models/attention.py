@@ -89,6 +89,30 @@ def _finalize(carry):
     return acc / l_safe[..., None]
 
 
+def band_width(q_span: int, window: int, block_k: int, n_kb: int) -> int:
+    """Number of kv blocks a banded q block must visit (static)."""
+    return min((q_span + 2 * window) // block_k + 2, n_kb)
+
+
+def banded_starts(qpos_r: jax.Array, window: int, skv_p: int,
+                  n_band: int, block_k: int) -> jax.Array:
+    """First kv-block index per q block for the banded path.
+
+    qpos_r: [B, n_qb, bq] padded query positions (pad value >= 2**30).
+    Shared by the XLA banded scan below and the Pallas banded kernel
+    (``kernels.sparse_attention``) so the start formula cannot drift —
+    the start is per q BLOCK (min over the whole [B, bq] tile), which
+    both paths consume identically.  Returns [n_qb] int32.
+    """
+    # Pads (>= 2**30) must NOT win the min: mapping them low would anchor
+    # a partially-padded q block at kv block 0, masking out its real rows'
+    # windows entirely (l = 0 -> zero output). An all-pad block clips to
+    # the last valid start; its rows are discarded anyway.
+    pmin = jnp.min(qpos_r, axis=(0, 2))
+    start = jnp.clip(pmin - window, 0, skv_p - n_band * block_k)
+    return (start // block_k).astype(jnp.int32)
+
+
 def flash_attention(
     q: jax.Array,
     k: jax.Array,
@@ -176,12 +200,10 @@ def flash_attention(
                 and skv > (span + 2 * window + 2 * bk))
 
     if use_band:
-        n_band = min((span + 2 * window) // bk + 2, n_kb)
+        n_band = band_width(span, window, bk, n_kb)
+        starts = banded_starts(qpos_r, window, skv_p, n_band, bk)
 
-        def q_block_fn(q_i, qpos_i):
-            pmin = jnp.min(jnp.where(qpos_i >= 2**30, 0, qpos_i))
-            start = jnp.clip(pmin - window, 0, skv_p - n_band * bk) // bk
-
+        def q_block_fn(q_i, qpos_i, start):
             def kv_step(carry, off):
                 kb_idx = start + off
                 kb = jax.lax.dynamic_index_in_dim(kr, kb_idx, 1, False)
@@ -203,7 +225,11 @@ def flash_attention(
                                     jnp.arange(n_band))
             return _finalize(carry)
     else:
-        def q_block_fn(q_i, qpos_i):
+        starts = jnp.zeros((n_qb,), jnp.int32)
+
+        def q_block_fn(q_i, qpos_i, start):
+            del start
+
             def kv_step(carry, idx):
                 kb, vb, kv_val, kpos = (
                     kr[:, idx], vr[:, idx], kv_valid_full[idx],
@@ -226,7 +252,8 @@ def flash_attention(
     def scan_qb(_, i):
         q_i = jax.lax.dynamic_index_in_dim(qr, i, 1, False)
         qpos_i = jax.lax.dynamic_index_in_dim(qpos_r, i, 1, False)
-        return None, q_block_ck(q_i, qpos_i)
+        start_i = jax.lax.dynamic_index_in_dim(starts, i, 0, False)
+        return None, q_block_ck(q_i, qpos_i, start_i)
 
     _, outs = jax.lax.scan(scan_qb, None, jnp.arange(n_qb))
     out = jnp.moveaxis(outs, 0, 1)  # [B, n_qb, bq, KVH, G, D]

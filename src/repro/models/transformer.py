@@ -10,6 +10,7 @@ architecture). Parameters are stored STACKED per layer-kind
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -85,8 +86,11 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
     blocks: Dict[str, Params] = {}
     for kind in sorted(set(cfg.layer_kinds)):
         lk = cfg.n_layers_of_kind(kind)
+        # stable per-kind fold (builtin hash() is randomized per process
+        # by PYTHONHASHSEED — same-seed init must be reproducible)
         kind_keys = jax.random.split(
-            jax.random.fold_in(keys[3], hash(kind) % (2 ** 31)), lk)
+            jax.random.fold_in(keys[3],
+                               zlib.crc32(kind.encode()) % (2 ** 31)), lk)
         blocks[kind] = jax.vmap(
             functools.partial(init_block_params, cfg, kind))(kind_keys)
     params["blocks"] = blocks

@@ -1,0 +1,170 @@
+"""KernelBackend parity: PallasBackend (interpret mode) must decode
+byte-identically to XlaBackend (DESIGN.md §4.5).
+
+The Pallas kernels mirror the XLA serve path op-for-op (same block
+structure, same f32 accumulation order, projections rounded through the
+storage dtype before scoring), so — post ``_SCORE_QUANTUM`` tie-breaking
+in selection — every registered CacheStrategy must produce bit-identical
+TOKEN streams and step counts on either backend, in both the host loop
+(``run``) and the device-resident loop (``run_compiled``).  Cache
+buffers are additionally pinned to ulp-level agreement (see
+``_assert_cache_close`` for why bitwise is not achievable there).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core import spa_layer
+from repro.core.strategy import (AttnOutCache, NoCache, SPACache,
+                                 ValueProxyCache, WindowCache)
+from repro.dlm.session import DecodeSession
+from repro.kernels.backend import (PALLAS_BACKEND, XLA_BACKEND,
+                                   PallasBackend, XlaBackend,
+                                   resolve_backend)
+from repro.models import transformer
+
+STRATEGIES = {
+    "spa": SPACache(rank=16, schedule="uniform", rho_peak=0.3),
+    "spa_incremental": SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                                incremental_ident=True),
+    "value": ValueProxyCache(rho=0.3),
+    "attn_in": ValueProxyCache(projection="attn_in", rho=0.3),
+    "window": WindowCache(locality_window=8, rho=0.3),
+    "attn_out": AttnOutCache(rho=0.5),
+    "none": NoCache(),
+}
+
+PALLAS = PallasBackend(interpret=True)
+
+
+def _assert_cache_close(c_x, c_p):
+    """Caches must agree to ulp-level noise.  Bitwise equality is NOT
+    guaranteed for intermediate buffers: XLA fuses the norm/matmul
+    chains around a pallas_call differently than it fuses the pure-jnp
+    graph, reordering f32 reductions by a few ulps (~1e-6 on O(1)
+    values).  Token streams stay byte-identical because selection
+    quantizes scores (_SCORE_QUANTUM) and commits argmax over logits."""
+    def close(a, b):
+        if np.issubdtype(a.dtype, np.integer):
+            assert np.abs(a.astype(np.int32)
+                          - b.astype(np.int32)).max() <= 1
+        else:
+            np.testing.assert_allclose(a.astype(np.float32),
+                                       b.astype(np.float32),
+                                       rtol=1e-4, atol=1e-4)
+    jax.tree.map(close, c_x, c_p)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_arch("internlm2-1.8b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size - 1)
+    return cfg, params, prompt
+
+
+def _decode(cfg, params, prompt, strategy, backend, mode):
+    sess = DecodeSession(params, cfg, strategy=strategy, backend=backend)
+    sess.prefill(prompt, gen_len=6)
+    toks, info = getattr(sess, mode)()
+    return np.asarray(toks), info["steps"], jax.tree.map(
+        np.asarray, sess.state.cache)
+
+
+@pytest.mark.parametrize("mode", ["run", "run_compiled"])
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_decode_parity(small, name, mode):
+    """Byte-identical tokens, steps, and final cache per strategy/mode."""
+    cfg, params, prompt = small
+    strat = STRATEGIES[name]
+    t_x, s_x, c_x = _decode(cfg, params, prompt, strat, None, mode)
+    t_p, s_p, c_p = _decode(cfg, params, prompt, strat, PALLAS, mode)
+    np.testing.assert_array_equal(t_x, t_p)
+    assert s_x == s_p
+    _assert_cache_close(c_x, c_p)
+
+
+def test_decode_parity_int8(small):
+    """Quantized caches: scatters carry int8 rows + f16 scales — the
+    multi-buffer kernel must commit all four KV buffers identically."""
+    cfg, params, prompt = small
+    cfg8 = dataclasses.replace(cfg, cache_dtype="int8")
+    strat = STRATEGIES["spa"]
+    t_x, s_x, c_x = _decode(cfg8, params, prompt, strat, None, "run")
+    t_p, s_p, c_p = _decode(cfg8, params, prompt, strat, PALLAS, "run")
+    np.testing.assert_array_equal(t_x, t_p)
+    assert s_x == s_p
+    _assert_cache_close(c_x, c_p)
+
+
+def test_stratified_long_context_parity():
+    """n > 8192 engages stratified selection + the banded attention path
+    (scalar-prefetched kv starts in the Pallas kernel)."""
+    cfg = reduced(get_arch("gemma2-2b"), n_layers=2, d_model=32,
+                  n_heads=1, n_kv_heads=1, head_dim=32, d_ff=64,
+                  vocab_size=64)
+    n, gen = 16384, 32
+    k = 2048                       # rho=0.125: per-stratum 512 rows
+    nb = spa_layer.stratify_blocks_for(n, k)
+    span = spa_layer.q_span_bound(n, k, nb)
+    assert nb > 1 and n > span + 2 * cfg.window + 2 * 512, \
+        "shape must engage the banded path"
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, n - gen), 0,
+                                cfg.vocab_size - 1)
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.125)
+    outs = {}
+    for backend in [None, PALLAS]:
+        sess = DecodeSession(params, cfg, strategy=strat, backend=backend)
+        sess.prefill(prompt, gen)
+        for _ in range(2):
+            sess.step()
+        outs[backend] = (np.asarray(sess.state.tokens),
+                         jax.tree.map(np.asarray, sess.state.cache))
+    np.testing.assert_array_equal(outs[None][0], outs[PALLAS][0])
+    _assert_cache_close(outs[None][1], outs[PALLAS][1])
+
+
+def test_backend_is_static_jit_key(small):
+    """Backends are frozen/hashable and part of the strategy identity, so
+    engine lanes and jitted steps key on them."""
+    assert XlaBackend() == XLA_BACKEND
+    assert PallasBackend() == PALLAS_BACKEND
+    assert hash(PallasBackend(interpret=True)) == hash(
+        PallasBackend(interpret=True))
+    strat = STRATEGIES["spa"]
+    assert strat.with_backend(PALLAS) != strat
+    assert strat.with_backend(PALLAS).with_backend(XLA_BACKEND) == strat
+    assert resolve_backend("pallas") is PALLAS_BACKEND
+    assert resolve_backend("xla") is XLA_BACKEND
+    with pytest.raises(ValueError):
+        resolve_backend("mosaic")
+    # spec round-trip stays backend-free (serializable policy only)
+    assert strat.with_backend(PALLAS).spec == strat.spec
+
+
+def test_spa_forward_backend_override(small):
+    """spa_forward accepts backend= directly (call-time selection)."""
+    cfg, params, prompt = small
+    strat = STRATEGIES["spa"]
+    sess = DecodeSession(params, cfg, strategy=strat)
+    sess.prefill(prompt, gen_len=6)
+    state = sess.state
+    proxies = sess.spa_proxies
+    h = transformer.embed_inputs(params, cfg, {"tokens": state.tokens})
+    outs = []
+    for backend in ["xla", "pallas" if jax.default_backend() == "tpu"
+                    else PALLAS]:
+        h_out, cache, _ = jax.jit(
+            lambda c, hh, be=backend: spa_layer.spa_forward(
+                params, cfg, c, hh, spa_proxies=proxies, strategy=strat,
+                backend=be))(state.cache, h)
+        outs.append((np.asarray(h_out), jax.tree.map(np.asarray, cache)))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=1e-4,
+                               atol=1e-4)
+    _assert_cache_close(outs[0][1], outs[1][1])
