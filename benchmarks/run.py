@@ -31,10 +31,10 @@ def main(argv=None) -> None:
     if args.smoke:
         args.quick = True
 
-    from benchmarks import (bench_kernels, fig2_drift, fig4_latency,
-                            fig5_anisotropy, roofline, table1_identifiers,
-                            table2_main, table3_parallel, table4_ablation,
-                            table5_rank)
+    from benchmarks import (bench_kernels, bench_serving, fig2_drift,
+                            fig4_latency, fig5_anisotropy, roofline,
+                            table1_identifiers, table2_main,
+                            table3_parallel, table4_ablation, table5_rank)
     registry = {
         "t1": ("Table 1 identifiers", table1_identifiers.run),
         "t2": ("Table 2 main speedups", table2_main.run),
@@ -47,9 +47,11 @@ def main(argv=None) -> None:
         "roofline": ("Roofline table", roofline.run),
         "kernels": ("Kernel microbench (BENCH_kernels.json)",
                     bench_kernels.run),
+        "serving": ("Serving runtime: paged pool vs dense slab "
+                    "(BENCH_serving.json)", bench_serving.run),
     }
     if args.smoke:
-        names = ["t2", "t3", "kernels"]
+        names = ["t2", "t3", "kernels", "serving"]
     elif args.only:
         names = [args.only]
     else:

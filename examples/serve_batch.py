@@ -6,7 +6,10 @@ engine on the same queue.
 Half the requests decode with a Fast-dLLM parallel-commit scheduler and
 half with a semi-AR block scheduler — per-request ``UnmaskScheduler``s
 are lane-partitioned by the engine exactly like per-request settings
-(one compiled step per (settings, strategy, scheduler) lane).
+(one compiled step per (settings, strategy, scheduler) lane).  A third
+pass serves the same queue through the PAGED runtime (DESIGN.md §5): a
+page pool a fraction of the dense aggregate, admission control and
+priority preemption instead of per-lane slabs.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -48,23 +51,40 @@ def main():
                   BlockScheduler(block_len=8, threshold=0.3,
                                  max_parallel=2)]
     results = {}
-    for name, strategy in (
-        ("vanilla", NoCache()),
+    # the paged engine serves the SAME queue from a pooled page arena
+    # about a third of the dense aggregate (DESIGN.md §5): heterogeneous
+    # requests only allocate the pages covering their own span, and
+    # admission control queues what doesn't fit
+    for name, strategy, pool_pages in (
+        ("vanilla", NoCache(), 0),
         ("spa-cache", SPACache(rank=16, schedule="adaptive",
                                rho_peak=0.25, rho_first=0.03,
-                               rho_last=0.13)),
+                               rho_last=0.13), 0),
+        ("spa-paged", SPACache(rank=16, schedule="adaptive",
+                               rho_peak=0.25, rho_first=0.03,
+                               rho_last=0.13), 17),
     ):
         engine = ServingEngine(
             cfg, trainer.params, max_batch=4, canvas_len=48,
-            strategy=strategy, settings=DecodeSettings())
+            strategy=strategy, settings=DecodeSettings(),
+            pool_pages=pool_pages, page_size=8)
         for i, p in enumerate(prompts):
-            engine.submit(p, gen_len=16, scheduler=schedulers[i % 2])
+            engine.submit(p, gen_len=16, scheduler=schedulers[i % 2],
+                          priority=i % 2)
         stats = engine.run()
         results[name] = (stats, engine._wall)
         print(f"[{name:9s}] {stats.requests_done} requests, "
               f"{stats.tokens_committed} tokens in {engine._wall:.2f}s "
               f"({stats.tps(engine._wall):.1f} tok/s, "
               f"{stats.steps} refinement steps, {stats.swaps} swaps)")
+        if pool_pages:
+            pct = stats.percentiles()
+            print(f"            pool {pool_pages} x 8 rows: peak util "
+                  f"{stats.peak_pool_util:.0%}, steady "
+                  f"{stats.steady_pool_util:.0%}, "
+                  f"{stats.preemptions} preemptions, "
+                  f"{stats.admission_stalls} stalls | e2e p95 "
+                  f"{pct['e2e_p95']:.2f}s")
 
     sp = results["spa-cache"][0].tps(results["spa-cache"][1]) / \
         max(results["vanilla"][0].tps(results["vanilla"][1]), 1e-9)

@@ -18,7 +18,7 @@ are ~TB-scale — int8 halves them; this is a beyond-paper serving feature
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,128 @@ def init_model_cache(cfg: ModelConfig, batch: int, n: int, strategy=None
         out[kind] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (lk,) + a.shape).copy(), one)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Paged layout (DESIGN.md §5): cache rows live in ONE pooled device
+# arena of fixed-size pages per buffer; a per-request page table maps
+# logical canvas pages to physical pages.  Physical page 0 is the
+# reserved ZERO page — it is never written, and every logical page past
+# a request's ``kv_len`` aliases it, so short rows cost only the pages
+# they actually cover instead of a full canvas_len slab.
+# ---------------------------------------------------------------------------
+
+class PagedCache(NamedTuple):
+    """Paged cache state: pooled arenas + the batch page table.
+
+    arenas:     {kind: {name: [Lk, P, page, ...feat]}}
+    page_table: [B, n_log] int32 physical page per logical canvas page
+    """
+    arenas: Dict[str, Dict[str, jax.Array]]
+    page_table: jax.Array
+
+
+# Buffers that stay PAGED through the per-layer hot loop (identification
+# reads + row commits go through page-table indirection); every other
+# buffer is materialized as a dense per-step view (attention reads the
+# whole K/V anyway in a bidirectional DLM step).
+PAGED_IN_STEP = ("proxy",)
+
+
+def n_logical_pages(canvas_len: int, page_size: int) -> int:
+    if canvas_len % page_size:
+        raise ValueError(
+            f"canvas_len {canvas_len} must be a multiple of page_size "
+            f"{page_size}")
+    return canvas_len // page_size
+
+
+def init_paged_arenas(cfg: ModelConfig, n_pages: int, page_size: int,
+                      strategy=None) -> Dict[str, Dict[str, jax.Array]]:
+    """Zeroed pooled arenas {kind: {name: [Lk, n_pages, page, ...]}}.
+
+    Same buffer set as :func:`init_model_cache` with (batch, n) replaced
+    by (physical pages, page rows); page 0 is the zero page."""
+    policy = CachePolicy.from_config(cfg)
+    out: Dict[str, Dict[str, jax.Array]] = {}
+    for kind in sorted(set(cfg.layer_kinds)):
+        if kind not in ATTENTION_KINDS:
+            continue
+        lk = cfg.n_layers_of_kind(kind)
+        one = init_attn_layer_cache(cfg, n_pages, page_size, policy,
+                                    strategy)
+        out[kind] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (lk,) + a.shape).copy(),
+            one)
+    return out
+
+
+def paged_step_view(pc: PagedCache,
+                    backend=None) -> Dict[str, Dict[str, jax.Array]]:
+    """Per-step compute view of a paged cache: every buffer except the
+    ``PAGED_IN_STEP`` set is gathered dense through the page table (one
+    contiguous DMA per page on ``PallasBackend``); the identifier pages
+    stay in arena form and are consumed in-layer via the paged
+    identification/commit kernels."""
+    if backend is None:
+        from repro.kernels.backend import XLA_BACKEND as backend
+    view: Dict[str, Dict[str, jax.Array]] = {}
+    for kind, bufs in pc.arenas.items():
+        view[kind] = {
+            name: (arena if name in PAGED_IN_STEP
+                   else backend.gather_pages(arena, pc.page_table))
+            for name, arena in bufs.items()}
+    return view
+
+
+def paged_step_commit(pc: PagedCache,
+                      view: Dict[str, Dict[str, jax.Array]],
+                      backend=None) -> PagedCache:
+    """Write a stepped compute view back into the arenas (zero-page
+    writes drop, so short rows' tails stay zero)."""
+    if backend is None:
+        from repro.kernels.backend import XLA_BACKEND as backend
+    arenas: Dict[str, Dict[str, jax.Array]] = {}
+    for kind, bufs in pc.arenas.items():
+        arenas[kind] = {
+            name: (view[kind][name] if name in PAGED_IN_STEP
+                   else backend.scatter_pages(arena, pc.page_table,
+                                              view[kind][name]))
+            for name, arena in bufs.items()}
+    return PagedCache(arenas, pc.page_table)
+
+
+def paged_from_dense(arenas: Dict[str, Dict[str, jax.Array]],
+                     page_table: jax.Array,
+                     dense: Dict[str, Dict[str, jax.Array]],
+                     backend=None) -> Dict[str, Dict[str, jax.Array]]:
+    """Scatter a dense cache (prefill/refresh output, [Lk, B, N, ...])
+    into the arenas through the page table — EVERY buffer, including the
+    identifier pages.  ``page_table`` may cover a sub-batch (row swap)."""
+    if backend is None:
+        from repro.kernels.backend import XLA_BACKEND as backend
+    out: Dict[str, Dict[str, jax.Array]] = {}
+    for kind, bufs in arenas.items():
+        out[kind] = {
+            name: backend.scatter_pages(arena, page_table,
+                                        dense[kind][name])
+            for name, arena in bufs.items()}
+    return out
+
+
+def repage(arenas: Dict[str, Dict[str, jax.Array]],
+           page_table: jax.Array,
+           dense: Dict[str, Dict[str, jax.Array]],
+           backend=None,
+           full_table: Optional[jax.Array] = None) -> PagedCache:
+    """Scatter a freshly built dense cache into the arenas and wrap the
+    result as a :class:`PagedCache` — the ONE repage protocol shared by
+    attach, host refresh, the compiled-loop refresh branch and row
+    swaps (``page_table`` may cover a sub-batch; ``full_table`` is the
+    whole-batch table to carry in that case)."""
+    return PagedCache(
+        paged_from_dense(arenas, page_table, dense, backend),
+        page_table if full_table is None else full_table)
 
 
 def scatter_buffers(cache: Dict[str, jax.Array], idx: jax.Array,

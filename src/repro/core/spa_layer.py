@@ -41,16 +41,20 @@ from repro.models.transformer import (apply_block_dense, apply_ffn_or_moe,
 Params = Dict[str, Any]
 
 
-def _hint_cache_slice(cache_sl: Dict[str, jax.Array], b: int
-                      ) -> Dict[str, jax.Array]:
+def _hint_cache_slice(cache_sl: Dict[str, jax.Array], b: int,
+                      skip: Tuple[str, ...] = ()) -> Dict[str, jax.Array]:
     """Keep cache buffers sequence-sharded over "model" after scatters
     (GSPMD otherwise materializes replicated copies per layer). For
-    batch=1 long-context the sequence spans all axes."""
+    batch=1 long-context the sequence spans all axes.  ``skip`` names
+    buffers left untouched (paged arenas have no batch/sequence axes)."""
     from repro.distributed.hints import shard_hint
     n_spec = ("pod", "data", "model") if b == 1 else "model"
     b_spec = None if b == 1 else "batch"
     out = {}
     for key, arr in cache_sl.items():
+        if key in skip:
+            out[key] = arr
+            continue
         dims = (b_spec, n_spec) + (None,) * (arr.ndim - 2)
         out[key] = shard_hint(arr, *dims)
     return out
@@ -81,13 +85,36 @@ def q_span_bound(n: int, k: int, nb: int, block_q: int = 512) -> int:
     return n_strata_per_block * stratum
 
 
+def _mask_tail_scores(scores: jax.Array, n: int,
+                      kv_len: Optional[jax.Array]) -> jax.Array:
+    """Rows past a request's valid canvas length never select: their
+    similarity is forced to +inf (LOW = drifted = update, so +inf is
+    'never update') — shared by both identifier paths so the paged
+    selection semantics cannot drift between them.
+
+    Caveat: ``select_stratified`` (long-context windowed path,
+    n > 8192) takes a fixed per-block quota regardless of score, so
+    strata wholly past ``kv_len`` still select dead rows — state stays
+    correct (zero-page commits drop, attention masks them) but a short
+    row's refresh budget dilutes.  Per-row dynamic stratification needs
+    dynamic shapes; until then keep paged canvases <= the stratify
+    threshold or window-free (DESIGN.md §5)."""
+    if kv_len is None:
+        return scores
+    return jnp.where(jnp.arange(n)[None, :] < kv_len[:, None],
+                     scores, jnp.inf)
+
+
 def _identifier_scores(strategy: CacheStrategy, bp: Params, proxy_mat, x,
-                       cache_sl, scores_override, prev_idx=None):
+                       cache_sl, scores_override, prev_idx=None,
+                       page_table=None):
     """Returns (scores, p_now_full_or_None, proxy_now_cache_or_None).
 
     Projection + drift scoring run on ``strategy.backend`` — the fused
     Pallas identification kernel on ``PallasBackend``, jnp ops on
-    ``XlaBackend`` (DESIGN.md §4.5).
+    ``XlaBackend`` (DESIGN.md §4.5).  With ``page_table`` the cached
+    identifiers are a pooled page arena (DESIGN.md §5) and scoring reads
+    them through page-table indirection.
 
     Incremental mode (beyond-paper, DESIGN.md §6): only rows whose
     INPUTS changed (= rows refreshed by the previous layer, or newly
@@ -105,10 +132,12 @@ def _identifier_scores(strategy: CacheStrategy, bp: Params, proxy_mat, x,
         proxy_now = selection.scatter_rows(cache_sl["proxy_now"],
                                            prev_idx, p_rows)
         scores = backend.score_drift(
-            strategy, proxy_now.astype(jnp.float32), cache_sl["proxy"])
+            strategy, proxy_now.astype(jnp.float32), cache_sl["proxy"],
+            page_table=page_table)
         return scores, None, proxy_now
     scores, p_now = backend.identifier_scores(strategy, bp, proxy_mat, x,
-                                              cache_sl["proxy"])
+                                              cache_sl["proxy"],
+                                              page_table=page_table)
     return scores, p_now, None
 
 
@@ -118,11 +147,19 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
                    k_upd: int, policy: CachePolicy,
                    strategy: Optional[CacheStrategy] = None,
                    scores_override: Optional[jax.Array] = None,
-                   prev_idx: Optional[jax.Array] = None
+                   prev_idx: Optional[jax.Array] = None,
+                   page_table: Optional[jax.Array] = None,
+                   kv_len: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array,
                               jax.Array]:
     """One SPA-Cache attention block step. h: [B,N,d] current inputs.
-    Returns (h_out, new_cache, aux, selected_idx)."""
+    Returns (h_out, new_cache, aux, selected_idx).
+
+    Paged serving (DESIGN.md §5): with ``page_table`` the ``proxy``
+    buffer in ``cache_sl`` is a pooled page arena (identification and
+    proxy commits go through page-table indirection); ``kv_len`` [B]
+    marks each row's valid canvas length — rows past it never select
+    (scores forced to +inf) and never attend (masked K/V)."""
     strategy = resolve_strategy(cfg, strategy)
     b, n, d = h.shape
     w = layer_window(cfg, kind)
@@ -130,7 +167,8 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
     if strategy.full_attn_ident:
         x = common.rms_norm(h, bp["norm1"], cfg.norm_eps)
         h_out, cache_sl, aux, idx = _attn_out_identifier_block(
-            cfg, kind, bp, cache_sl, h, x, k_upd, policy, strategy)
+            cfg, kind, bp, cache_sl, h, x, k_upd, policy, strategy,
+            page_table=page_table, kv_len=kv_len)
         return h_out, cache_sl, aux, idx
 
     # ---- Phase 1: identification & selection ----
@@ -143,7 +181,8 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
     ident_in = h * (1.0 + bp["norm1"]).astype(h.dtype)
     scores, p_now, proxy_now = _identifier_scores(
         strategy, bp, proxy_mat, ident_in, cache_sl, scores_override,
-        prev_idx)
+        prev_idx, page_table=page_table)
+    scores = _mask_tail_scores(scores, n, kv_len)
     nb = stratify_blocks_for(n, k_upd) if w > 0 else 0
     if nb > 1:
         idx = selection.select_stratified(scores, k_upd, nb)
@@ -169,7 +208,7 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
     attn = strategy.backend.attention(
         q, kf, vf, k_scale=ks, v_scale=vs, q_positions=idx, window=w,
         soft_cap=cfg.attn_softcap, banded=(w > 0 and span > 0),
-        q_span=span)
+        q_span=span, kv_len=kv_len)
     from repro.distributed.hints import shard_hint
     attn_out = shard_hint(attn.reshape(b, k_eff, cfg.q_dim) @ bp["wo"],
                           "batch", "keep", None)
@@ -186,9 +225,11 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
                                   cfg.norm_eps)
     y_rows = h_mid + ffn_out
     cache_sl = strategy.commit(cache_sl, idx, y_rows, policy,
-                               p_now=p_now, proxy_now=proxy_now)
+                               p_now=p_now, proxy_now=proxy_now,
+                               page_table=page_table)
 
-    cache_sl = _hint_cache_slice(cache_sl, b)
+    cache_sl = _hint_cache_slice(
+        cache_sl, b, skip=(("proxy",) if page_table is not None else ()))
     h_out = cache_lib.read_h_full(cache_sl, policy, h.dtype)
     # sequence-parallel residual stream between layers (decode): the
     # identification / gathers / FFN are row-local; only attention and
@@ -200,7 +241,8 @@ def spa_attn_block(cfg: ModelConfig, kind: str, bp: Params,
 
 
 def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
-                               policy, strategy):
+                               policy, strategy, page_table=None,
+                               kv_len=None):
     """Table-1 'attn output' identifier: full attention is computed for ALL
     rows against the (stale) cached KV purely for identification; only the
     FFN runs sparsely. Matches the paper's cost profile (slower than the
@@ -212,13 +254,15 @@ def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
     kf, vf, ks, vs = cache_lib.read_kv_for_attention(cache_sl, policy)
     attn_all = strategy.backend.attention(
         q_all, kf, vf, k_scale=ks, v_scale=vs, window=w,
-        soft_cap=cfg.attn_softcap, banded=(w > 0))
+        soft_cap=cfg.attn_softcap, banded=(w > 0), kv_len=kv_len)
     attn_all = attn_all.reshape(b, n, cfg.q_dim) @ bp["wo"]
     if cfg.post_norms:
         attn_all = common.rms_norm(attn_all, bp["norm_post_attn"],
                                    cfg.norm_eps)
     scores = strategy.backend.score_drift(strategy, attn_all,
-                                          cache_sl["proxy"])
+                                          cache_sl["proxy"],
+                                          page_table=page_table)
+    scores = _mask_tail_scores(scores, n, kv_len)
     idx = selection.select_topk_drift(scores, k_upd)
 
     cache_sl = strategy.commit_kv(
@@ -233,8 +277,9 @@ def _attn_out_identifier_block(cfg, kind, bp, cache_sl, h, x, k_upd,
                                   cfg.norm_eps)
     y_rows = h_mid + ffn_out
     cache_sl = strategy.commit(cache_sl, idx, y_rows, policy,
-                               attn_all=attn_all)
-    cache_sl = _hint_cache_slice(cache_sl, b)
+                               attn_all=attn_all, page_table=page_table)
+    cache_sl = _hint_cache_slice(
+        cache_sl, b, skip=(("proxy",) if page_table is not None else ()))
     h_out = cache_lib.read_h_full(cache_sl, policy, h.dtype)
     return h_out, cache_sl, aux, idx
 
@@ -254,7 +299,9 @@ def spa_forward(params: Params, cfg: ModelConfig,
                 scores_override: Optional[jax.Array] = None,
                 changed_idx: Optional[jax.Array] = None,
                 strategy: Optional[CacheStrategy] = None,
-                backend=None
+                backend=None,
+                page_table: Optional[jax.Array] = None,
+                kv_len: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict, jax.Array]:
     """Run all blocks with the given CacheStrategy on attention layers.
 
@@ -265,6 +312,11 @@ def spa_forward(params: Params, cfg: ModelConfig,
     registry; ``backend`` (a KernelBackend or "xla"/"pallas") overrides
     the strategy's kernel backend for this call. Returns (h_final,
     new_cache, aux).
+
+    Paged serving (DESIGN.md §5): ``page_table`` [B, n_log] marks the
+    ``proxy`` buffers in ``cache`` as pooled page arenas
+    ([Lk, P, page, r]); ``kv_len`` [B] is each row's valid canvas length
+    (selection + attention mask the tail).
     """
     strategy = resolve_strategy(cfg, strategy)
     if backend is not None:
@@ -324,7 +376,8 @@ def spa_forward(params: Params, cfg: ModelConfig,
                         t, l_idx, 0, keepdims=False), cache_c)
                 h_c, csl_new, aux, idx = spa_attn_block(
                     cfg, kind, bp_l, pm, csl, h_c, _kseg, policy,
-                    strategy, prev_idx=prev_c)
+                    strategy, prev_idx=prev_c, page_table=page_table,
+                    kv_len=kv_len)
                 cache_c = jax.tree.map(
                     lambda t, sl: jax.lax.dynamic_update_index_in_dim(
                         t, sl.astype(t.dtype), l_idx, 0),
@@ -362,13 +415,14 @@ def spa_forward(params: Params, cfg: ModelConfig,
                     if uses_proxy_mat and spa_proxies else None)
             h, csl_new, aux, idx = spa_attn_block(
                 cfg, kind, bp, prox, csl, h, ks[l], policy, strategy,
-                scores_override=scores_override, prev_idx=prev)
+                scores_override=scores_override, prev_idx=prev,
+                page_table=page_table, kv_len=kv_len)
             if incremental:
                 prev = pad_idx(idx)
             per_kind_new.setdefault(kind, []).append(csl_new)
             aux_total = aux_total + aux
         else:
-            h, aux, _ = apply_block_dense(cfg, kind, bp, h)
+            h, aux, _ = apply_block_dense(cfg, kind, bp, h, kv_len=kv_len)
             aux_total = aux_total + aux
             # recurrent blocks recompute everything: downstream inputs all
             # changed -> fall back to full identification next layer

@@ -169,19 +169,32 @@ class CacheStrategy:
                h_rows: jax.Array, policy, *,
                p_now: Optional[jax.Array] = None,
                proxy_now: Optional[jax.Array] = None,
-               attn_all: Optional[jax.Array] = None
+               attn_all: Optional[jax.Array] = None,
+               page_table: Optional[jax.Array] = None
                ) -> Dict[str, jax.Array]:
         """Scatter refreshed block outputs + identifier vectors at idx.
 
         H rows (+ int8 scale) and the proxy rows commit in ONE
-        multi-buffer scatter (aliased kernel call on PallasBackend)."""
+        multi-buffer scatter (aliased kernel call on PallasBackend).
+        With ``page_table`` (DESIGN.md §5) the ``proxy`` buffer is a
+        pooled page arena: its rows commit through page-table
+        indirection (``backend.scatter_rows_paged``) while the dense
+        per-step views (h + scales) keep the fused scatter."""
         from repro.core import cache as cache_lib
         from repro.core import selection
         upd = cache_lib.h_row_update(h_rows, policy)
+        proxy_rows = None
         if proxy_now is not None:   # incremental path keeps both buffers
-            upd["proxy"] = selection.gather_rows(proxy_now, idx)
+            proxy_rows = selection.gather_rows(proxy_now, idx)
         elif p_now is not None and "proxy" in cache_sl:
-            upd["proxy"] = selection.gather_rows(p_now, idx)
+            proxy_rows = selection.gather_rows(p_now, idx)
+        if proxy_rows is not None:
+            if page_table is not None:
+                cache_sl = dict(cache_sl)
+                cache_sl["proxy"] = self.backend.scatter_rows_paged(
+                    cache_sl["proxy"], page_table, idx, proxy_rows)
+            else:
+                upd["proxy"] = proxy_rows
         cache_sl = cache_lib.scatter_buffers(cache_sl, idx, upd,
                                              backend=self.backend)
         if proxy_now is not None:
@@ -195,7 +208,9 @@ class CacheStrategy:
     def refresh_cache(self, params: Params, cfg: ModelConfig,
                       tokens: jax.Array,
                       extras: Optional[Dict[str, jax.Array]] = None,
-                      spa_proxies=None) -> Dict[str, Dict[str, jax.Array]]:
+                      spa_proxies=None,
+                      kv_len: Optional[jax.Array] = None
+                      ) -> Dict[str, Dict[str, jax.Array]]:
         """Full cache rebuild from the current canvas (periodic refresh).
 
         Pure jax — shared verbatim by the host loop
@@ -203,13 +218,17 @@ class CacheStrategy:
         (``run_compiled``'s ``lax.cond`` branch), so the two paths
         cannot drift.  Strategies may override to refresh cheaper than
         a full prefill (e.g. keep offline artefacts, rebuild only KV).
+        ``kv_len`` [B] masks each row's canvas tail during the rebuild
+        (paged serving), so a short row's cache matches a prefill on a
+        kv_len-long canvas.
         """
         if not self.uses_cache:
             return {}
         from repro.dlm import decoding
         inputs = dict(extras) if extras else {}
         inputs["tokens"] = tokens
-        _, cache = decoding.prefill(params, cfg, inputs, spa_proxies, self)
+        _, cache = decoding.prefill(params, cfg, inputs, spa_proxies,
+                                    self, kv_len=kv_len)
         return cache
 
     # ---- offline artefacts ----
@@ -424,12 +443,18 @@ class AttnOutCache(_RhoBudgetStrategy):
         return attn_out
 
     def commit(self, cache_sl, idx, h_rows, policy, *, p_now=None,
-               proxy_now=None, attn_all=None):
+               proxy_now=None, attn_all=None, page_table=None):
         from repro.core import cache as cache_lib
         cache_sl = cache_lib.write_h(cache_sl, idx, h_rows, policy,
                                      backend=self.backend)
-        # momentum signal: proxy = latest full attention output
-        cache_sl["proxy"] = attn_all.astype(cache_sl["proxy"].dtype)
+        # momentum signal: proxy = latest full attention output (paged:
+        # a whole-view page write; zero-page tails drop)
+        if page_table is not None:
+            cache_sl["proxy"] = self.backend.scatter_pages(
+                cache_sl["proxy"][None], page_table,
+                attn_all.astype(cache_sl["proxy"].dtype)[None])[0]
+        else:
+            cache_sl["proxy"] = attn_all.astype(cache_sl["proxy"].dtype)
         return cache_sl
 
 

@@ -1,6 +1,6 @@
 """Sharding rules: map every tensor of the system onto the production mesh.
 
-Baseline scheme (DESIGN.md §5):
+Baseline scheme (DESIGN.md §7):
   * weights     — last dim over "model" when divisible (tensor dim), and,
                   for zero3 configs, another dim over the batch axes
                   (ZeRO-3 / FSDP); stacked-layer leading dims never shard.

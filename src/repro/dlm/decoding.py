@@ -60,6 +60,9 @@ class DecodeState(NamedTuple):
     # DecodeSession normalizes to a fresh dict at construction.
     extras: Optional[Dict[str, jax.Array]] = None  # modality stubs (VLM)
     rng: Optional[jax.Array] = None      # stochastic-scheduler key chain
+    # [B] valid canvas length per row (paged serving, DESIGN.md §5):
+    # attention/selection mask positions >= kv_len[b].  None = full N.
+    kv_len: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,15 +91,19 @@ class DecodeSettings:
 # ---------------------------------------------------------------------------
 
 def prefill(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
-            spa_proxies=None, strategy: Optional[CacheStrategy] = None
+            spa_proxies=None, strategy: Optional[CacheStrategy] = None,
+            kv_len: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Any]:
-    """Full forward building the strategy's caches. Returns (h_final, cache)."""
+    """Full forward building the strategy's caches. Returns (h_final, cache).
+
+    ``kv_len`` [B] masks each row's canvas tail in attention (paged
+    serving) so a short row prefills exactly as on its own canvas."""
     strategy = resolve_strategy(cfg, strategy)
     policy = CachePolicy.from_config(cfg)
     h = transformer.embed_inputs(params, cfg, inputs)
     h, _, raw = transformer.forward_hidden(
         params, cfg, h, collect_cache=True, spa_proxies=spa_proxies,
-        strategy=strategy)
+        strategy=strategy, kv_len=kv_len)
     cache = {}
     for kind, entries in (raw or {}).items():
         out: Dict[str, jax.Array] = {}
@@ -166,14 +173,31 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
 
     scores_override = strategy.pre_scores(n, state.committed + offset)
 
-    if not strategy.uses_cache or not cache:
-        h, _, _ = transformer.forward_hidden(params, cfg, h)
+    # Paged cache (DESIGN.md §5): the persistent state is a pooled page
+    # arena + page table.  Per step, every buffer except the identifier
+    # pages is gathered into the dense compute view through the page
+    # table (the identifier pages are consumed in-layer by the paged
+    # identification/commit kernels), and the stepped view scatters back
+    # at the end — all through strategy.backend, so XLA stays the
+    # byte-identical oracle for the Pallas paged kernels.
+    paged = isinstance(cache, cache_lib.PagedCache)
+    view = (cache_lib.paged_step_view(cache, backend=strategy.backend)
+            if paged else cache)
+    page_table = cache.page_table if paged else None
+
+    if not strategy.uses_cache or not view:
+        h, _, _ = transformer.forward_hidden(params, cfg, h,
+                                             kv_len=state.kv_len)
         new_cache = cache
     else:
-        h, new_cache, _ = spa_layer.spa_forward(
-            params, cfg, cache, h, spa_proxies=spa_proxies,
+        h, new_view, _ = spa_layer.spa_forward(
+            params, cfg, view, h, spa_proxies=spa_proxies,
             scores_override=scores_override,
-            changed_idx=state.committed, strategy=strategy)
+            changed_idx=state.committed, strategy=strategy,
+            page_table=page_table, kv_len=state.kv_len)
+        new_cache = (cache_lib.paged_step_commit(
+            cache, new_view, backend=strategy.backend)
+            if paged else new_view)
 
     # Candidate-limited logit evaluation + commit.
     cand_idx, is_masked = _candidate_positions(
@@ -228,7 +252,8 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
         tokens=new_tokens, cache=new_cache, step=state.step + 1,
         committed=committed,
         n_masked=state.n_masked - n_committed,
-        active=state.active, extras=state.extras, rng=rng_next)
+        active=state.active, extras=state.extras, rng=rng_next,
+        kv_len=state.kv_len)
     info = {"n_committed": n_committed,
             "mean_conf": jnp.mean(jnp.where(jnp.isfinite(conf), conf, 0.0))}
     return new_state, info

@@ -53,6 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
+from repro.core.cache import PagedCache
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm import decoding
 from repro.dlm.decoding import DecodeSettings, DecodeState
@@ -115,7 +117,10 @@ class DecodeSession:
     def prefill(self, prompt: jax.Array, gen_len: int, *,
                 use_cache: bool = True,
                 extras: Optional[Dict[str, jax.Array]] = None,
-                rng: Optional[jax.Array] = None) -> DecodeState:
+                rng: Optional[jax.Array] = None,
+                kv_len: Optional[jax.Array] = None,
+                arenas=None,
+                page_table: Optional[jax.Array] = None) -> DecodeState:
         """Build the canvas (prompt + gen_len [MASK] slots) and run the
         full prefill forward that populates the strategy's caches."""
         from repro.dlm.noise import mask_canvas
@@ -125,7 +130,9 @@ class DecodeSession:
         active = jnp.zeros((b, n), bool).at[:, p_len:].set(True)
         n_masked = jnp.full((b,), gen_len, jnp.int32)
         state = self.attach(canvas, active=active, n_masked=n_masked,
-                            extras=extras, use_cache=use_cache, rng=rng)
+                            extras=extras, use_cache=use_cache, rng=rng,
+                            kv_len=kv_len, arenas=arenas,
+                            page_table=page_table)
         self._gen_span = (p_len, p_len + gen_len)
         return state
 
@@ -134,8 +141,19 @@ class DecodeSession:
                n_masked: Optional[jax.Array] = None,
                extras: Optional[Dict[str, jax.Array]] = None,
                use_cache: bool = True,
-               rng: Optional[jax.Array] = None) -> DecodeState:
-        """Adopt an externally built canvas (serving engine path)."""
+               rng: Optional[jax.Array] = None,
+               kv_len: Optional[jax.Array] = None,
+               arenas=None,
+               page_table: Optional[jax.Array] = None) -> DecodeState:
+        """Adopt an externally built canvas (serving engine path).
+
+        Paged mode (DESIGN.md §5): pass pooled ``arenas``
+        ({kind: {name: [Lk, P, page, ...]}}) plus a ``page_table``
+        [B, n_log] — the prefilled dense cache is scattered into the
+        arenas and the session's cache state becomes a
+        :class:`~repro.core.cache.PagedCache`.  ``kv_len`` [B] marks each
+        row's valid canvas length (shorter rows only own the pages that
+        cover them; the tail aliases the zero page)."""
         tokens = jnp.asarray(tokens)
         b = tokens.shape[0]
         if active is None:
@@ -147,13 +165,21 @@ class DecodeSession:
         # fresh dict per state — never share or alias the caller's
         # (DecodeState's extras default used to be a shared {} literal).
         extras = dict(extras) if extras else {}
-        cache = self._build_cache(tokens, extras) if use_cache else {}
+        if kv_len is not None:
+            kv_len = jnp.asarray(kv_len, jnp.int32)
+        cache = (self._build_cache(tokens, extras, kv_len)
+                 if use_cache else {})
+        if arenas is not None and cache:
+            assert page_table is not None, "paged attach needs page_table"
+            cache = cache_lib.repage(arenas,
+                                     jnp.asarray(page_table, jnp.int32),
+                                     cache, self.strategy.backend)
         ring = self.settings.commit_ring
         self.state = DecodeState(
             tokens=tokens, cache=cache, step=jnp.zeros((), jnp.int32),
             committed=jnp.full((b, ring), -1, jnp.int32),
             n_masked=n_masked, active=active, extras=extras,
-            rng=self._as_rng(rng))
+            rng=self._as_rng(rng), kv_len=kv_len)
         self.steps_taken = 0
         self.refresh_count = 0
         self._gen_span = None     # run_blocks needs a prefill()'d canvas
@@ -169,9 +195,10 @@ class DecodeSession:
             return jax.random.PRNGKey(int(rng))
         return jnp.asarray(rng)
 
-    def _build_cache(self, tokens, extras):
+    def _build_cache(self, tokens, extras, kv_len=None):
         return self.strategy.refresh_cache(self.params, self.cfg, tokens,
-                                           extras, self.spa_proxies)
+                                           extras, self.spa_proxies,
+                                           kv_len=kv_len)
 
     # ------------------------------------------------------------------
     # Stepping
@@ -181,11 +208,17 @@ class DecodeSession:
         """Full cache rebuild from the current canvas.  A session running
         cache-less (``attach(use_cache=False)`` or ``NoCache``) never
         grows one — matching ``run_compiled``, whose carry structure is
-        fixed at trace time."""
+        fixed at trace time.  Paged sessions rebuild dense and scatter
+        back into their arenas (zero-page tails stay zero)."""
         if (not self.strategy.uses_cache or self.state is None
                 or not self.state.cache):
             return
-        cache = self._build_cache(self.state.tokens, self.state.extras)
+        cache = self._build_cache(self.state.tokens, self.state.extras,
+                                  self.state.kv_len)
+        old = self.state.cache
+        if isinstance(old, PagedCache):
+            cache = cache_lib.repage(old.arenas, old.page_table, cache,
+                                     self.strategy.backend)
         self.state = self.state._replace(cache=cache)
         self.refresh_count += 1
 
@@ -285,7 +318,12 @@ class DecodeSession:
 
         def rebuilt(state: DecodeState) -> DecodeState:
             cache = strategy.refresh_cache(params, cfg, state.tokens,
-                                           state.extras, proxies)
+                                           state.extras, proxies,
+                                           kv_len=state.kv_len)
+            if isinstance(state.cache, PagedCache):
+                old = state.cache
+                cache = cache_lib.repage(old.arenas, old.page_table,
+                                         cache, strategy.backend)
             return state._replace(cache=cache)
 
         def loop(state0: DecodeState, max_steps: jax.Array):
@@ -372,7 +410,10 @@ class DecodeSession:
 
     def replace_rows(self, rows: Sequence[int], row_tokens: np.ndarray,
                      row_active: np.ndarray,
-                     row_extras: Optional[Dict[str, np.ndarray]] = None
+                     row_extras: Optional[Dict[str, np.ndarray]] = None,
+                     row_kv_len: Optional[np.ndarray] = None,
+                     row_page_table: Optional[np.ndarray] = None,
+                     row_committed: Optional[np.ndarray] = None
                      ) -> None:
         """Swap canvas rows in-place and re-prefill ONLY those rows.
 
@@ -382,6 +423,13 @@ class DecodeSession:
         continuous-batching parity test) and spliced into the running
         cache at those batch rows — sibling rows keep their evolved
         partially-updated caches.
+
+        Paged sessions take ``row_page_table`` [n_swap, n_log] (the
+        incoming requests' freshly allocated pages; tail entries 0) and
+        ``row_kv_len`` [n_swap]: the sub-row prefill scatters into those
+        pages, sibling rows' pages are untouched.  ``row_committed``
+        restores a preempted request's commit ring (resume); default
+        clears it.
         """
         assert self.state is not None
         idx = jnp.asarray(list(rows), jnp.int32)
@@ -395,15 +443,33 @@ class DecodeSession:
         n_masked = jnp.sum(
             jnp.logical_and(tokens == self.cfg.mask_id, active),
             axis=-1).astype(jnp.int32)
-        committed = self.state.committed.at[idx].set(-1)
+        if row_committed is not None:
+            committed = self.state.committed.at[idx].set(
+                jnp.asarray(row_committed, jnp.int32))
+        else:
+            committed = self.state.committed.at[idx].set(-1)
+        kv_len = self.state.kv_len
+        sub_kv = None
+        if kv_len is not None:
+            assert row_kv_len is not None, "paged session needs row_kv_len"
+            sub_kv = jnp.asarray(row_kv_len, jnp.int32)
+            kv_len = kv_len.at[idx].set(sub_kv)
         cache = self.state.cache
         if self.strategy.uses_cache and cache:
-            fresh = self._build_cache(row_tokens, sub_extras)
-            cache = jax.tree.map(
-                lambda old, new: old.at[:, idx].set(new), cache, fresh)
+            fresh = self._build_cache(row_tokens, sub_extras, sub_kv)
+            if isinstance(cache, PagedCache):
+                assert row_page_table is not None
+                row_pt = jnp.asarray(row_page_table, jnp.int32)
+                cache = cache_lib.repage(
+                    cache.arenas, row_pt, fresh, self.strategy.backend,
+                    full_table=cache.page_table.at[idx].set(row_pt))
+            else:
+                cache = jax.tree.map(
+                    lambda old, new: old.at[:, idx].set(new), cache, fresh)
         self.state = self.state._replace(
             tokens=tokens, active=active, n_masked=n_masked,
-            committed=committed, cache=cache, extras=extras)
+            committed=committed, cache=cache, extras=extras,
+            kv_len=kv_len)
 
     def deactivate_rows(self, rows: Sequence[int]) -> None:
         """Park finished slots with no replacement request."""
@@ -412,3 +478,35 @@ class DecodeSession:
         active = self.state.active.at[idx].set(False)
         n_masked = self.state.n_masked.at[idx].set(0)
         self.state = self.state._replace(active=active, n_masked=n_masked)
+
+    def release_rows(self, rows: Sequence[int]) -> None:
+        """Release finished/preempted slots AND their pages: the rows'
+        page-table entries drop to the zero page and kv_len to 0, so the
+        physical pages can be handed to the next admitted request without
+        this session ever reading them again (a zero-kv_len row is fully
+        masked out of attention and selection)."""
+        assert self.state is not None
+        self.deactivate_rows(rows)
+        idx = jnp.asarray(list(rows), jnp.int32)
+        kv_len = self.state.kv_len
+        if kv_len is not None:
+            kv_len = kv_len.at[idx].set(0)
+        cache = self.state.cache
+        if isinstance(cache, PagedCache):
+            pt = cache.page_table.at[idx].set(0)
+            cache = PagedCache(cache.arenas, pt)
+        self.state = self.state._replace(cache=cache, kv_len=kv_len)
+
+    def snapshot_rows(self, rows: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Host copies of per-row canvas state (preemption snapshot):
+        tokens, active mask and the commit ring.  Enough to resume the
+        request later via ``replace_rows`` — the cache itself is NOT
+        saved (resume re-prefills, which for ring-preserving resumes is
+        byte-identical to a periodic refresh at the resume step)."""
+        assert self.state is not None
+        idx = np.asarray(list(rows))
+        return {
+            "tokens": np.asarray(self.state.tokens)[idx],
+            "active": np.asarray(self.state.active)[idx],
+            "committed": np.asarray(self.state.committed)[idx],
+        }

@@ -45,13 +45,21 @@ class KernelBackend:
     name: ClassVar[str] = "abstract"
 
     def identifier_scores(self, strategy, bp: Params, proxy_mat,
-                          x: jax.Array, p_cached: jax.Array):
-        """Phase 1: project x and score drift. Returns (scores, p_now)."""
+                          x: jax.Array, p_cached: jax.Array,
+                          page_table: Optional[jax.Array] = None):
+        """Phase 1: project x and score drift. Returns (scores, p_now).
+
+        With ``page_table`` ([B, n_log] int32), ``p_cached`` is a pooled
+        page arena [P, page, r] instead of a dense [B, N, r] buffer
+        (DESIGN.md §5): scoring reads the cached identifiers through
+        page-table indirection."""
         raise NotImplementedError
 
     def score_drift(self, strategy, p_now: jax.Array,
-                    p_cached: jax.Array) -> jax.Array:
-        """Score-only drift (incremental rescore, attn_out momentum)."""
+                    p_cached: jax.Array,
+                    page_table: Optional[jax.Array] = None) -> jax.Array:
+        """Score-only drift (incremental rescore, attn_out momentum).
+        ``page_table`` as in :meth:`identifier_scores`."""
         raise NotImplementedError
 
     def gather_norm(self, h: jax.Array, idx: jax.Array,
@@ -61,13 +69,36 @@ class KernelBackend:
 
     def attention(self, q, k, v, *, k_scale=None, v_scale=None,
                   q_positions=None, window: int = 0, soft_cap: float = 0.0,
-                  banded: bool = False, q_span: int = 0) -> jax.Array:
-        """Phase 2: (gathered-)query flash attention vs the KV cache."""
+                  banded: bool = False, q_span: int = 0,
+                  kv_len=None) -> jax.Array:
+        """Phase 2: (gathered-)query flash attention vs the KV cache.
+        ``kv_len`` [B]: per-row valid canvas length (paged serving)."""
         raise NotImplementedError
 
     def scatter_multi(self, buffers: Dict[str, jax.Array], idx: jax.Array,
                       rows: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         """Phase 2/3 commit: scatter row payloads into cache buffers."""
+        raise NotImplementedError
+
+    # -- paged cache pool stages (DESIGN.md §5) ---------------------
+
+    def gather_pages(self, arena: jax.Array,
+                     page_table: jax.Array) -> jax.Array:
+        """arena [L, P, page, ...] + page table [B, n_log] -> dense view
+        [L, B, n_log*page, ...]."""
+        raise NotImplementedError
+
+    def scatter_pages(self, arena: jax.Array, page_table: jax.Array,
+                      dense: jax.Array) -> jax.Array:
+        """Write a dense view back through the page table (writes to the
+        reserved zero page are dropped)."""
+        raise NotImplementedError
+
+    def scatter_rows_paged(self, arena: jax.Array, page_table: jax.Array,
+                           idx: jax.Array, rows: jax.Array) -> jax.Array:
+        """Commit row payloads [B, k, ...] at logical canvas rows idx
+        [B, k] into ONE layer's pooled arena [P, page, ...] through the
+        page table (zero-page / out-of-range rows dropped)."""
         raise NotImplementedError
 
     # -- shared fallback helpers ------------------------------------
@@ -85,11 +116,16 @@ class XlaBackend(KernelBackend):
 
     name: ClassVar[str] = "xla"
 
-    def identifier_scores(self, strategy, bp, proxy_mat, x, p_cached):
+    def identifier_scores(self, strategy, bp, proxy_mat, x, p_cached,
+                          page_table=None):
+        if page_table is not None:
+            p_cached = self.gather_pages(p_cached[None], page_table)[0]
         p_now = strategy.project(x, bp, proxy_mat)
         return strategy.score(p_now, p_cached), p_now
 
-    def score_drift(self, strategy, p_now, p_cached):
+    def score_drift(self, strategy, p_now, p_cached, page_table=None):
+        if page_table is not None:
+            p_cached = self.gather_pages(p_cached[None], page_table)[0]
         return strategy.score(p_now, p_cached)
 
     def gather_norm(self, h, idx, weight, eps):
@@ -100,17 +136,55 @@ class XlaBackend(KernelBackend):
 
     def attention(self, q, k, v, *, k_scale=None, v_scale=None,
                   q_positions=None, window=0, soft_cap=0.0, banded=False,
-                  q_span=0):
+                  q_span=0, kv_len=None):
         from repro.models.attention import flash_attention
         return flash_attention(q, k, v, k_scale=k_scale, v_scale=v_scale,
                                q_positions=q_positions, window=window,
                                soft_cap=soft_cap, banded=banded,
-                               q_span=q_span)
+                               q_span=q_span, kv_len=kv_len)
 
     def scatter_multi(self, buffers, idx, rows):
         from repro.core import selection
         return {name: selection.scatter_rows(buffers[name], idx, r)
                 for name, r in rows.items()}
+
+    def gather_pages(self, arena, page_table):
+        shape = arena.shape
+        l, page = shape[0], shape[2]
+        b, n_log = page_table.shape
+        out = jnp.take(arena, page_table, axis=1)   # [L, B, n_log, page, .]
+        return out.reshape((l, b, n_log * page) + shape[3:])
+
+    def scatter_pages(self, arena, page_table, dense):
+        shape = arena.shape
+        l, p, page = shape[0], shape[1], shape[2]
+        b, n_log = page_table.shape
+        dense = dense.reshape((l, b, n_log, page) + shape[3:])
+        # zero-page writes route out of bounds and drop (page 0 is the
+        # pool's reserved all-zero page, shared by every short row's tail)
+        pt_w = jnp.where(page_table > 0, page_table, p).astype(jnp.int32)
+        return arena.at[:, pt_w].set(dense.astype(arena.dtype),
+                                     mode="drop")
+
+    def scatter_rows_paged(self, arena, page_table, idx, rows):
+        shape = arena.shape
+        p, page = shape[0], shape[1]
+        b, n_log = page_table.shape
+        idx = idx.astype(jnp.int32)
+        lpage = idx // page
+        pid = jnp.take_along_axis(
+            page_table.astype(jnp.int32),
+            jnp.clip(lpage, 0, n_log - 1), axis=1)
+        phys = pid * page + idx % page
+        # drop: sentinel / out-of-range logical rows and zero-page rows
+        ok = jnp.logical_and(jnp.logical_and(idx >= 0, lpage < n_log),
+                             pid > 0)
+        phys = jnp.where(ok, phys, p * page)
+        flat = arena.reshape((p * page,) + shape[2:])
+        out = flat.at[phys.reshape(-1)].set(
+            rows.reshape((-1,) + flat.shape[1:]).astype(arena.dtype),
+            mode="drop")
+        return out.reshape(shape)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,12 +209,25 @@ class PallasBackend(KernelBackend):
             return self.interpret
         return jax.default_backend() != "tpu"
 
-    def identifier_scores(self, strategy, bp, proxy_mat, x, p_cached):
+    def identifier_scores(self, strategy, bp, proxy_mat, x, p_cached,
+                          page_table=None):
         from repro.kernels import proxy_score as ps
         if not self._base_score(strategy):
             return XLA_BACKEND.identifier_scores(strategy, bp, proxy_mat,
-                                                 x, p_cached)
+                                                 x, p_cached,
+                                                 page_table=page_table)
         mat = strategy.projection_matrix(bp, proxy_mat)
+        if page_table is not None:
+            if mat is not None:
+                return ps.proxy_score_paged(x, mat, p_cached, page_table,
+                                            interpret=self._interp())
+            p_now = strategy.project(x, bp, proxy_mat)
+            if p_now is x:  # identity projection: paged score-only
+                return ps.cosine_drift_paged(
+                    x, p_cached, page_table,
+                    interpret=self._interp()), p_now
+            p_dense = self.gather_pages(p_cached[None], page_table)[0]
+            return strategy.score(p_now, p_dense), p_now
         if mat is not None:
             return ps.proxy_score(x, mat, p_cached,
                                   interpret=self._interp())
@@ -151,10 +238,16 @@ class PallasBackend(KernelBackend):
         # inexpressible projection: strategy's own ops (stays correct)
         return strategy.score(p_now, p_cached), p_now
 
-    def score_drift(self, strategy, p_now, p_cached):
+    def score_drift(self, strategy, p_now, p_cached, page_table=None):
         from repro.kernels import proxy_score as ps
         if not self._base_score(strategy):
+            if page_table is not None:
+                p_cached = self.gather_pages(p_cached[None],
+                                             page_table)[0]
             return strategy.score(p_now, p_cached)
+        if page_table is not None:
+            return ps.cosine_drift_paged(p_now, p_cached, page_table,
+                                         interpret=self._interp())
         return ps.cosine_drift(p_now, p_cached, interpret=self._interp())
 
     def gather_norm(self, h, idx, weight, eps):
@@ -164,7 +257,7 @@ class PallasBackend(KernelBackend):
 
     def attention(self, q, k, v, *, k_scale=None, v_scale=None,
                   q_positions=None, window=0, soft_cap=0.0, banded=False,
-                  q_span=0):
+                  q_span=0, kv_len=None):
         from repro.kernels import sparse_attention as sa
         b, sq = q.shape[:2]
         if q_positions is None:     # contiguous canvas: span = q block
@@ -174,7 +267,7 @@ class PallasBackend(KernelBackend):
             q, k, v, q_positions, k_scale=k_scale, v_scale=v_scale,
             window=window, soft_cap=soft_cap, banded=banded,
             q_span=q_span, block_q=self.block_q, block_k=self.block_k,
-            interpret=self._interp())
+            kv_len=kv_len, interpret=self._interp())
 
     def scatter_multi(self, buffers, idx, rows):
         from repro.kernels import scatter_update as sc
@@ -183,6 +276,21 @@ class PallasBackend(KernelBackend):
             [buffers[n] for n in names], idx, [rows[n] for n in names],
             interpret=self._interp())
         return dict(zip(names, outs))
+
+    def gather_pages(self, arena, page_table):
+        from repro.kernels import scatter_update as sc
+        return sc.gather_pages(arena, page_table,
+                               interpret=self._interp())
+
+    def scatter_pages(self, arena, page_table, dense):
+        from repro.kernels import scatter_update as sc
+        return sc.scatter_pages(arena, page_table, dense,
+                                interpret=self._interp())
+
+    def scatter_rows_paged(self, arena, page_table, idx, rows):
+        from repro.kernels import scatter_update as sc
+        return sc.scatter_rows_paged(arena, page_table, idx, rows,
+                                     interpret=self._interp())
 
 
 XLA_BACKEND = XlaBackend()

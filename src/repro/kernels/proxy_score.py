@@ -150,6 +150,124 @@ def cosine_drift(x: jax.Array, p_cached: jax.Array, *, eps: float = 1e-8,
     return scores[0] if unbatched else scores
 
 
+# ---------------------------------------------------------------------------
+# Paged variants (DESIGN.md §5): the cached identifier vectors live in a
+# pooled page arena [P, page, r] addressed through a per-row page table
+# rather than a dense [B, N, r] buffer.  The fused projection+scoring
+# pass is unchanged — cached pages are pulled VMEM-resident one
+# contiguous DMA at a time (page ids prefetched through SMEM) while the
+# projection block is still live, so paging adds indirection but no
+# extra HBM round-trip.  Numerics are identical to gathering the pages
+# dense and running ``proxy_score``/``cosine_drift`` (pages are exact
+# copies), which is exactly what the XLA oracle backend does.
+# ---------------------------------------------------------------------------
+
+
+def _proxy_score_paged_kernel(pt_ref, x_ref, w_ref, a_ref, scores_ref,
+                              pnow_ref, *, eps: float, ppb: int,
+                              page: int):
+    x = x_ref[0].astype(jnp.float32)             # [ppb*page, d]
+    w = w_ref[...].astype(jnp.float32)           # [d, r]
+    p = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    p_store = p.astype(pnow_ref.dtype)
+    pnow_ref[0] = p_store
+    pf = p_store.astype(jnp.float32)
+    for t in range(ppb):                         # unrolled: ppb is small
+        pid = pt_ref[0, t]
+        pc = a_ref[pl.dslice(pid, 1), :, :][0].astype(jnp.float32)
+        scores_ref[0, t * page:(t + 1) * page] = _cosine(
+            pf[t * page:(t + 1) * page], pc, eps)
+
+
+def _pages_per_block(n_log: int, page: int, d: int, r: int) -> int:
+    ppb = max(1, proxy_score_block_n(d, r) // page)
+    ppb = min(ppb, n_log)
+    while n_log % ppb:
+        ppb -= 1
+    return ppb
+
+
+def proxy_score_paged(x: jax.Array, proxy_mat: jax.Array,
+                      arena: jax.Array, pt: jax.Array, *,
+                      eps: float = 1e-8, interpret: bool = False):
+    """Fused Phase-1 identification against a PAGED identifier cache.
+
+    x: [B, N, d]; proxy_mat: [d, r]; arena: [P, page, r] pooled pages;
+    pt: [B, n_log] page table (N == n_log * page).  Returns
+    (scores [B, N] f32, p_now [B, N, r] in x.dtype) — byte-identical to
+    gathering the pages dense and calling :func:`proxy_score`."""
+    b, n, d = x.shape
+    page, r = arena.shape[1], arena.shape[2]
+    n_log = pt.shape[1]
+    assert n == n_log * page, (n, n_log, page)
+    ppb = _pages_per_block(n_log, page, d, r)
+    bn = ppb * page
+
+    scores, p_now = pl.pallas_call(
+        functools.partial(_proxy_score_paged_kernel, eps=eps, ppb=ppb,
+                          page=page),
+        grid=(b, n_log // ppb),
+        in_specs=[
+            pl.BlockSpec((1, ppb), lambda bb, i: (bb, i),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bn, d), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec((d, r), lambda bb, i: (0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda bb, i: (bb, i)),
+            pl.BlockSpec((1, bn, r), lambda bb, i: (bb, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n, r), x.dtype),
+        ],
+        interpret=interpret,
+    )(pt.astype(jnp.int32), x, proxy_mat, arena)
+    return scores, p_now
+
+
+def _cosine_drift_paged_kernel(pt_ref, x_ref, a_ref, scores_ref, *,
+                               eps: float, ppb: int, page: int):
+    xf = x_ref[0].astype(jnp.float32)            # [ppb*page, r]
+    for t in range(ppb):
+        pid = pt_ref[0, t]
+        pc = a_ref[pl.dslice(pid, 1), :, :][0].astype(jnp.float32)
+        scores_ref[0, t * page:(t + 1) * page] = _cosine(
+            xf[t * page:(t + 1) * page], pc, eps)
+
+
+def cosine_drift_paged(x: jax.Array, arena: jax.Array, pt: jax.Array, *,
+                       eps: float = 1e-8,
+                       interpret: bool = False) -> jax.Array:
+    """Projection-free paged drift: cosine(x[b, n], page(n)) per row.
+    x: [B, N, r]; arena: [P, page, r]; pt: [B, n_log].  Returns [B, N]
+    f32 — byte-identical to the dense gather + :func:`cosine_drift`."""
+    b, n, r = x.shape
+    page = arena.shape[1]
+    n_log = pt.shape[1]
+    assert n == n_log * page, (n, n_log, page)
+    ppb = _pages_per_block(n_log, page, r, r)
+    bn = ppb * page
+
+    scores = pl.pallas_call(
+        functools.partial(_cosine_drift_paged_kernel, eps=eps, ppb=ppb,
+                          page=page),
+        grid=(b, n_log // ppb),
+        in_specs=[
+            pl.BlockSpec((1, ppb), lambda bb, i: (bb, i),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bn, r), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda bb, i: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(pt.astype(jnp.int32), x, arena)
+    return scores
+
+
 def _gather_norm_kernel(idx_ref, w_ref, h_ref, rows_ref, normed_ref, *,
                         eps: float, gb: int):
     bb = pl.program_id(0)

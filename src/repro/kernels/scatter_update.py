@@ -129,6 +129,190 @@ def scatter_update_multi(caches: Sequence[jax.Array], idx: jax.Array,
     return tuple(o.reshape(s) for o, s in zip(outs, shapes))
 
 
+# ---------------------------------------------------------------------------
+# Paged variants (DESIGN.md §5): cache rows live in a pooled arena of
+# fixed-size pages; logical canvas row n of batch row b resolves to
+# physical row  pt[b, n // page] * page + n % page.  Page ids ride in
+# SMEM (scalar prefetch), page payloads move as ONE contiguous DMA per
+# page (pages are contiguous in the arena by construction), and physical
+# page 0 is the pool's reserved zero page — never written, so logical
+# pages past a request's ``kv_len`` can all alias it.
+# ---------------------------------------------------------------------------
+
+
+def _gather_pages_kernel(pt_ref, a_ref, o_ref):
+    ll, bb, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    del bb  # pt block is already the (bb, :) row
+    pid = pt_ref[0, j]
+    o_ref[0, 0] = a_ref[pl.dslice(ll, 1), pl.dslice(pid, 1), :, :][0, 0]
+
+
+def gather_pages(arena: jax.Array, pt: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """arena: [L, P, page, ...feat]; pt: [B, n_log] int32 page table.
+    Returns the dense view [L, B, n_log*page, ...feat] — one contiguous
+    VMEM<-HBM DMA per (layer, batch row, logical page)."""
+    shape = arena.shape
+    l, p, page = shape[0], shape[1], shape[2]
+    arena3 = arena.reshape(l, p, page, -1)
+    f = arena3.shape[-1]
+    b, n_log = pt.shape
+    out = pl.pallas_call(
+        _gather_pages_kernel,
+        grid=(l, b, n_log),
+        in_specs=[
+            pl.BlockSpec((1, n_log), lambda ll, bb, j: (bb, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page, f),
+                               lambda ll, bb, j: (ll, bb, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, b, n_log * page, f),
+                                       arena.dtype),
+        interpret=interpret,
+    )(pt.astype(jnp.int32), arena3)
+    return out.reshape((l, b, n_log * page) + shape[3:])
+
+
+def _scatter_pages_kernel(pt_ref, d_ref, a_ref, o_ref):
+    del a_ref                                # aliased input; only written
+    ll, j = pl.program_id(0), pl.program_id(2)
+    pid = pt_ref[0, j]
+
+    @pl.when(pid > 0)                        # page 0 = reserved zero page
+    def _():
+        o_ref[pl.dslice(ll, 1), pl.dslice(pid, 1), :, :] = (
+            d_ref[...].astype(o_ref.dtype))
+
+
+def scatter_pages(arena: jax.Array, pt: jax.Array, dense: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`gather_pages`: write the dense view back through
+    the page table (arena aliased input->output; writes to the zero page
+    are dropped, so tail pages of short rows stay zero)."""
+    shape = arena.shape
+    l, p, page = shape[0], shape[1], shape[2]
+    arena3 = arena.reshape(l, p, page, -1)
+    f = arena3.shape[-1]
+    b, n_log = pt.shape
+    dense3 = dense.reshape(l, b, n_log * page, f)
+    out = pl.pallas_call(
+        _scatter_pages_kernel,
+        grid=(l, b, n_log),
+        in_specs=[
+            pl.BlockSpec((1, n_log), lambda ll, bb, j: (bb, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, page, f), lambda ll, bb, j: (ll, bb, j, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct(arena3.shape, arena.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(pt.astype(jnp.int32), dense3, arena3)
+    return out.reshape(shape)
+
+
+def _scatter_rows_paged_kernel(idx_ref, pt_ref, r_ref, a_ref, o_ref, *,
+                               bk: int, run: int, page: int, n_log: int):
+    del a_ref
+
+    def store(pid, off, src_off, length):
+        o_ref[pl.dslice(pid, 1), pl.dslice(off, length), :] = (
+            r_ref[0, pl.dslice(src_off, length), :].astype(
+                o_ref.dtype)[None])
+
+    def chunk(c, carry):
+        i0 = c * run
+        first = idx_ref[0, i0]
+        fpage = first // page
+        foff = first % page
+
+        # One batched DMA iff the chunk is exactly consecutive AND stays
+        # inside one physical page (runs never span pages — the arena is
+        # only contiguous within a page).
+        def elem_ok(t, ok):
+            return jnp.logical_and(ok, idx_ref[0, i0 + t] == first + t)
+
+        contig = jax.lax.fori_loop(
+            1, run, elem_ok,
+            jnp.logical_and(jnp.logical_and(first >= 0, fpage < n_log),
+                            foff + run <= page))
+        fpid = pt_ref[0, jnp.minimum(fpage, n_log - 1)]
+        contig = jnp.logical_and(contig, fpid > 0)
+
+        @pl.when(contig)
+        def _batched():
+            store(fpid, foff, i0, run)
+
+        @pl.when(jnp.logical_not(contig))
+        def _rowwise():
+            def one(t, cc):
+                ri = idx_ref[0, i0 + t]
+                rpage = ri // page
+                ok = jnp.logical_and(ri >= 0, rpage < n_log)
+                pid = pt_ref[0, jnp.minimum(rpage, n_log - 1)]
+
+                @pl.when(jnp.logical_and(ok, pid > 0))
+                def _():
+                    store(pid, ri % page, i0 + t, 1)
+
+                return cc
+
+            jax.lax.fori_loop(0, run, one, 0)
+
+        return carry
+
+    jax.lax.fori_loop(0, bk // run, chunk, 0)
+
+
+def scatter_rows_paged(arena: jax.Array, pt: jax.Array, idx: jax.Array,
+                       rows: jax.Array, *, block_k: int = 128,
+                       run: int = 8, interpret: bool = False) -> jax.Array:
+    """Row-granular paged commit: arena is ONE layer's pooled buffer
+    [P, page, ...feat] SHARED by all batch rows (each row's page-table
+    row maps into disjoint pages); idx [B, k] logical canvas rows
+    (sorted common; out-of-range/zero-page rows dropped); rows
+    [B, k, ...feat].  Returns the updated arena (aliased
+    input->output)."""
+    shape = arena.shape
+    p, page = shape[0], shape[1]
+    arena3 = arena.reshape(p, page, -1)
+    f = arena3.shape[-1]
+    b, k = idx.shape
+    n_log = pt.shape[1]
+    rows3 = rows.reshape(b, k, -1)
+    bk = min(block_k, k)
+    pad = (-k) % bk
+    if pad:
+        idx = jnp.pad(idx, ((0, 0), (0, pad)),
+                      constant_values=n_log * page)
+        rows3 = jnp.pad(rows3, ((0, 0), (0, pad), (0, 0)))
+    kp = idx.shape[1]
+    run = max(1, min(run, bk, page))
+    while bk % run:
+        run -= 1
+
+    out = pl.pallas_call(
+        functools.partial(_scatter_rows_paged_kernel, bk=bk, run=run,
+                          page=page, n_log=n_log),
+        grid=(b, kp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda bb, i: (bb, i),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n_log), lambda bb, i: (bb, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bk, f), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct(arena3.shape, arena.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pt.astype(jnp.int32), rows3, arena3)
+    return out.reshape(shape)
+
+
 def scatter_update(cache: jax.Array, idx: jax.Array, rows: jax.Array,
                    *, block_k: int = 128,
                    interpret: bool = False) -> jax.Array:

@@ -37,8 +37,13 @@ NEG_INF = -1e30
 
 def _attn_step(qpos, q, k, v, ks, vs, o_ref, m_scr, l_scr, acc_scr, *,
                kv_base, j, nj, window: int, soft_cap: float,
-               n_valid: int, scale: float):
-    """One kv-block online-softmax update (shared by both grid flavors)."""
+               n_valid: int, scale: float, kv_limit=None):
+    """One kv-block online-softmax update (shared by both grid flavors).
+
+    ``kv_limit`` (scalar int32) is the batch row's valid canvas length
+    (paged serving): kv positions >= kv_limit mask out exactly like the
+    global ``n_valid`` pad bound, mirroring the XLA path's per-row
+    ``kv_len`` mask op-for-op."""
 
     @pl.when(j == 0)
     def _init():
@@ -57,6 +62,8 @@ def _attn_step(qpos, q, k, v, ks, vs, o_ref, m_scr, l_scr, acc_scr, *,
 
     kv_pos = kv_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = kv_pos < n_valid
+    if kv_limit is not None:
+        valid = jnp.logical_and(valid, kv_pos < kv_limit)
     if window > 0:
         valid = jnp.logical_and(valid,
                                 jnp.abs(qpos[:, None] - kv_pos) <= window)
@@ -82,26 +89,27 @@ def _attn_step(qpos, q, k, v, ks, vs, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
 
 
-def _dense_kernel(qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, nk: int, bk: int, window: int,
-                  soft_cap: float, n_valid: int, scale: float):
+def _dense_kernel(qpos_ref, kvl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, nk: int, bk: int,
+                  window: int, soft_cap: float, n_valid: int, scale: float):
     j = pl.program_id(3)
     _attn_step(qpos_ref[0], q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
                ks_ref[0, 0], vs_ref[0, 0], o_ref, m_scr, l_scr, acc_scr,
                kv_base=j * bk, j=j, nj=nk, window=window,
-               soft_cap=soft_cap, n_valid=n_valid, scale=scale)
+               soft_cap=soft_cap, n_valid=n_valid, scale=scale,
+               kv_limit=kvl_ref[0])
 
 
-def _banded_kernel(starts_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref,
-                   vs_ref, o_ref, m_scr, l_scr, acc_scr, *, n_band: int,
-                   bk: int, window: int, soft_cap: float, n_valid: int,
-                   scale: float):
+def _banded_kernel(starts_ref, qpos_ref, kvl_ref, q_ref, k_ref, v_ref,
+                   ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                   n_band: int, bk: int, window: int, soft_cap: float,
+                   n_valid: int, scale: float):
     i, j = pl.program_id(2), pl.program_id(3)
     _attn_step(qpos_ref[0], q_ref[0, 0], k_ref[0, 0], v_ref[0, 0],
                ks_ref[0, 0], vs_ref[0, 0], o_ref, m_scr, l_scr, acc_scr,
                kv_base=(starts_ref[i] + j) * bk, j=j, nj=n_band,
                window=window, soft_cap=soft_cap, n_valid=n_valid,
-               scale=scale)
+               scale=scale, kv_limit=kvl_ref[0])
 
 
 def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -109,16 +117,19 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      window: int = 0, soft_cap: float = 0.0,
                      banded: bool = False, q_span: int = 0,
                      block_q: int = 512, block_k: int = 512,
-                     interpret: bool = False) -> jax.Array:
+                     kv_len=None, interpret: bool = False) -> jax.Array:
     """q: [B, kq, H, hd]; k/v: [B, N, KVH, hd]; q_pos: [B, kq]
     (2D/3D unbatched forms also accepted).  k_scale/v_scale: [B, N, KVH]
     or None.  ``banded`` + ``q_span`` enable the stratified banded path
-    (requires window > 0).  Returns [B, kq, H, hd] in q.dtype."""
+    (requires window > 0).  ``kv_len``: [B] per-row valid canvas length
+    (None = N).  Returns [B, kq, H, hd] in q.dtype."""
     unbatched = q.ndim == 3
     if unbatched:
         q, k, v, q_pos = q[None], k[None], v[None], q_pos[None]
         if k_scale is not None:
             k_scale, v_scale = k_scale[None], v_scale[None]
+        if kv_len is not None:
+            kv_len = kv_len[None]
     b, kq, h, hd = q.shape
     n, kvh = k.shape[1], k.shape[2]
     assert h % kvh == 0
@@ -149,6 +160,8 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     kst = jnp.swapaxes(k_scale, 1, 2).astype(jnp.float32)  # [B, KVH, N_p]
     vst = jnp.swapaxes(v_scale, 1, 2).astype(jnp.float32)
     q_pos = q_pos.astype(jnp.int32)
+    kv_len = (jnp.full((b,), n, jnp.int32) if kv_len is None
+              else kv_len.astype(jnp.int32))
 
     kq_p, skv_p = qt.shape[2], kt.shape[2]
     nq = kq_p // bq
@@ -177,6 +190,8 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             grid=(b, h, nq, n_band),
             in_specs=[
                 pl.BlockSpec((1, bq), lambda bb, hh, i, j, st: (bb, i)),
+                pl.BlockSpec((1,), lambda bb, hh, i, j, st: (bb,),
+                             memory_space=pltpu.SMEM),
                 pl.BlockSpec((1, 1, bq, hd),
                              lambda bb, hh, i, j, st: (bb, hh, i, 0)),
                 pl.BlockSpec((1, 1, bk, hd),
@@ -199,7 +214,7 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             grid_spec=grid_spec,
             out_shape=out_shape,
             interpret=interpret,
-        )(starts, q_pos, qt, kt, vt, kst, vst)
+        )(starts, q_pos, kv_len, qt, kt, vt, kst, vst)
     else:
         out = pl.pallas_call(
             functools.partial(_dense_kernel, nk=nk, bk=bk, window=window,
@@ -207,6 +222,8 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             grid=(b, h, nq, nk),
             in_specs=[
                 pl.BlockSpec((1, bq), lambda bb, hh, i, j: (bb, i)),
+                pl.BlockSpec((1,), lambda bb, hh, i, j: (bb,),
+                             memory_space=pltpu.SMEM),
                 pl.BlockSpec((1, 1, bq, hd),
                              lambda bb, hh, i, j: (bb, hh, i, 0)),
                 pl.BlockSpec((1, 1, bk, hd),
@@ -223,7 +240,7 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             out_shape=out_shape,
             scratch_shapes=scratch,
             interpret=interpret,
-        )(q_pos, qt, kt, vt, kst, vst)
+        )(q_pos, kv_len, qt, kt, vt, kst, vst)
 
     out = jnp.swapaxes(out, 1, 2)[:, :kq]           # [B, kq, H, hd]
     return out[0] if unbatched else out

@@ -44,6 +44,13 @@ def main(argv=None):
                          "interpret mode off-TPU)")
     ap.add_argument("--static-batching", action="store_true",
                     help="disable step-granular continuous batching")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="paged serving (DESIGN.md §5): total pages in "
+                         "the device cache pool (page 0 is the reserved "
+                         "zero page); 0 = dense per-lane slabs")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="canvas rows per cache page (the canvas length "
+                         "must be a multiple)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_arch(args.arch))
@@ -69,6 +76,7 @@ def main(argv=None):
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
+        pool_pages=args.pool_pages, page_size=args.page_size,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
@@ -82,6 +90,17 @@ def main(argv=None):
           f"{stats.tokens_committed} tokens, {stats.steps} steps, "
           f"{stats.swaps} slot swaps, "
           f"{stats.tps(engine._wall):.1f} tok/s")
+    pct = stats.percentiles()
+    print(f"latency: e2e p50={pct['e2e_p50'] * 1e3:.0f}ms "
+          f"p95={pct['e2e_p95'] * 1e3:.0f}ms | queue-wait "
+          f"p50={pct['wait_p50'] * 1e3:.0f}ms "
+          f"p95={pct['wait_p95'] * 1e3:.0f}ms")
+    if args.pool_pages:
+        print(f"pool: {args.pool_pages} pages x {args.page_size} rows, "
+              f"peak util {stats.peak_pool_util:.0%}, steady "
+              f"{stats.steady_pool_util:.0%}, "
+              f"{stats.preemptions} preemptions, "
+              f"{stats.admission_stalls} admission stalls")
     for req in engine.done[:3]:
         print(f"  req {req.uid}: out={req.output[:10]}...")
     return 0

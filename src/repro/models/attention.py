@@ -47,12 +47,17 @@ def _deq(xb: jax.Array, scale_b: Optional[jax.Array]) -> jax.Array:
 
 
 def _attend_one_block(q, kb, vb, kb_scale, vb_scale, qpos, kbpos, kv_valid,
-                      window, soft_cap, scale, carry):
+                      window, soft_cap, scale, carry, kv_len=None):
     """One online-softmax step.
 
     q:    [B, bq, KVH, G, D] (f32);  kb, vb: [B, bk, KVH, D]
     kb_scale/vb_scale: [B, bk, KVH] or None (int8 dequant scales)
     qpos: [B, bq]; kbpos: [bk]; kv_valid: [bk] bool
+    kv_len: [B] int32 or None — per-row valid canvas length; kv positions
+      >= kv_len[b] are masked out exactly like pad positions, so a row
+      whose canvas occupies only kv_len positions attends identically to
+      one computed on a kv_len-long canvas (masked positions contribute
+      exact zeros to p and pv).
     carry: (m [B,bq,KVH,G], l [B,bq,KVH,G], acc [B,bq,KVH,G,D])
     """
     m_prev, l_prev, acc_prev = carry
@@ -62,6 +67,9 @@ def _attend_one_block(q, kb, vb, kb_scale, vb_scale, qpos, kbpos, kv_valid,
     if soft_cap > 0.0:
         scores = soft_cap * jnp.tanh(scores / soft_cap)
     mask = kv_valid[None, None, :]                       # [1,1,bk]
+    if kv_len is not None:
+        mask = jnp.logical_and(mask,
+                               kbpos[None, None, :] < kv_len[:, None, None])
     if window > 0:
         dist = jnp.abs(qpos[:, :, None] - kbpos[None, None, :])
         mask = jnp.logical_and(mask, dist <= window)     # [B,bq,bk]
@@ -127,6 +135,7 @@ def flash_attention(
     block_k: int = 512,
     banded: bool = False,
     q_span: int = 0,
+    kv_len: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Bidirectional chunked attention.
 
@@ -134,6 +143,8 @@ def flash_attention(
     q_positions: [B, Sq] original positions of (possibly gathered) queries;
       default arange. KV positions are always 0..Skv-1 (the full canvas).
     window: 0 = full; >0 = |q_pos - kv_pos| <= window.
+    kv_len: [B] per-row valid canvas length (paged serving: rows shorter
+      than the canvas mask out their tail exactly like pad); None = Skv.
     banded: static/dynamic block skipping (needs window > 0).
     q_span: static bound on (max-min) position span inside any q block;
       0 means "contiguous canvas" (span = block_q). Required for gathered
@@ -164,6 +175,8 @@ def flash_attention(
     if q_positions is None:
         q_positions = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
     q_positions = q_positions.astype(jnp.int32)
+    if kv_len is not None:
+        kv_len = kv_len.astype(jnp.int32)
 
     bq = min(block_q, sq)
     bk = min(block_k, skv)
@@ -218,7 +231,7 @@ def flash_attention(
                     kpos_full, kb_idx, 0, False)
                 carry = _attend_one_block(
                     q_i, kb, vb, kbs, vbs, qpos_i, kpos, kv_val, window,
-                    soft_cap, scale, carry)
+                    soft_cap, scale, carry, kv_len=kv_len)
                 return carry, None
 
             carry, _ = jax.lax.scan(kv_step, init_carry(),
@@ -238,7 +251,7 @@ def flash_attention(
                 vbs = vs_r[:, idx] if vs_r is not None else None
                 carry = _attend_one_block(
                     q_i, kb, vb, kbs, vbs, qpos_i, kpos, kv_val, window,
-                    soft_cap, scale, carry)
+                    soft_cap, scale, carry, kv_len=kv_len)
                 return carry, None
 
             carry, _ = jax.lax.scan(kv_step, init_carry(),
@@ -263,7 +276,7 @@ def flash_attention(
 
 def reference_attention(q, k, v, *, k_scale=None, v_scale=None,
                         q_positions=None, window=0,
-                        soft_cap=0.0) -> jax.Array:
+                        soft_cap=0.0, kv_len=None) -> jax.Array:
     """O(Sq*Skv) dense oracle for tests."""
     b, sq, h, d = q.shape
     skv, kvh = k.shape[1], k.shape[2]
@@ -276,10 +289,19 @@ def reference_attention(q, k, v, *, k_scale=None, v_scale=None,
     scores = jnp.einsum("bqhgd,bkhd->bqhgk", qr, kf) / (d ** 0.5)
     if soft_cap > 0.0:
         scores = soft_cap * jnp.tanh(scores / soft_cap)
+    if kv_len is not None:
+        mask = (jnp.arange(skv)[None, :] < kv_len[:, None]
+                )[:, None, None, None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
     if window > 0:
         dist = jnp.abs(q_positions[:, :, None] - jnp.arange(skv)[None, None])
         mask = (dist <= window)[:, :, None, None, :]
         scores = jnp.where(mask, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bqhgk,bkhd->bqhgd", p, vf)
+    if kv_len is not None:
+        # a fully-released row (kv_len == 0) has no valid keys: match
+        # flash_attention's l == 0 guard (exact zeros, not softmax of a
+        # uniform -inf row)
+        out = jnp.where((kv_len > 0)[:, None, None, None, None], out, 0.0)
     return out.reshape(b, sq, h, d).astype(q.dtype)

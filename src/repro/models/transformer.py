@@ -160,7 +160,8 @@ def apply_ffn_or_moe(bp: Params, x: jax.Array, cfg: ModelConfig
 def apply_block_dense(cfg: ModelConfig, kind: str, bp: Params,
                       h: jax.Array, *, collect_cache: bool = False,
                       proxy_mat: Optional[jax.Array] = None,
-                      strategy=None
+                      strategy=None,
+                      kv_len: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, jax.Array,
                                  Optional[Dict[str, jax.Array]]]:
     """One transformer block over the full sequence.
@@ -170,6 +171,12 @@ def apply_block_dense(cfg: ModelConfig, kind: str, bp: Params,
     (``strategy.prefill_proxy``, computed in-block so prefill never
     materializes raw layer inputs across layers); the caller quantizes
     via ``cache.fill_from_prefill``.
+
+    ``kv_len`` ([B] int32, paged serving): per-row valid canvas length —
+    attention masks kv positions >= kv_len[b] so a short row computes
+    exactly as on a kv_len-long canvas.  Recurrent kinds (rglru/ssd) are
+    causal, so positions beyond kv_len cannot influence valid rows and
+    need no masking.
     """
     b, n, _ = h.shape
     aux = jnp.zeros((), jnp.float32)
@@ -182,7 +189,7 @@ def apply_block_dense(cfg: ModelConfig, kind: str, bp: Params,
         w = layer_window(cfg, kind)
         attn = flash_attention(q, k, v, window=w,
                                soft_cap=cfg.attn_softcap,
-                               banded=(w > 0))
+                               banded=(w > 0), kv_len=kv_len)
         from repro.distributed.hints import shard_hint
         attn_out = shard_hint(attn.reshape(b, n, cfg.q_dim) @ bp["wo"],
                               "batch", "keep", None)
@@ -256,14 +263,15 @@ def _slice_kind_stacks(cfg: ModelConfig, blocks: Params, n_full: int):
 
 def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
                    *, collect_cache: bool = False, spa_proxies=None,
-                   strategy=None
+                   strategy=None, kv_len: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Run all blocks. Returns (h, total_aux, caches).
 
     caches (when collect_cache): {kind: {"k": [Lk,B,N,KVH,HD], ...}} with
     raw tensors in layer order within each kind. spa_proxies
     ({kind: [Lk, d, r]}) are needed only when collecting with the
-    singular identifier.
+    singular identifier.  kv_len ([B] or None) is the per-row valid
+    canvas length, threaded to every attention block (paged serving).
     """
     period, n_full, remainder = period_plan(cfg)
     blocks = params["blocks"]
@@ -303,7 +311,7 @@ def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
                 used[kind] += 1
                 h_c, aux, entries = apply_block_dense(
                     cfg, kind, bp, h_c, collect_cache=collect_cache,
-                    proxy_mat=pm, strategy=strategy)
+                    proxy_mat=pm, strategy=strategy, kv_len=kv_len)
                 aux_c = aux_c + aux
                 if collect_cache and entries is not None:
                     ys.setdefault(kind, []).append(entries)
@@ -332,13 +340,13 @@ def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
             if cfg.remat and not collect_cache:
                 blk = jax.checkpoint(
                     functools.partial(apply_block_dense,
-                                      collect_cache=False),
+                                      collect_cache=False, kv_len=kv_len),
                     static_argnums=(0, 1), prevent_cse=False)
                 h, aux, entries = blk(cfg, kind, bp, h)
             else:
                 h, aux, entries = apply_block_dense(
                     cfg, kind, bp, h, collect_cache=collect_cache,
-                    proxy_mat=pm, strategy=strategy)
+                    proxy_mat=pm, strategy=strategy, kv_len=kv_len)
             aux_total = aux_total + aux
             if collect_cache and entries is not None:
                 caches[kind].append(entries)
@@ -349,7 +357,7 @@ def forward_hidden(params: Params, cfg: ModelConfig, h: jax.Array,
         h, aux, entries = apply_block_dense(
             cfg, kind, bp, h, collect_cache=collect_cache,
             proxy_mat=_prox_slice(kind, cfg.kind_index(l)),
-            strategy=strategy)
+            strategy=strategy, kv_len=kv_len)
         aux_total = aux_total + aux
         if collect_cache and entries is not None and kind in caches:
             caches[kind].append(entries)

@@ -1,9 +1,9 @@
-"""Batched DLM serving engine on DecodeSession (DESIGN.md §3.2).
+"""Batched DLM serving engine on DecodeSession (DESIGN.md §3.2, §5).
 
 Requests (prompt + gen_len + optional per-request DecodeSettings /
-CacheStrategy / UnmaskScheduler) are padded onto fixed canvas rows and
-served by a ``DecodeSession`` at **step granularity**: when a row
-finishes, its slot is swapped for the next queued request mid-loop
+CacheStrategy / UnmaskScheduler / priority) are padded onto fixed canvas
+rows and served by a ``DecodeSession`` at **step granularity**: when a
+row finishes, its slot is swapped for the next queued request mid-loop
 (``DecodeSession.replace_rows``) while sibling rows keep stepping with
 their evolved caches — no whole-batch re-prefill barrier.
 
@@ -20,6 +20,21 @@ asserted by ``tests/test_strategy_parity.py``.  Stochastic schedulers
 sampled outputs depend on batch composition and swap order; runs are
 reproducible per engine configuration but NOT invariant to scheduling.
 
+Paged mode (``pool_pages > 0``, DESIGN.md §5): cache memory is a
+managed resource.  A :class:`~repro.serving.pool.PagePool` owns one
+device arena of fixed-size pages; each request allocates only the pages
+covering its own (page-aligned) prompt+gen span, so heterogeneous
+``gen_len`` requests share a lane without padding their cache to the
+lane max — the canvas tail past a row's ``kv_len`` aliases the pool's
+zero page and is masked out of attention and selection.  Admission is
+gated on free pages; when the head of the queue cannot fit, the engine
+preempts the lowest-priority running request (its pages are released,
+its canvas+commit-ring snapshot requeued at the front) instead of
+failing.  A resumed request re-prefills its cache from the snapshot —
+byte-identical to a periodic refresh at the resume step, so a
+preempted-then-resumed request matches a twin that refreshed there
+(``tests/test_serving.py``).
+
 Slot bookkeeping uses the session's explicit active-position mask;
 token ids are never overloaded as "committed filler" sentinels.
 """
@@ -33,10 +48,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cache import PagedCache, n_logical_pages
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm.decoding import DecodeSettings
 from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
 from repro.dlm.session import DecodeSession
+from repro.serving.pool import OutOfPages, PagePool
 
 # (settings, strategy, scheduler): everything the compiled step closes
 # over statically — one DecodeSession (one executable) per distinct key.
@@ -51,10 +68,19 @@ class Request:
     settings: Optional[DecodeSettings] = None
     strategy: Optional[CacheStrategy] = None
     scheduler: Optional[UnmaskScheduler] = None
+    priority: int = 0               # higher = preempts lower
     submitted_at: float = dataclasses.field(default_factory=time.time)
+    started_at: Optional[float] = None   # first admission to a slot
     completed_at: Optional[float] = None
     output: Optional[np.ndarray] = None
     lane: Optional[LaneKey] = None  # resolved ONCE at submit()
+    # paged bookkeeping
+    row_len: int = 0                # page-aligned prompt+gen span
+    n_pages: int = 0                # composite pages needed
+    pages: Optional[List[int]] = None
+    preemptions: int = 0
+    served_steps: int = 0           # per-request max_steps budget
+    snapshot: Optional[Dict[str, np.ndarray]] = None  # preempt resume
 
 
 @dataclasses.dataclass
@@ -63,9 +89,27 @@ class EngineStats:
     tokens_committed: int = 0
     requests_done: int = 0
     swaps: int = 0                  # mid-loop slot replacements
+    preemptions: int = 0            # out-of-pages victim evictions
+    admission_stalls: int = 0       # admission attempts blocked on pages
+    peak_pool_util: float = 0.0
+    steady_pool_util: float = 0.0
+    e2e_latencies: List[float] = dataclasses.field(default_factory=list)
+    queue_waits: List[float] = dataclasses.field(default_factory=list)
 
     def tps(self, wall: float) -> float:
         return self.tokens_committed / max(wall, 1e-9)
+
+    def percentiles(self) -> Dict[str, float]:
+        """p50/p95 end-to-end + queue-wait latency (seconds)."""
+        out: Dict[str, float] = {}
+        for name, xs in (("e2e", self.e2e_latencies),
+                         ("wait", self.queue_waits)):
+            if xs:
+                out[f"{name}_p50"] = float(np.percentile(xs, 50))
+                out[f"{name}_p95"] = float(np.percentile(xs, 95))
+            else:
+                out[f"{name}_p50"] = out[f"{name}_p95"] = 0.0
+        return out
 
 
 class ServingEngine:
@@ -74,7 +118,8 @@ class ServingEngine:
                  settings: Optional[DecodeSettings] = None,
                  strategy: Optional[CacheStrategy] = None,
                  scheduler: Optional[UnmaskScheduler] = None,
-                 continuous: bool = True):
+                 continuous: bool = True,
+                 pool_pages: int = 0, page_size: int = 16):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -83,9 +128,23 @@ class ServingEngine:
         self.strategy = resolve_strategy(cfg, strategy)
         self.scheduler = scheduler    # None -> derived from settings
         self.continuous = continuous
+        self.paged = pool_pages > 0
+        self.page_size = page_size
+        self.pool: Optional[PagePool] = None
+        if self.paged:
+            n_logical_pages(canvas_len, page_size)  # divisibility check
+            self.pool = PagePool(cfg, n_pages=pool_pages,
+                                 page_size=page_size,
+                                 strategy=self.strategy)
         self.queue: deque[Request] = deque()
         self.done: List[Request] = []
         self.stats = EngineStats()
+        self._next_uid = 0            # monotonic: uids never recycle
+        # admission re-scan gate: set by submit(), cleared after each
+        # admission attempt — a stalled queue is not re-scanned (and
+        # admission_stalls not re-counted) every step, only when a
+        # finish/preemption or a new arrival can change the outcome
+        self._admission_dirty = True
         self._sessions: Dict[LaneKey, DecodeSession] = {}
         # offline proxy artefacts are per STRATEGY, shared across lanes
         self._proxies: Dict[CacheStrategy, object] = {}
@@ -93,11 +152,32 @@ class ServingEngine:
     def submit(self, prompt: np.ndarray, gen_len: int,
                settings: Optional[DecodeSettings] = None,
                strategy: Optional[CacheStrategy] = None,
-               scheduler: Optional[UnmaskScheduler] = None) -> int:
-        uid = len(self.done) + len(self.queue)
+               scheduler: Optional[UnmaskScheduler] = None,
+               priority: int = 0) -> int:
+        # monotonic counter — NOT len(done)+len(queue): with requests
+        # in-flight (popped but not done) that length dips and reuses
+        # live uids (regression-tested in tests/test_serving.py).
+        uid = self._next_uid
+        self._next_uid += 1
         req = Request(uid, np.asarray(prompt, np.int32), gen_len,
-                      settings, strategy, scheduler)
+                      settings, strategy, scheduler, priority=priority)
         req.lane = self._lane_of(req)   # freeze vs later default changes
+        self._admission_dirty = True
+        if self.paged:
+            p_len = min(len(req.prompt), self.canvas_len - gen_len)
+            span = p_len + gen_len
+            req.row_len = min(
+                -(-span // self.page_size) * self.page_size,
+                self.canvas_len)
+            strategy_r = req.lane[1]
+            req.n_pages = (self.pool.pages_for(req.row_len)
+                           if strategy_r.uses_cache else 0)
+            if req.n_pages > self.pool.capacity:
+                raise OutOfPages(
+                    f"request uid={uid} needs {req.n_pages} pages; pool "
+                    f"capacity is {self.pool.capacity}")
+        else:
+            req.row_len = self.canvas_len
         self.queue.append(req)
         return uid
 
@@ -142,97 +222,277 @@ class ServingEngine:
                 spa_proxies=self._proxies_for(strategy))
         return self._sessions[lane]
 
-    def _pop_matching(self, lane: LaneKey, k: int) -> List[Request]:
-        """Dequeue up to k requests whose (submit-time) lane matches."""
-        taken, keep = [], deque()
-        while self.queue and len(taken) < k:
-            req = self.queue.popleft()
-            if req.lane == lane:
-                taken.append(req)
-            else:
-                keep.append(req)
-        keep.extend(self.queue)
-        self.queue = keep
-        return taken
+    # ------------------------------------------------------------------
+    # Admission control + preemption (paged mode)
+    # ------------------------------------------------------------------
+
+    def _lane_candidates(self, lane: LaneKey) -> List[Request]:
+        """Lane-matching queued requests in admission order: strict
+        priority first, submission (queue) order within a priority."""
+        matches = [r for r in self.queue if r.lane == lane]
+        return sorted(matches, key=lambda r: -r.priority)
+
+    def _preempt(self, slot: int, victim: Request,
+                 slots: List[Optional[Request]],
+                 sess: DecodeSession) -> None:
+        """Evict a running request: snapshot its canvas + commit ring,
+        release its slot/pages, requeue it at the FRONT of the queue."""
+        snap = sess.snapshot_rows([slot])
+        victim.snapshot = {k: v[0] for k, v in snap.items()}
+        sess.release_rows([slot])
+        self.pool.free(victim.pages or [])
+        victim.pages = None
+        victim.preemptions += 1
+        self.stats.preemptions += 1
+        slots[slot] = None
+        self.queue.appendleft(victim)
+
+    def _admit_one(self, lane: LaneKey, slots: List[Optional[Request]],
+                   sess: Optional[DecodeSession],
+                   protected: Tuple[int, ...] = ()) -> Optional[Request]:
+        """Admit one lane request: it needs a free SLOT and (paged mode)
+        enough free PAGES.  When either is short, strictly
+        lower-priority running requests are preempted — lowest priority
+        first, most recently started first within a priority (the
+        oldest work keeps its progress) — until the candidate fits; if
+        the eligible victims can't cover it, the candidate stalls and
+        smaller/lower-priority candidates get a chance.  Returns the
+        admitted request (popped from the queue, pages allocated) or
+        None.
+
+        ``protected`` slots are admitted-but-not-yet-attached this swap
+        round: the session has no state for them, so they cannot be
+        preemption victims."""
+        stalled = False
+        for req in self._lane_candidates(lane):
+            slot_free = any(s is None for s in slots)
+            if not self.paged:
+                if not slot_free:
+                    return None     # dense mode: no preemption
+                self.queue.remove(req)
+                return req
+            page_short = (max(0, req.n_pages - self.pool.available)
+                          if req.n_pages else 0)
+            if page_short or not slot_free:
+                if sess is None:
+                    stalled = True
+                    continue
+                victims = [(i, r) for i, r in enumerate(slots)
+                           if r is not None and i not in protected
+                           and r.priority < req.priority]
+                victims.sort(key=lambda ir: (
+                    ir[1].priority, -(ir[1].started_at or 0.0)))
+                freeable = sum(len(r.pages or []) for _, r in victims)
+                if (self.pool.available + freeable < req.n_pages
+                        or (not slot_free and not victims)):
+                    stalled = True
+                    continue        # a smaller/later candidate may fit
+                for i, r in victims:
+                    self._preempt(i, r, slots, sess)
+                    if (self.pool.available >= req.n_pages
+                            and any(s is None for s in slots)):
+                        break
+            pages = self.pool.alloc(req.n_pages) if req.n_pages else []
+            assert pages is not None
+            self.queue.remove(req)
+            req.pages = pages
+            return req
+        if stalled:
+            self.stats.admission_stalls += 1
+        return None
+
+    # ------------------------------------------------------------------
+    # Canvas rows
+    # ------------------------------------------------------------------
 
     def _canvas_row(self, req: Request):
-        """(tokens [N], active [N], prompt_len) for one slot."""
+        """(tokens [N], active [N], committed_or_None, prompt_len) for
+        one slot.  A preempted request resumes from its snapshot: the
+        partially committed canvas, active mask and commit ring."""
+        if req.snapshot is not None:
+            snap = req.snapshot
+            req.snapshot = None
+            p_len = min(len(req.prompt), self.canvas_len - req.gen_len)
+            return (snap["tokens"].copy(), snap["active"].copy(),
+                    snap["committed"].copy(), p_len)
         mask_id = self.cfg.mask_id
         row = np.full((self.canvas_len,), mask_id, np.int32)
         p = req.prompt[: self.canvas_len - req.gen_len]
         row[: len(p)] = p
         active = np.zeros((self.canvas_len,), bool)
         active[len(p): len(p) + req.gen_len] = True
-        return row, active, len(p)
+        return row, active, None, len(p)
+
+    def _pt_row(self, req: Request) -> List[int]:
+        return self.pool.page_table_row(req.pages or [], self.canvas_len)
 
     def _harvest(self, req: Request, toks_row: np.ndarray,
                  p_len: int) -> None:
         req.output = toks_row[p_len: p_len + req.gen_len]
         req.completed_at = time.time()
+        self.stats.e2e_latencies.append(
+            req.completed_at - req.submitted_at)
+        if req.started_at is not None:
+            self.stats.queue_waits.append(
+                req.started_at - req.submitted_at)
+        if self.paged and req.pages:
+            self.pool.free(req.pages)
+            req.pages = None
         self.done.append(req)
         self.stats.requests_done += 1
 
     # ------------------------------------------------------------------
 
-    def run(self, max_steps: int = 256) -> EngineStats:
+    def run(self, max_steps: int = 256, on_step=None) -> EngineStats:
+        """Serve the queue to completion.  ``on_step(engine)`` (if given)
+        fires after every engine step — submissions made from it join
+        the live run and are admitted mid-loop (the arrival path that
+        exercises preemption)."""
         t0 = time.time()
         while self.queue:
             lane = self.queue[0].lane
-            self._run_lane(lane, max_steps)
+            self._run_lane(lane, max_steps, on_step)
         self._wall = time.time() - t0
+        if self.paged:
+            self.stats.peak_pool_util = (self.pool.peak_used
+                                         / max(self.pool.capacity, 1))
+            self.stats.steady_pool_util = self.pool.steady_utilization
         return self.stats
 
-    def _run_lane(self, lane: LaneKey, max_steps: int) -> None:
-        batch = self._pop_matching(lane, self.max_batch)
+    def _run_lane(self, lane: LaneKey, max_steps: int,
+                  on_step=None) -> None:
+        sess = self._session_for(lane)
+        strategy = lane[1]
+        slots: List[Optional[Request]] = [None] * self.max_batch
+        batch: List[Request] = []
+        while len(batch) < self.max_batch:
+            req = self._admit_one(lane, slots, sess=None)
+            if req is None:
+                break
+            batch.append(req)
         if not batch:
             return
-        sess = self._session_for(lane)
-        rows = [self._canvas_row(r) for r in batch]
-        tokens = np.stack([r[0] for r in rows])
-        active = np.stack([r[1] for r in rows])
-        slots: List[Optional[Request]] = list(batch)
-        p_lens: List[int] = [r[2] for r in rows]
-        ages = [0] * len(batch)        # max_steps budget is PER REQUEST
-        sess.attach(tokens, active=active)
+        # dense lanes size the canvas to the actual batch (an underfilled
+        # lane never pays full-width placeholder rows); paged lanes keep
+        # max_batch rows so slots freed later (pages permitting) can
+        # admit without a reshape/recompile
+        b = self.max_batch if self.paged else len(batch)
+        slots = [None] * b
+        now = time.time()
+        mask_id = self.cfg.mask_id
+        tokens = np.full((b, self.canvas_len), mask_id, np.int32)
+        active = np.zeros((b, self.canvas_len), bool)
+        committed0 = np.full((b, lane[0].commit_ring), -1, np.int32)
+        kv = np.zeros((b,), np.int32)
+        n_log = (n_logical_pages(self.canvas_len, self.page_size)
+                 if self.paged else 0)
+        pt = np.zeros((b, n_log), np.int32)
+        p_lens = [0] * b
+        ages = [0] * b                 # max_steps budget is PER REQUEST
+        for i, req in enumerate(batch):
+            row, act, com, p_len = self._canvas_row(req)
+            tokens[i], active[i] = row, act
+            if com is not None:
+                committed0[i] = com
+            slots[i] = req
+            p_lens[i] = p_len
+            ages[i] = req.served_steps
+            kv[i] = req.row_len
+            if self.paged and strategy.uses_cache:
+                pt[i] = self._pt_row(req)
+            if req.started_at is None:
+                req.started_at = now
+        if self.paged:
+            arenas = (self.pool.arenas_for(strategy)
+                      if strategy.uses_cache else None)
+            sess.attach(tokens, active=active, kv_len=kv,
+                        arenas=arenas, page_table=pt)
+        else:
+            sess.attach(tokens, active=active)
+        if (committed0 != -1).any():
+            sess.state = sess.state._replace(
+                committed=sess.state.committed.at[:].set(committed0))
 
         while any(s is not None for s in slots):
             info = sess.step()
             self.stats.steps += 1
+            if self.paged:
+                self.pool.note_step()
             self.stats.tokens_committed += int(
                 np.sum(np.asarray(info["n_committed"])))
+            if on_step is not None:
+                on_step(self)
             n_masked = np.asarray(sess.state.n_masked)
             finished = []
             for i, s in enumerate(slots):
                 if s is None:
                     continue
                 ages[i] += 1
+                s.served_steps = ages[i]
                 # a request that exhausts its own step budget is
                 # harvested as-is (same semantics as the old
                 # run-to-max_steps static batch loop)
                 if n_masked[i] <= 0 or ages[i] >= max_steps:
                     finished.append(i)
-            if not finished:
+            if not finished and not (self.continuous
+                                     and self._admission_dirty):
                 continue
-            toks = np.asarray(sess.tokens)
+            if finished:
+                toks = np.asarray(sess.tokens)
+                for i in finished:
+                    self._harvest(slots[i], toks[i], p_lens[i])
+                    slots[i] = None
+                if self.paged:
+                    # zero the finished rows' page-table entries BEFORE
+                    # their freed pages can be re-allocated below — a
+                    # stale entry would let the dead row's next
+                    # write-back corrupt the new owner's pages
+                    sess.release_rows(finished)
             swap_rows, swap_tokens, swap_active = [], [], []
-            for i in finished:
-                self._harvest(slots[i], toks[i], p_lens[i])
-                slots[i] = None
-                nxt = (self._pop_matching(lane, 1)
-                       if self.continuous else [])
-                if nxt:
-                    req = nxt[0]
-                    row, act, p_len = self._canvas_row(req)
-                    slots[i] = req
-                    p_lens[i] = p_len
-                    ages[i] = 0
-                    swap_rows.append(i)
-                    swap_tokens.append(row)
-                    swap_active.append(act)
+            swap_kv, swap_pt, swap_com = [], [], []
+            while self.continuous:
+                # fill every empty slot — and let _admit_one MAKE one by
+                # preempting a lower-priority row when a high-priority
+                # arrival finds the batch/pool full — until admission
+                # stalls or the queue drains
+                req = self._admit_one(lane, slots, sess,
+                                      protected=tuple(swap_rows))
+                if req is None:
+                    break
+                empty = [i for i, s in enumerate(slots) if s is None]
+                i = empty[0]
+                row, act, com, p_len = self._canvas_row(req)
+                slots[i] = req
+                p_lens[i] = p_len
+                ages[i] = req.served_steps
+                if req.started_at is None:
+                    req.started_at = time.time()
+                swap_rows.append(i)
+                swap_tokens.append(row)
+                swap_active.append(act)
+                swap_kv.append(req.row_len)
+                swap_pt.append(self._pt_row(req) if self.paged
+                               and strategy.uses_cache
+                               else [0] * n_log)
+                swap_com.append(com if com is not None else np.full(
+                    (committed0.shape[1],), -1, np.int32))
+            self._admission_dirty = False
             if swap_rows:
-                sess.replace_rows(swap_rows, np.stack(swap_tokens),
-                                  np.stack(swap_active))
+                if self.paged:
+                    sess.replace_rows(
+                        swap_rows, np.stack(swap_tokens),
+                        np.stack(swap_active),
+                        row_kv_len=np.asarray(swap_kv, np.int32),
+                        row_page_table=np.asarray(swap_pt, np.int32),
+                        row_committed=np.stack(swap_com))
+                else:
+                    sess.replace_rows(swap_rows, np.stack(swap_tokens),
+                                      np.stack(swap_active))
                 self.stats.swaps += len(swap_rows)
-            parked = [i for i in finished if i not in swap_rows]
-            if parked:
+            parked = [i for i in finished if i not in swap_rows
+                      and slots[i] is None]
+            if parked and not self.paged:   # paged rows released above
                 sess.deactivate_rows(parked)
+        if (self.paged and strategy.uses_cache and sess.state is not None
+                and isinstance(sess.state.cache, PagedCache)):
+            self.pool.store_arenas(strategy, sess.state.cache.arenas)

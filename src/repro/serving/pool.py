@@ -1,0 +1,147 @@
+"""Block-pool allocator for the paged serving runtime (DESIGN.md §5).
+
+The pool owns ONE device-resident arena of fixed-size pages per cache
+buffer (K / V / H / proxy / int8 scales), plus the host-side free-list
+that hands pages to requests.  A "page" is a composite unit: physical
+page id ``p`` addresses slot ``p`` in EVERY buffer arena of a cache
+signature, so allocation accounting is a single integer per request
+(``row_len // page_size``) regardless of how many buffers the strategy
+keeps.
+
+Invariants:
+  * physical page 0 is the reserved ZERO page — never allocated, never
+    written (paged scatters drop writes to it); every logical page past
+    a request's ``kv_len`` aliases it, which is what lets heterogeneous
+    ``gen_len`` requests share a lane without padding to the lane max.
+  * pages are exclusive: a physical page belongs to at most one request
+    at a time, so concurrent batch rows never write the same page.
+  * arenas are per cache SIGNATURE (identifier width + incremental
+    buffer + quantization): requests whose strategies share a signature
+    share the arena; page ACCOUNTING is global across signatures either
+    way, so admission always respects the configured budget.
+
+JAX arrays are immutable, so the "arena" the pool hands out is a
+reference that the active ``DecodeSession`` threads through its jitted
+steps; :meth:`store_arenas` takes the latest value back when a lane
+finishes so the next lane reuses the same allocation instead of growing
+a second copy.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
+from repro.core.strategy import CacheStrategy, resolve_strategy
+
+
+def cache_signature(cfg: ModelConfig,
+                    strategy: CacheStrategy) -> Tuple[int, bool, bool, str]:
+    """Arena-shape key: strategies agreeing on this share one arena.
+    ``cache_dtype`` is pool-wide today, but it shapes the buffer set
+    (int8 scales) so it belongs to the key."""
+    return (strategy.proxy_dim(cfg), bool(strategy.incremental),
+            bool(strategy.uses_cache), cfg.cache_dtype)
+
+
+class OutOfPages(RuntimeError):
+    """A single request needs more pages than the whole pool owns."""
+
+
+class PagePool:
+    """Free-list page allocator + lazily materialized device arenas."""
+
+    def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int,
+                 strategy: Optional[CacheStrategy] = None):
+        if n_pages < 2:
+            raise ValueError("pool needs >= 2 pages (page 0 is reserved)")
+        self.cfg = cfg
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.default_strategy = resolve_strategy(cfg, strategy)
+        # page 0 is the zero page; 1..n_pages-1 are allocatable
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._arenas: Dict[Tuple, Dict] = {}
+        self.peak_used = 0
+        self._util_samples: List[float] = []
+
+    # ---- accounting --------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.capacity - self.available
+
+    @property
+    def utilization(self) -> float:
+        return self.used / max(self.capacity, 1)
+
+    def pages_for(self, row_len: int) -> int:
+        """Composite pages covering a page-aligned row span."""
+        return -(-row_len // self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate n pages (all-or-nothing). None when short."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.used)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert 0 < p < self.n_pages and p not in self._free, p
+            self._free.append(p)
+
+    def note_step(self) -> None:
+        """Sample utilization once per engine step (steady-state stat)."""
+        self._util_samples.append(self.utilization)
+
+    def reset_telemetry(self) -> None:
+        """Zero peak/steady tracking (e.g. after a warm-up run) without
+        touching allocations or arenas."""
+        self.peak_used = self.used
+        self._util_samples.clear()
+
+    @property
+    def steady_utilization(self) -> float:
+        if not self._util_samples:
+            return 0.0
+        return sum(self._util_samples) / len(self._util_samples)
+
+    # ---- arenas ------------------------------------------------------
+
+    def arenas_for(self, strategy: Optional[CacheStrategy] = None):
+        """The device arenas for the strategy's cache signature
+        (materialized on first use; {} for cache-less strategies)."""
+        strategy = resolve_strategy(self.cfg, strategy
+                                    if strategy is not None
+                                    else self.default_strategy)
+        if not strategy.uses_cache:
+            return {}
+        sig = cache_signature(self.cfg, strategy)
+        if sig not in self._arenas:
+            self._arenas[sig] = cache_lib.init_paged_arenas(
+                self.cfg, self.n_pages, self.page_size, strategy)
+        return self._arenas[sig]
+
+    def store_arenas(self, strategy: CacheStrategy, arenas) -> None:
+        """Adopt the latest arena arrays back from a finished lane so
+        the next lane with the same signature reuses the allocation."""
+        if arenas:
+            self._arenas[cache_signature(self.cfg, strategy)] = arenas
+
+    def page_table_row(self, pages: List[int], canvas_len: int
+                       ) -> List[int]:
+        """One request's page-table row: its pages in logical order,
+        zero-page entries for the tail past its row span."""
+        n_log = cache_lib.n_logical_pages(canvas_len, self.page_size)
+        assert len(pages) <= n_log, (len(pages), n_log)
+        return list(pages) + [0] * (n_log - len(pages))

@@ -71,3 +71,156 @@ def test_incremental_with_adaptive_schedule(small):
         incremental_ident=True))
     toks, info = decode(params, cfg, prompt, gen_len=6)
     assert int((toks == cfg.mask_id).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_uid_monotonic_with_inflight_requests(small):
+    """Regression: uids used to derive from len(done)+len(queue), so a
+    request popped from the queue but not yet done (in-flight) made the
+    next submit REUSE a live uid.  The counter must be monotonic."""
+    cfg, params = small
+    engine = ServingEngine(cfg, params, max_batch=2, canvas_len=24)
+    u0 = engine.submit(np.arange(6, dtype=np.int32), gen_len=4)
+    u1 = engine.submit(np.arange(6, dtype=np.int32), gen_len=4)
+    inflight = engine.queue.popleft()      # simulate an in-flight pop
+    u2 = engine.submit(np.arange(6, dtype=np.int32), gen_len=4)
+    assert len({u0, u1, u2}) == 3
+    assert u2 > u1 > u0
+    assert inflight.uid == u0
+
+
+def test_engine_latency_percentiles(small):
+    cfg, params = small
+    engine = ServingEngine(cfg, params, max_batch=2, canvas_len=24)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        engine.submit(rng.integers(0, cfg.vocab_size - 1, 8)
+                      .astype(np.int32), gen_len=4)
+    stats = engine.run()
+    pct = stats.percentiles()
+    assert set(pct) == {"e2e_p50", "e2e_p95", "wait_p50", "wait_p95"}
+    assert pct["e2e_p95"] >= pct["e2e_p50"] > 0.0
+    assert pct["e2e_p50"] >= pct["wait_p50"] >= 0.0
+    assert len(stats.e2e_latencies) == 3
+
+
+# ---------------------------------------------------------------------------
+# Paged runtime (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+PAGE, CANVAS = 4, 16
+
+
+def _paged_engine(cfg, params, pool_pages, max_batch=2, **kw):
+    from repro.core.strategy import SPACache
+    return ServingEngine(
+        cfg, params, max_batch=max_batch, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          **kw.pop("strategy_kw", {})),
+        pool_pages=pool_pages, page_size=PAGE, **kw)
+
+
+def _outputs(engine):
+    return {r.uid: np.asarray(r.output) for r in engine.done}
+
+
+def test_paged_engine_matches_dense_engine(tiny_cfg, tiny_params):
+    """Acceptance: the paged engine serves full-length requests with
+    byte-identical outputs to the dense-slab engine."""
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+               .astype(np.int32) for _ in range(4)]
+
+    def serve(pool_pages):
+        eng = _paged_engine(tiny_cfg, tiny_params, pool_pages)
+        for p in prompts:
+            eng.submit(p, gen_len=CANVAS - 8)   # row_len == canvas
+        eng.run()
+        return _outputs(eng)
+
+    dense, paged = serve(0), serve(1 + 2 * (CANVAS // PAGE))
+    assert set(dense) == set(paged)
+    for uid in dense:
+        np.testing.assert_array_equal(dense[uid], paged[uid])
+
+
+def test_paged_mixed_gen_len_matches_alone(tiny_cfg, tiny_params):
+    """Heterogeneous gen_len requests share a lane without padding to
+    the lane max; each output is byte-identical to serving it alone."""
+    rng = np.random.default_rng(2)
+    reqs = [(rng.integers(0, tiny_cfg.vocab_size - 1, 4)
+             .astype(np.int32), g) for g in (4, 8, 12, 4)]
+
+    def serve(batch):
+        eng = _paged_engine(tiny_cfg, tiny_params, 1 + 3 * (CANVAS // PAGE))
+        uids = [eng.submit(p, gen_len=g) for p, g in batch]
+        eng.run()
+        outs = _outputs(eng)
+        return [outs[u] for u in uids]
+
+    together = serve(reqs)
+    for i, (p, g) in enumerate(reqs):
+        alone = serve([(p, g)])[0]
+        np.testing.assert_array_equal(together[i], alone)
+
+
+def test_oversubscribed_pool_completes(tiny_cfg, tiny_params):
+    """Acceptance: aggregate cache footprint >= 2x the pool completes
+    via admission control (requests wait for pages, never fail)."""
+    rng = np.random.default_rng(3)
+    n_log = CANVAS // PAGE
+    eng = _paged_engine(tiny_cfg, tiny_params, 1 + 2 * n_log)
+    demand = 0
+    for _ in range(6):
+        eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+                   .astype(np.int32), gen_len=CANVAS - 8)
+        demand += n_log
+    assert demand >= 2 * eng.pool.capacity   # >= 2x oversubscription
+    stats = eng.run()
+    assert stats.requests_done == 6
+    assert all((r.output != tiny_cfg.mask_id).all() for r in eng.done)
+    assert stats.peak_pool_util <= 1.0
+    assert stats.steady_pool_util > 0.0
+    assert eng.pool.available == eng.pool.capacity  # all pages returned
+
+
+def test_preemption_engine_byte_identical(tiny_cfg, tiny_params):
+    """A high-priority arrival preempts the lowest-priority running
+    request (pages released, request requeued) and the preempted request
+    still decodes byte-identically: with refresh_interval=1 the cache is
+    canvas-Markovian, so the resume re-prefill IS the refresh the
+    never-preempted twin performs anyway."""
+    rng = np.random.default_rng(4)
+    smalls = [rng.integers(0, tiny_cfg.vocab_size - 1, 4)
+              .astype(np.int32) for _ in range(2)]
+    big = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+
+    def serve(pool_pages, arrival_step, max_batch=2):
+        eng = _paged_engine(tiny_cfg, tiny_params, pool_pages,
+                            max_batch=max_batch,
+                            strategy_kw=dict(refresh_interval=1))
+        uids = [eng.submit(p, gen_len=4) for p in smalls]   # 2 pages each
+        fired = {"done": False}
+
+        def on_step(e):
+            if not fired["done"] and e.stats.steps >= arrival_step:
+                fired["done"] = True
+                uids.append(e.submit(big, gen_len=8, priority=5))
+
+        eng.run(on_step=on_step)
+        return {r.uid: np.asarray(r.output) for r in eng.done}, eng
+
+    # tight pool: the big arrival (4 pages) must preempt the smalls
+    tight, et = serve(1 + 4, arrival_step=2)
+    assert et.stats.preemptions > 0
+    assert any(r.preemptions > 0 for r in et.done)
+    # roomy twin: pages AND slots to spare, nothing preempted
+    roomy, er = serve(1 + 3 * (CANVAS // PAGE), arrival_step=2,
+                      max_batch=3)
+    assert er.stats.preemptions == 0
+    assert set(tight) == set(roomy)
+    for uid in tight:
+        np.testing.assert_array_equal(tight[uid], roomy[uid])
