@@ -1,20 +1,29 @@
-"""Serving-runtime benchmark: paged cache pool vs dense slabs.
+"""Serving-runtime benchmark: paged cache pool vs dense slabs, and the
+shared-prefix radix cache vs cold prefills.
 
-Serves one mixed-``gen_len`` workload through the ``ServingEngine``
-twice over: once with the legacy dense per-lane cache slabs, then with
-the paged pool (DESIGN.md §5) at several oversubscription ratios
-(aggregate page demand / pool capacity).  At 1x the pool fits the whole
-workload — throughput should be within ~10% of the dense slab (the paged
-step adds one page-gather + page-scatter per step).  At 2-3x admission
-control + preemption carry the same workload through a pool a fraction
-of the size.
+Part 1 serves one mixed-``gen_len`` workload through the
+``ServingEngine`` twice over: once with the legacy dense per-lane cache
+slabs, then with the paged pool (DESIGN.md §5) at several
+oversubscription ratios (aggregate page demand / pool capacity).  At 1x
+the pool fits the whole workload — throughput should be within ~10% of
+the dense slab (the paged step adds one page-gather + page-scatter per
+step).  At 2-3x admission control + preemption carry the same workload
+through a pool a fraction of the size.
 
-Emits ``BENCH_serving.json`` next to the repo root:
+Part 2 serves a shared-system-prompt workload (every request opens with
+the same long system prompt; questions repeat, as retries/samples do)
+with the prefix cache ON vs OFF (DESIGN.md §6): full hits skip the
+prefill forward entirely, partial hits recompute only the unmatched
+suffix, and the recorded hit rate / prefill-tokens-saved / speedup land
+in ``BENCH_serving.json``:
 
     {"config": {...},
-     "dense": {"tok_s": ..., "p95_e2e_s": ..., ...},
-     "paged": {"1x": {...}, "2x": {...}, "3x": {...}},
-     "paged_over_dense_tok_s_at_1x": 0.97}
+     "dense": {...}, "paged": {"1x": {...}, ...},
+     "paged_over_dense_tok_s_at_1x": 0.97,
+     "prefix": {"on": {...}, "off": {...},
+                "hit_rate": 0.88, "full_hit_rate": 0.5,
+                "prefill_tokens_saved": 264,
+                "prefix_over_cold_tok_s": 1.6}}
 
 Wired into ``benchmarks/run.py --smoke`` (CI bench-smoke job).
 """
@@ -119,6 +128,64 @@ def _serve(cfg, params, reqs, pool_pages, mid_run_arrivals=False) -> dict:
     return out
 
 
+def _prefix_workload(cfg, n_requests: int):
+    """Shared-system-prompt traffic: one 20-token system prompt, a few
+    distinct 4-token questions, each question asked more than once
+    (retries / n>1 sampling).  All requests share one canvas layout, so
+    repeats are FULL index hits and first-of-a-question requests
+    partial-hit the system-prompt pages."""
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab_size - 1, 20).astype(np.int32)
+    questions = [rng.integers(0, cfg.vocab_size - 1, 4).astype(np.int32)
+                 for _ in range(max(2, n_requests // 2))]
+    reqs = []
+    for i in range(n_requests):
+        q = questions[i % len(questions)]
+        reqs.append((np.concatenate([system, q]), 6))
+    return reqs
+
+
+def _serve_prefix(cfg, params, reqs, prefix_cache: bool) -> dict:
+    from repro.core.strategy import SPACache
+    from repro.serving.engine import ServingEngine
+    demand = sum(-(-min(len(p) + g, CANVAS) // PAGE) for p, g in reqs)
+    eng = ServingEngine(
+        cfg, params, max_batch=4, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3),
+        pool_pages=demand + 2 * (CANVAS // PAGE) + 1, page_size=PAGE,
+        prefix_cache=prefix_cache)
+    # one full UNTIMED pass first: it compiles every executable the
+    # measured pass will use (lane step, cold prefill shapes, the
+    # partial-prefill suffix function, COW/publication page copies) —
+    # the timed pass then measures warm serving throughput.  The index
+    # is reset in between so the measured hit pattern matches a fresh
+    # engine rather than an all-full-hit replay.
+    for prompt, gen in reqs:
+        eng.submit(prompt, gen)
+    eng.run()
+    eng.done.clear()
+    eng.stats = type(eng.stats)()
+    eng.pool.reset_telemetry()
+    if eng.prefix is not None:
+        eng.drop_prefix_cache()
+    t0 = time.time()
+    for prompt, gen in reqs:
+        eng.submit(prompt, gen)
+    stats = eng.run()
+    wall = time.time() - t0
+    assert stats.requests_done == len(reqs)
+    out = {
+        "wall_s": round(wall, 4),
+        "tok_s": round(stats.tps(wall), 2),
+        "steps": stats.steps,
+        "prefix_hits": stats.prefix_hits,
+        "prefix_full_hits": stats.prefix_full_hits,
+        "prefill_tokens_saved": stats.prefix_tokens_saved,
+        "pages_published": stats.prefix_published,
+    }
+    return out
+
+
 def run(quick: bool = False) -> dict:
     cfg, params = _build()
     n_requests = 6 if quick else 16
@@ -144,13 +211,28 @@ def run(quick: bool = False) -> dict:
         results["dense"]["tok_s"], 1e-9)
     results["paged_over_dense_tok_s_at_1x"] = round(r1, 3)
 
+    # Part 2: shared-prefix radix cache vs cold prefills (DESIGN.md §6)
+    preqs = _prefix_workload(cfg, 8 if quick else 16)
+    on = _serve_prefix(cfg, params, preqs, True)
+    off = _serve_prefix(cfg, params, preqs, False)
+    speed = on["tok_s"] / max(off["tok_s"], 1e-9)
+    results["prefix"] = {
+        "on": on, "off": off,
+        "requests": len(preqs),
+        "hit_rate": round(on["prefix_hits"] / len(preqs), 3),
+        "full_hit_rate": round(on["prefix_full_hits"] / len(preqs), 3),
+        "prefill_tokens_saved": on["prefill_tokens_saved"],
+        "prefix_over_cold_tok_s": round(speed, 3),
+    }
+
     out_path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serving.json")
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
     print(json.dumps(results, indent=2))
     print(f"[BENCH_serving.json written; paged/dense throughput at 1x = "
-          f"{r1:.2f}]")
+          f"{r1:.2f}; prefix-cache speedup = {speed:.2f} at "
+          f"{results['prefix']['hit_rate']:.0%} hit rate]")
     return results
 
 

@@ -160,6 +160,30 @@ def init_paged_arenas(cfg: ModelConfig, n_pages: int, page_size: int,
     return out
 
 
+def copy_arena_pages(arenas: Dict[str, Dict[str, jax.Array]],
+                     src: "list[int]", dst: "list[int]"
+                     ) -> Dict[str, Dict[str, jax.Array]]:
+    """Copy whole physical pages ``src[i] -> dst[i]`` in every buffer of
+    every arena (the copy-on-write and prefix-publication primitive,
+    DESIGN.md §6).  Pure gather+scatter on the page axis; the caller
+    patches page tables separately.
+
+    The index lists are padded up to a power-of-two bucket with
+    ``0 -> 0`` entries (re-writing the reserved zero page with its own
+    zeros is a no-op), so every copy of a similar size shares one
+    compiled executable instead of recompiling per page count."""
+    if not src:
+        return arenas
+    assert len(src) == len(dst)
+    bucket = 1
+    while bucket < len(src):
+        bucket *= 2
+    pad = bucket - len(src)
+    s = jnp.asarray(list(src) + [0] * pad, jnp.int32)
+    d = jnp.asarray(list(dst) + [0] * pad, jnp.int32)
+    return jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), arenas)
+
+
 def paged_step_view(pc: PagedCache,
                     backend=None) -> Dict[str, Dict[str, jax.Array]]:
     """Per-step compute view of a paged cache: every buffer except the

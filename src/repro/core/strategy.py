@@ -98,6 +98,16 @@ class CacheStrategy:
         from repro.kernels.backend import resolve_backend
         return dataclasses.replace(self, backend=resolve_backend(backend))
 
+    def prefix_key(self) -> Any:
+        """Hashable identity of this strategy's PREFILL states, used as
+        part of the shared-prefix index root key (DESIGN.md §6): two
+        strategies with the same key produce byte-identical prefill
+        caches (same buffers, same identifier projection), so their
+        requests may share published pages.  Prefill never runs through
+        the hot-path kernels, so the ``backend`` is deliberately NOT
+        part of the key — an xla lane and a pallas lane share entries."""
+        return self.spec
+
     # ---- budget ----
 
     def k_schedule(self, cfg: ModelConfig, seq_len: int) -> List[int]:

@@ -36,7 +36,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTENTION_KINDS, ModelConfig
 from repro.core import cache as cache_lib
 from repro.core import selection, spa_layer
 from repro.core.cache import CachePolicy
@@ -122,6 +122,124 @@ def prefill(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
                 out["proxy_now"] = out["proxy"]
         cache[kind] = out
     return h, cache
+
+
+def partial_prefill_supported(cfg: ModelConfig) -> bool:
+    """Whether ``prefill_partial`` can reproduce cold-prefill numerics
+    for this architecture: every layer must be a cache-carrying
+    attention kind (a recurrent block's suffix states depend on prefix
+    states that carry no cache) and window-free (the cold prefill's
+    banded kv scan visits a different kv-block range than the gathered
+    path, so low bits could differ).  Architectures outside this set
+    still get FULL prefix hits (no forward at all) — only partial hits
+    degrade to misses."""
+    from repro.models.transformer import layer_window
+    kinds = set(cfg.layer_kinds)
+    return (kinds <= set(ATTENTION_KINDS)
+            and all(layer_window(cfg, k) == 0 for k in kinds))
+
+
+def prefill_partial(params: Params, cfg: ModelConfig,
+                    inputs: Dict[str, jax.Array],
+                    kv_view: Dict[str, Dict[str, jax.Array]],
+                    suffix_start: int,
+                    kv_len: Optional[jax.Array] = None,
+                    spa_proxies=None,
+                    strategy: Optional[CacheStrategy] = None
+                    ) -> Dict[str, Dict[str, jax.Array]]:
+    """Prefill ONLY canvas positions >= ``suffix_start``, reading the
+    already-cached K/V for [0, suffix_start) from ``kv_view``
+    ({kind: {"k"/"v": [Lk, B, N, ...]}}, a dense gather of the shared
+    prefix pages — DESIGN.md §6).
+
+    Exactness: every per-row op of the cold prefill (embedding, norms,
+    QKV, FFN) is row-local, and the flash-attention kv scan visits the
+    same kv blocks in the same order whether the query set is the full
+    canvas or a slice — so given exact prefix K/V (same prompt, same
+    row span) the suffix states match the cold prefill's suffix rows up
+    to XLA op-scheduling float error (~1e-6: the cold path compiles a
+    layer scan, this path an unrolled loop, and fusion grouping
+    differs; asserted per strategy in ``tests/test_prefix.py``).  This
+    wobble only ever reaches decode through PARTIAL prefix hits, whose
+    matched pages already carry the (much larger) cross-suffix
+    staleness the strategy's drift identification manages — exact
+    rematches are FULL hits, a pure page copy with no forward at all,
+    and those are byte-identical end-to-end (DESIGN.md §6).
+
+    Returns the same {kind: {name: [Lk, B, N, ...]}} layout as
+    :func:`prefill`, with zeros at positions < suffix_start — callers
+    scatter it through a write page table whose prefix entries alias
+    the zero page, so the zeros never land anywhere.
+
+    Requires :func:`partial_prefill_supported` and a non-quantized
+    cache (int8 prefix pages dequantize, breaking bit-exactness).
+    """
+    from repro.models.attention import flash_attention
+    from repro.distributed.hints import shard_hint
+    strategy = resolve_strategy(cfg, strategy)
+    policy = CachePolicy.from_config(cfg)
+    assert partial_prefill_supported(cfg), cfg.layer_kinds
+    assert not policy.quantized, "partial prefill needs a float cache"
+    assert strategy.uses_cache
+    from repro.models import common
+
+    h_full = transformer.embed_inputs(params, cfg, inputs)
+    b, n = h_full.shape[0], h_full.shape[1]
+    s0 = int(suffix_start)
+    assert 0 < s0 < n, (s0, n)
+    h = h_full[:, s0:]
+    positions = jnp.broadcast_to(jnp.arange(s0, n, dtype=jnp.int32)[None],
+                                 (b, n - s0))
+    cd = policy.compute_dtype
+    per_kind: Dict[str, Dict[str, list]] = {}
+    for l in range(cfg.n_layers):
+        kind = cfg.kind_of_layer(l)
+        ki = cfg.kind_index(l)
+        bp = jax.tree.map(lambda t: t[ki], params["blocks"][kind])
+        proxy_mat = (spa_proxies[kind][ki]
+                     if strategy.uses_proxy_mat and spa_proxies else None)
+        x = common.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        q, k_new, v_new = transformer.qkv_project(bp, x, cfg, positions)
+        k_all = kv_view[kind]["k"][ki].astype(cd).at[:, s0:].set(
+            k_new.astype(cd))
+        v_all = kv_view[kind]["v"][ki].astype(cd).at[:, s0:].set(
+            v_new.astype(cd))
+        attn = flash_attention(q, k_all, v_all, q_positions=positions,
+                               soft_cap=cfg.attn_softcap, kv_len=kv_len)
+        attn_out = shard_hint(
+            attn.reshape(b, n - s0, cfg.q_dim) @ bp["wo"],
+            "batch", "keep", None)
+        if cfg.post_norms:
+            attn_out = common.rms_norm(attn_out, bp["norm_post_attn"],
+                                       cfg.norm_eps)
+        h_mid = h + attn_out
+        y = common.rms_norm(h_mid, bp["norm2"], cfg.norm_eps)
+        ffn_out, _ = transformer.apply_ffn_or_moe(bp, y, cfg)
+        if cfg.post_norms:
+            ffn_out = common.rms_norm(ffn_out, bp["norm_post_ffn"],
+                                      cfg.norm_eps)
+        h_out = h_mid + ffn_out
+        entries = {"k": k_new, "v": v_new, "h": h_out}
+        prox = strategy.prefill_proxy(bp, proxy_mat, h, x, attn_out, h_out)
+        if prox is not None:
+            entries["proxy"] = prox
+        slot = per_kind.setdefault(kind, {})
+        for name, val in entries.items():
+            slot.setdefault(name, []).append(val)
+        h = h_out
+
+    cache: Dict[str, Dict[str, jax.Array]] = {}
+    for kind, bufs in per_kind.items():
+        out: Dict[str, jax.Array] = {}
+        for name, vals in bufs.items():
+            stacked = jnp.stack(vals).astype(cd)        # [Lk, B, S, ...]
+            full = jnp.zeros(stacked.shape[:2] + (n,) + stacked.shape[3:],
+                             cd)
+            out[name] = full.at[:, :, s0:].set(stacked)
+        if "proxy" in out and strategy.incremental:
+            out["proxy_now"] = out["proxy"]
+        cache[kind] = out
+    return cache
 
 
 # ---------------------------------------------------------------------------

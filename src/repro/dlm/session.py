@@ -64,6 +64,26 @@ Params = Dict[str, Any]
 
 
 @dataclasses.dataclass(frozen=True)
+class SharedPrefix:
+    """One batch row's shared-prefix attachment (DESIGN.md §6).
+
+    ``pages``: physical pages (from the prefix index) mapped read-only
+    at the row's logical pages [0, len(pages)); ``reserve``: the row's
+    own private pages of the same count.  The session runs its prefill
+    reads (and the partial prefill of the unmatched suffix) against
+    ``pages``, then copies them into ``reserve`` and patches the page
+    table immediately before its first cache write — commits never
+    mutate another reader's view (copy-on-write, tests/test_prefix.py).
+    """
+    row: int
+    pages: Tuple[int, ...]
+    reserve: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.pages) == len(self.reserve)
+
+
+@dataclasses.dataclass(frozen=True)
 class StepEvent:
     """One refinement step's outcome, for the streaming iterator."""
     step: int
@@ -104,6 +124,13 @@ class DecodeSession:
             spa_proxies=spa_proxies, strategy=self.strategy,
             scheduler=self.scheduler))
         self._loop_fns: Dict[bool, Any] = {}   # run_compiled, by can_refresh
+        self._partial_fns: Dict[int, Any] = {}  # prefill_partial, by s0
+        # shared-prefix rows awaiting copy-on-write (DESIGN.md §6):
+        # {batch row: SharedPrefix}; resolved before the first write
+        self._shared_pending: Dict[int, SharedPrefix] = {}
+        # called with the resolved specs right after a COW copy (the
+        # engine releases its read holds on the shared pages here)
+        self.cow_callback = None
         self.state: Optional[DecodeState] = None
         self.steps_taken = 0
         self.refresh_count = 0
@@ -144,7 +171,9 @@ class DecodeSession:
                rng: Optional[jax.Array] = None,
                kv_len: Optional[jax.Array] = None,
                arenas=None,
-               page_table: Optional[jax.Array] = None) -> DecodeState:
+               page_table: Optional[jax.Array] = None,
+               shared: Optional[Sequence[SharedPrefix]] = None
+               ) -> DecodeState:
         """Adopt an externally built canvas (serving engine path).
 
         Paged mode (DESIGN.md §5): pass pooled ``arenas``
@@ -153,7 +182,15 @@ class DecodeSession:
         arenas and the session's cache state becomes a
         :class:`~repro.core.cache.PagedCache`.  ``kv_len`` [B] marks each
         row's valid canvas length (shorter rows only own the pages that
-        cover them; the tail aliases the zero page)."""
+        cover them; the tail aliases the zero page).
+
+        ``shared`` (DESIGN.md §6): per-row shared-prefix attachments.
+        A shared row's page-table prefix points at read-only pages from
+        the prefix index; its prefill forward runs only over the
+        unmatched suffix (``decoding.prefill_partial``) — or not at all
+        when the whole row span is covered — and the shared pages are
+        copied into the row's ``reserve`` pages right before the first
+        cache write (copy-on-write)."""
         tokens = jnp.asarray(tokens)
         b = tokens.shape[0]
         if active is None:
@@ -167,13 +204,24 @@ class DecodeSession:
         extras = dict(extras) if extras else {}
         if kv_len is not None:
             kv_len = jnp.asarray(kv_len, jnp.int32)
-        cache = (self._build_cache(tokens, extras, kv_len)
-                 if use_cache else {})
-        if arenas is not None and cache:
+        self._shared_pending = {}
+        if (shared and use_cache and self.strategy.uses_cache
+                and arenas is not None):
             assert page_table is not None, "paged attach needs page_table"
-            cache = cache_lib.repage(arenas,
-                                     jnp.asarray(page_table, jnp.int32),
-                                     cache, self.strategy.backend)
+            pt = jnp.asarray(page_table, jnp.int32)
+            arenas = self._paged_fill(arenas, tokens, extras, kv_len,
+                                      pt, shared)
+            cache = cache_lib.PagedCache(arenas, pt)
+            self._shared_pending = {s.row: s for s in shared}
+        else:
+            cache = (self._build_cache(tokens, extras, kv_len)
+                     if use_cache else {})
+            if arenas is not None and cache:
+                assert page_table is not None, \
+                    "paged attach needs page_table"
+                cache = cache_lib.repage(
+                    arenas, jnp.asarray(page_table, jnp.int32),
+                    cache, self.strategy.backend)
         ring = self.settings.commit_ring
         self.state = DecodeState(
             tokens=tokens, cache=cache, step=jnp.zeros((), jnp.int32),
@@ -201,6 +249,112 @@ class DecodeSession:
                                            kv_len=kv_len)
 
     # ------------------------------------------------------------------
+    # Shared-prefix attach + copy-on-write (DESIGN.md §6)
+    # ------------------------------------------------------------------
+
+    def _partial_fn(self, s0: int):
+        """Jitted suffix-only prefill, one executable per suffix start
+        (the engine's hit rows repeat the same few prompt layouts, so
+        the compile amortizes like the lane step does)."""
+        fn = self._partial_fns.get(s0)
+        if fn is None:
+            def run(inputs, kv_view, kv_len):
+                return decoding.prefill_partial(
+                    self.params, self.cfg, inputs, kv_view, s0,
+                    kv_len=kv_len, spa_proxies=self.spa_proxies,
+                    strategy=self.strategy)
+            fn = jax.jit(run)
+            self._partial_fns[s0] = fn
+        return fn
+
+    def _paged_fill(self, arenas, tokens, extras, kv_len, read_pt,
+                    shared: Sequence[SharedPrefix]):
+        """Prefill a (sub-)batch into pooled arenas, honouring shared
+        prefixes: rows without a spec get the normal full prefill, rows
+        with one run only the unmatched suffix (grouped by suffix
+        start, one jitted partial prefill per group), and fully covered
+        rows run nothing.  All scatters go through a WRITE page table
+        whose shared prefix entries alias the zero page, so the shared
+        pages are never written here — ``shared[i].row`` indexes into
+        THIS sub-batch."""
+        m, n = tokens.shape
+        n_log = read_pt.shape[1]
+        page = n // n_log
+        spec_by_row = {s.row: s for s in shared}
+        wt = np.asarray(read_pt).copy()
+        for s in spec_by_row.values():
+            wt[s.row, :len(s.pages)] = 0
+        kv_np = (np.asarray(kv_len) if kv_len is not None
+                 else np.full((m,), n, np.int32))
+        groups: Dict[int, list] = {}
+        for r in range(m):
+            s = spec_by_row.get(r)
+            s0 = len(s.pages) * page if s else 0
+            if s is not None and s0 >= int(kv_np[r]):
+                continue                     # full hit: states are there
+            groups.setdefault(s0, []).append(r)
+        from repro.kernels.backend import XLA_BACKEND
+        tokens = jnp.asarray(tokens)
+        for s0, rows in sorted(groups.items()):
+            idx = jnp.asarray(rows, jnp.int32)
+            sub_tokens = tokens[idx]
+            sub_extras = {k: jnp.asarray(v)[idx]
+                          for k, v in (extras or {}).items()}
+            sub_kv = kv_len[idx] if kv_len is not None else None
+            sub_wt = jnp.asarray(wt[rows], jnp.int32)
+            if s0 == 0:
+                fresh = self._build_cache(sub_tokens, sub_extras, sub_kv)
+            else:
+                sub_rt = jnp.asarray(read_pt)[idx]
+                kv_view = {
+                    kind: {nm: XLA_BACKEND.gather_pages(bufs[nm], sub_rt)
+                           for nm in ("k", "v")}
+                    for kind, bufs in arenas.items()}
+                inputs = dict(sub_extras)
+                inputs["tokens"] = sub_tokens
+                fresh = self._partial_fn(s0)(inputs, kv_view, sub_kv)
+            arenas = cache_lib.paged_from_dense(arenas, sub_wt, fresh,
+                                                self.strategy.backend)
+        return arenas
+
+    def copy_cache_pages(self, src: Sequence[int],
+                         dst: Sequence[int]) -> None:
+        """Copy physical pages src[i] -> dst[i] in this session's paged
+        cache (the engine's prefix-publication primitive: snapshot a
+        row's prefill-time pages into index-owned pages BEFORE the first
+        decode write evolves them)."""
+        cache = self.state.cache
+        assert isinstance(cache, PagedCache), "copy needs a paged cache"
+        arenas = cache_lib.copy_arena_pages(cache.arenas, list(src),
+                                            list(dst))
+        self.state = self.state._replace(
+            cache=PagedCache(arenas, cache.page_table))
+
+    def _cow_if_shared(self) -> None:
+        """Copy-on-write barrier: immediately before the first cache
+        write (first step, compiled-loop entry, or an explicit refresh),
+        copy every pending row's shared pages into its private reserve
+        and patch the page table.  After this the shared pages are
+        untouched forever — the other readers' (and the index's) view
+        never changes."""
+        if not self._shared_pending:
+            return
+        specs = list(self._shared_pending.values())
+        self._shared_pending = {}
+        cache = self.state.cache
+        assert isinstance(cache, PagedCache), "shared rows need paging"
+        src = [p for s in specs for p in s.pages]
+        dst = [p for s in specs for p in s.reserve]
+        arenas = cache_lib.copy_arena_pages(cache.arenas, src, dst)
+        pt = cache.page_table
+        for s in specs:
+            pt = pt.at[s.row, :len(s.reserve)].set(
+                jnp.asarray(s.reserve, jnp.int32))
+        self.state = self.state._replace(cache=PagedCache(arenas, pt))
+        if self.cow_callback is not None:
+            self.cow_callback(specs)
+
+    # ------------------------------------------------------------------
     # Stepping
     # ------------------------------------------------------------------
 
@@ -213,6 +367,7 @@ class DecodeSession:
         if (not self.strategy.uses_cache or self.state is None
                 or not self.state.cache):
             return
+        self._cow_if_shared()     # the rebuild scatters into every page
         cache = self._build_cache(self.state.tokens, self.state.extras,
                                   self.state.kv_len)
         old = self.state.cache
@@ -233,6 +388,7 @@ class DecodeSession:
     def step(self) -> Dict[str, jax.Array]:
         """One jitted refinement step (auto-refresh applied first)."""
         assert self.state is not None, "call prefill()/attach() first"
+        self._cow_if_shared()     # first write: un-share prefix pages
         self._last_step_refreshed = self._maybe_refresh()
         self.state, info = self._step_fn(self.state)
         self.steps_taken += 1
@@ -282,6 +438,7 @@ class DecodeSession:
         argument: changing it never retraces.
         """
         assert self.state is not None, "call prefill()/attach() first"
+        self._cow_if_shared()     # the loop body writes every page
         if max_steps is None:
             max_steps = int(jax.device_get(
                 jnp.max(self.state.n_masked))) + 4
@@ -413,7 +570,8 @@ class DecodeSession:
                      row_extras: Optional[Dict[str, np.ndarray]] = None,
                      row_kv_len: Optional[np.ndarray] = None,
                      row_page_table: Optional[np.ndarray] = None,
-                     row_committed: Optional[np.ndarray] = None
+                     row_committed: Optional[np.ndarray] = None,
+                     row_shared: Optional[Sequence[SharedPrefix]] = None
                      ) -> None:
         """Swap canvas rows in-place and re-prefill ONLY those rows.
 
@@ -429,7 +587,9 @@ class DecodeSession:
         ``row_kv_len`` [n_swap]: the sub-row prefill scatters into those
         pages, sibling rows' pages are untouched.  ``row_committed``
         restores a preempted request's commit ring (resume); default
-        clears it.
+        clears it.  ``row_shared`` (DESIGN.md §6) attaches shared
+        prefix pages for incoming rows exactly like ``attach(shared=)``
+        — specs carry BATCH row ids (members of ``rows``).
         """
         assert self.state is not None
         idx = jnp.asarray(list(rows), jnp.int32)
@@ -455,15 +615,31 @@ class DecodeSession:
             sub_kv = jnp.asarray(row_kv_len, jnp.int32)
             kv_len = kv_len.at[idx].set(sub_kv)
         cache = self.state.cache
+        rows_list = list(rows)
+        for r in rows_list:      # replaced rows' pending shares lapse
+            self._shared_pending.pop(r, None)
         if self.strategy.uses_cache and cache:
-            fresh = self._build_cache(row_tokens, sub_extras, sub_kv)
             if isinstance(cache, PagedCache):
                 assert row_page_table is not None
                 row_pt = jnp.asarray(row_page_table, jnp.int32)
-                cache = cache_lib.repage(
-                    cache.arenas, row_pt, fresh, self.strategy.backend,
-                    full_table=cache.page_table.at[idx].set(row_pt))
+                if row_shared:
+                    sub_specs = [dataclasses.replace(
+                        s, row=rows_list.index(s.row)) for s in row_shared]
+                    arenas = self._paged_fill(
+                        cache.arenas, row_tokens, sub_extras, sub_kv,
+                        row_pt, sub_specs)
+                    for s in row_shared:
+                        self._shared_pending[s.row] = s
+                else:
+                    fresh = self._build_cache(row_tokens, sub_extras,
+                                              sub_kv)
+                    arenas = cache_lib.paged_from_dense(
+                        cache.arenas, row_pt, fresh,
+                        self.strategy.backend)
+                cache = PagedCache(arenas,
+                                   cache.page_table.at[idx].set(row_pt))
             else:
+                fresh = self._build_cache(row_tokens, sub_extras, sub_kv)
                 cache = jax.tree.map(
                     lambda old, new: old.at[:, idx].set(new), cache, fresh)
         self.state = self.state._replace(
@@ -487,6 +663,8 @@ class DecodeSession:
         masked out of attention and selection)."""
         assert self.state is not None
         self.deactivate_rows(rows)
+        for r in rows:           # released rows never COW (the engine
+            self._shared_pending.pop(r, None)   # releases their holds)
         idx = jnp.asarray(list(rows), jnp.int32)
         kv_len = self.state.kv_len
         if kv_len is not None:

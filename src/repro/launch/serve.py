@@ -51,6 +51,14 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16,
                     help="canvas rows per cache page (the canvas length "
                          "must be a multiple)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="shared-prefix radix cache (DESIGN.md §6): "
+                         "reuse prefill pages across requests with "
+                         "matching prompt prefixes + canvas layout "
+                         "(paged mode only; default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_arch(args.arch))
@@ -77,6 +85,7 @@ def main(argv=None):
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
         pool_pages=args.pool_pages, page_size=args.page_size,
+        prefix_cache=args.prefix_cache,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
@@ -101,6 +110,13 @@ def main(argv=None):
               f"{stats.steady_pool_util:.0%}, "
               f"{stats.preemptions} preemptions, "
               f"{stats.admission_stalls} admission stalls")
+        if engine.prefix is not None:
+            print(f"prefix cache: {stats.prefix_hits} hits "
+                  f"({stats.prefix_full_hits} full), "
+                  f"{stats.prefix_tokens_saved} prefill tokens saved, "
+                  f"{stats.prefix_published} pages published "
+                  f"({stats.prefix_publish_skipped} skipped), "
+                  f"{stats.prefix_evicted_pages} evicted")
     for req in engine.done[:3]:
         print(f"  req {req.uid}: out={req.output[:10]}...")
     return 0

@@ -35,12 +35,29 @@ byte-identical to a periodic refresh at the resume step, so a
 preempted-then-resumed request matches a twin that refreshed there
 (``tests/test_serving.py``).
 
+Prefix reuse (``prefix_cache=True``, DESIGN.md §6): a
+:class:`~repro.serving.prefix.PrefixIndex` maps (row span, strategy,
+prompt token runs) to refcounted page runs holding PREFILL-TIME states.
+Admission consults the index: a full hit attaches every page and skips
+the prefill forward entirely; a partial hit attaches the matched prefix
+read-only and prefills only the unmatched suffix
+(``decoding.prefill_partial``).  Attached shared pages are copied into
+the request's own reserve pages right before its first decode write
+(copy-on-write in ``DecodeSession``), so index pages never change.
+Cold requests publish their prefill pages (a page copy, skipped under
+page pressure) back into the index at admission — harvest-time states
+have evolved with the decode and would silently break the full-hit
+byte-parity guarantee, so publication snapshots BEFORE the first step.
+Under admission pressure, least-recently-used index entries with no
+readers are evicted before any running request is preempted.
+
 Slot bookkeeping uses the session's explicit active-position mask;
 token ids are never overloaded as "committed filler" sentinels.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
@@ -50,10 +67,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cache import PagedCache, n_logical_pages
 from repro.core.strategy import CacheStrategy, resolve_strategy
-from repro.dlm.decoding import DecodeSettings
+from repro.dlm.decoding import DecodeSettings, partial_prefill_supported
 from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
-from repro.dlm.session import DecodeSession
+from repro.dlm.session import DecodeSession, SharedPrefix
 from repro.serving.pool import OutOfPages, PagePool
+from repro.serving.prefix import PrefixIndex
 
 # (settings, strategy, scheduler): everything the compiled step closes
 # over statically — one DecodeSession (one executable) per distinct key.
@@ -78,6 +96,12 @@ class Request:
     row_len: int = 0                # page-aligned prompt+gen span
     n_pages: int = 0                # composite pages needed
     pages: Optional[List[int]] = None
+    # shared-prefix attachment (DESIGN.md §6): read holds on index pages
+    # mapped at logical [0, shared_n); pages[:shared_n] is the COW
+    # reserve.  Released at COW time (or harvest/preempt if earlier).
+    holds: Optional[List[int]] = None
+    shared_n: int = 0
+    shared_full: bool = False       # the hit covers the whole row span
     preemptions: int = 0
     served_steps: int = 0           # per-request max_steps budget
     snapshot: Optional[Dict[str, np.ndarray]] = None  # preempt resume
@@ -91,6 +115,13 @@ class EngineStats:
     swaps: int = 0                  # mid-loop slot replacements
     preemptions: int = 0            # out-of-pages victim evictions
     admission_stalls: int = 0       # admission attempts blocked on pages
+    # shared-prefix index (DESIGN.md §6)
+    prefix_hits: int = 0            # admissions that attached index pages
+    prefix_full_hits: int = 0       # ... covering the whole row span
+    prefix_tokens_saved: int = 0    # prompt+canvas rows NOT re-prefilled
+    prefix_published: int = 0       # pages copied into the index
+    prefix_publish_skipped: int = 0  # publications dropped (pool short)
+    prefix_evicted_pages: int = 0   # index pages evicted under pressure
     peak_pool_util: float = 0.0
     steady_pool_util: float = 0.0
     e2e_latencies: List[float] = dataclasses.field(default_factory=list)
@@ -119,7 +150,8 @@ class ServingEngine:
                  strategy: Optional[CacheStrategy] = None,
                  scheduler: Optional[UnmaskScheduler] = None,
                  continuous: bool = True,
-                 pool_pages: int = 0, page_size: int = 16):
+                 pool_pages: int = 0, page_size: int = 16,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -131,11 +163,19 @@ class ServingEngine:
         self.paged = pool_pages > 0
         self.page_size = page_size
         self.pool: Optional[PagePool] = None
+        self.prefix: Optional[PrefixIndex] = None
         if self.paged:
             n_logical_pages(canvas_len, page_size)  # divisibility check
             self.pool = PagePool(cfg, n_pages=pool_pages,
                                  page_size=page_size,
                                  strategy=self.strategy)
+            if prefix_cache:
+                self.prefix = PrefixIndex(page_size)
+        # partial (suffix-only) reuse needs a window-free all-attention
+        # stack and a float cache (DESIGN.md §6); full-run hits are an
+        # exact page copy and work for any architecture/dtype
+        self._partial_ok = (partial_prefill_supported(cfg)
+                            and cfg.cache_dtype != "int8")
         self.queue: deque[Request] = deque()
         self.done: List[Request] = []
         self.stats = EngineStats()
@@ -153,7 +193,22 @@ class ServingEngine:
                settings: Optional[DecodeSettings] = None,
                strategy: Optional[CacheStrategy] = None,
                scheduler: Optional[UnmaskScheduler] = None,
-               priority: int = 0) -> int:
+               priority: int = 0,
+               row_len: Optional[int] = None) -> int:
+        """Queue one request.  Rejects requests that can never be
+        scheduled (``gen_len`` outside the canvas, or a page footprint
+        beyond the whole pool) with a clear error instead of letting
+        them starve the queue forever.
+
+        ``row_len`` (paged mode) reserves a larger page-aligned canvas
+        span than prompt+gen needs — cross-turn chat reserves the same
+        span every turn so the prefix index's layout keys line up
+        (DESIGN.md §6)."""
+        if gen_len <= 0 or gen_len > self.canvas_len:
+            raise ValueError(
+                f"gen_len {gen_len} cannot be scheduled on a "
+                f"canvas_len={self.canvas_len} engine (need "
+                f"0 < gen_len <= canvas_len)")
         # monotonic counter — NOT len(done)+len(queue): with requests
         # in-flight (popped but not done) that length dips and reuses
         # live uids (regression-tested in tests/test_serving.py).
@@ -165,7 +220,7 @@ class ServingEngine:
         self._admission_dirty = True
         if self.paged:
             p_len = min(len(req.prompt), self.canvas_len - gen_len)
-            span = p_len + gen_len
+            span = max(p_len + gen_len, row_len or 0)
             req.row_len = min(
                 -(-span // self.page_size) * self.page_size,
                 self.canvas_len)
@@ -175,7 +230,9 @@ class ServingEngine:
             if req.n_pages > self.pool.capacity:
                 raise OutOfPages(
                     f"request uid={uid} needs {req.n_pages} pages; pool "
-                    f"capacity is {self.pool.capacity}")
+                    f"capacity is {self.pool.capacity} — it can never "
+                    f"be admitted (grow --pool-pages or shrink the "
+                    f"request)")
         else:
             req.row_len = self.canvas_len
         self.queue.append(req)
@@ -223,6 +280,127 @@ class ServingEngine:
         return self._sessions[lane]
 
     # ------------------------------------------------------------------
+    # Shared-prefix index (DESIGN.md §6)
+    # ------------------------------------------------------------------
+
+    def _prompt_in_canvas(self, req: Request) -> np.ndarray:
+        """The prompt tokens that actually land on the canvas (the
+        index key must describe the canvas, not the raw request)."""
+        return req.prompt[: self.canvas_len - req.gen_len]
+
+    def _prefix_key(self, req: Request):
+        return (req.row_len, req.lane[1].prefix_key())
+
+    def _prefix_plan(self, req: Request) -> None:
+        """Consult the index for an admission candidate: on a hit, take
+        read holds on the matched pages — they will be mapped at the
+        row's logical prefix, with ``req.pages[:shared_n]`` as the
+        copy-on-write reserve.  Runs BEFORE the shortage check so the
+        holds protect the matched entry from this admission's own index
+        eviction; a stalled candidate releases them again.  Resumed
+        requests never match: their canvas holds committed generation
+        the publisher prefilled as [MASK]."""
+        self._drop_plan(req)    # releases stale holds, never leaks them
+        if (self.prefix is None or req.preemptions > 0
+                or not req.n_pages):
+            return
+        match = self.prefix.lookup(self._prefix_key(req),
+                                   self._prompt_in_canvas(req),
+                                   partial_ok=self._partial_ok)
+        if match is None:
+            return
+        self.pool.retain(list(match.pages))
+        req.holds = list(match.pages)
+        req.shared_n = match.n_pages
+        req.shared_full = match.full
+
+    def _drop_plan(self, req: Request) -> None:
+        self._release_holds(req)
+        req.shared_n, req.shared_full = 0, False
+
+    def _count_prefix_hit(self, req: Request) -> None:
+        """Admission succeeded: account the planned hit."""
+        if not req.holds:
+            return
+        self.stats.prefix_hits += 1
+        if req.shared_full:
+            self.stats.prefix_full_hits += 1
+            self.stats.prefix_tokens_saved += req.row_len
+        else:
+            self.stats.prefix_tokens_saved += (req.shared_n
+                                               * self.page_size)
+
+    def _attach_spec(self, req: Request, row: int):
+        """(page-table row, SharedPrefix|None) for one slot."""
+        if not req.holds:
+            return self._pt_row(req), None
+        m = req.shared_n
+        pt_pages = req.holds + (req.pages or [])[m:]
+        spec = SharedPrefix(row=row, pages=tuple(req.holds),
+                            reserve=tuple((req.pages or [])[:m]))
+        return self.pool.page_table_row(pt_pages, self.canvas_len), spec
+
+    def _on_cow(self, slots: List[Optional[Request]],
+                specs) -> None:
+        """Session copy-on-write fired: drop the read holds — the rows
+        now run entirely on their own pages."""
+        for s in specs:
+            req = slots[s.row]
+            if req is not None and req.holds:
+                self.pool.release(req.holds)
+                req.holds = None
+
+    def _release_holds(self, req: Request) -> None:
+        if req.holds:
+            self.pool.release(req.holds)
+            req.holds = None
+
+    def _maybe_publish(self, req: Request, sess: DecodeSession) -> None:
+        """Publish an attached request's prefill-time pages into the
+        index (admission time — BEFORE the first decode write evolves
+        them; harvest-time states would break full-hit byte parity).
+        Cold requests publish their whole run (prompt path + all-[MASK]
+        tail); partial hits publish only the depths past their match,
+        extending the trie.  A page copy pays for it; skipped when the
+        pool has no slack."""
+        if self.prefix is None or req.preemptions > 0 or not req.n_pages:
+            return
+        n_run = req.row_len // self.page_size
+        m = req.shared_n if req.holds else 0
+        if m >= n_run:
+            return                       # full hit: already indexed
+        key = self._prefix_key(req)
+        prompt = self._prompt_in_canvas(req)
+        # read-only probe first: duplicate prompts admitted in one batch
+        # all plan before the first publishes, so later ones would
+        # otherwise alloc + device-copy a full run just to have insert
+        # reject every page
+        missing = [d for d in self.prefix.missing_slots(key, prompt,
+                                                        n_run) if d >= m]
+        if not missing:
+            return
+        pub = self.pool.alloc(len(missing))
+        if pub is None:
+            self.stats.prefix_publish_skipped += 1
+            return
+        sess.copy_cache_pages([(req.pages or [])[d] for d in missing],
+                              pub)
+        pages: List[Optional[int]] = [None] * n_run
+        for d, p in zip(missing, pub):
+            pages[d] = p
+        rejected = self.prefix.insert(key, prompt, pages)
+        if rejected:
+            self.pool.release(rejected)
+        self.stats.prefix_published += len(pub) - len(rejected)
+
+    def drop_prefix_cache(self) -> int:
+        """Release every index hold and clear the trie (tests, or
+        explicit memory reclamation).  Returns pages released."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.clear(self.pool)
+
+    # ------------------------------------------------------------------
     # Admission control + preemption (paged mode)
     # ------------------------------------------------------------------
 
@@ -240,6 +418,8 @@ class ServingEngine:
         snap = sess.snapshot_rows([slot])
         victim.snapshot = {k: v[0] for k, v in snap.items()}
         sess.release_rows([slot])
+        self._release_holds(victim)      # un-COW'd shared pages go back
+        victim.shared_n = 0
         self.pool.free(victim.pages or [])
         victim.pages = None
         victim.preemptions += 1
@@ -271,20 +451,45 @@ class ServingEngine:
                     return None     # dense mode: no preemption
                 self.queue.remove(req)
                 return req
+            # plan the prefix hit FIRST: the read holds protect the
+            # matched entry from this admission's own index eviction
+            self._prefix_plan(req)
             page_short = (max(0, req.n_pages - self.pool.available)
                           if req.n_pages else 0)
-            if page_short or not slot_free:
-                if sess is None:
-                    stalled = True
-                    continue
+            victims = []
+            if sess is not None:
                 victims = [(i, r) for i, r in enumerate(slots)
                            if r is not None and i not in protected
                            and r.priority < req.priority]
                 victims.sort(key=lambda ir: (
                     ir[1].priority, -(ir[1].started_at or 0.0)))
+            if page_short and self.prefix is not None:
+                # admission pressure: evict LRU reader-less index
+                # entries before touching any RUNNING request — but
+                # only when eviction (plus the preemptible victims)
+                # can actually admit this candidate; destroying LRU
+                # entries for a request that stalls anyway trades
+                # future hits for nothing
+                freeable = sum(len(r.pages or []) for _, r in victims)
+                feasible = (
+                    (slot_free or victims)
+                    and self.pool.available + freeable
+                    + self.prefix.evictable_total(self.pool)
+                    >= req.n_pages)
+                freed = (self.prefix.evict(self.pool, page_short)
+                         if feasible else 0)
+                if freed:
+                    self.stats.prefix_evicted_pages += freed
+                    page_short = max(0, req.n_pages - self.pool.available)
+            if page_short or not slot_free:
+                if sess is None:
+                    self._drop_plan(req)
+                    stalled = True
+                    continue
                 freeable = sum(len(r.pages or []) for _, r in victims)
                 if (self.pool.available + freeable < req.n_pages
                         or (not slot_free and not victims)):
+                    self._drop_plan(req)
                     stalled = True
                     continue        # a smaller/later candidate may fit
                 for i, r in victims:
@@ -296,6 +501,7 @@ class ServingEngine:
             assert pages is not None
             self.queue.remove(req)
             req.pages = pages
+            self._count_prefix_hit(req)
             return req
         if stalled:
             self.stats.admission_stalls += 1
@@ -335,9 +541,11 @@ class ServingEngine:
         if req.started_at is not None:
             self.stats.queue_waits.append(
                 req.started_at - req.submitted_at)
-        if self.paged and req.pages:
-            self.pool.free(req.pages)
-            req.pages = None
+        if self.paged:
+            self._release_holds(req)
+            if req.pages:
+                self.pool.free(req.pages)
+                req.pages = None
         self.done.append(req)
         self.stats.requests_done += 1
 
@@ -389,6 +597,7 @@ class ServingEngine:
         pt = np.zeros((b, n_log), np.int32)
         p_lens = [0] * b
         ages = [0] * b                 # max_steps budget is PER REQUEST
+        shared_specs: List[SharedPrefix] = []
         for i, req in enumerate(batch):
             row, act, com, p_len = self._canvas_row(req)
             tokens[i], active[i] = row, act
@@ -399,14 +608,20 @@ class ServingEngine:
             ages[i] = req.served_steps
             kv[i] = req.row_len
             if self.paged and strategy.uses_cache:
-                pt[i] = self._pt_row(req)
+                pt[i], spec = self._attach_spec(req, i)
+                if spec is not None:
+                    shared_specs.append(spec)
             if req.started_at is None:
                 req.started_at = now
         if self.paged:
+            sess.cow_callback = functools.partial(self._on_cow, slots)
             arenas = (self.pool.arenas_for(strategy)
                       if strategy.uses_cache else None)
             sess.attach(tokens, active=active, kv_len=kv,
-                        arenas=arenas, page_table=pt)
+                        arenas=arenas, page_table=pt,
+                        shared=shared_specs or None)
+            for req in batch:
+                self._maybe_publish(req, sess)
         else:
             sess.attach(tokens, active=active)
         if (committed0 != -1).any():
@@ -450,6 +665,7 @@ class ServingEngine:
                     sess.release_rows(finished)
             swap_rows, swap_tokens, swap_active = [], [], []
             swap_kv, swap_pt, swap_com = [], [], []
+            swap_shared: List[SharedPrefix] = []
             while self.continuous:
                 # fill every empty slot — and let _admit_one MAKE one by
                 # preempting a lower-priority row when a high-priority
@@ -471,9 +687,13 @@ class ServingEngine:
                 swap_tokens.append(row)
                 swap_active.append(act)
                 swap_kv.append(req.row_len)
-                swap_pt.append(self._pt_row(req) if self.paged
-                               and strategy.uses_cache
-                               else [0] * n_log)
+                if self.paged and strategy.uses_cache:
+                    pt_row, spec = self._attach_spec(req, i)
+                    swap_pt.append(pt_row)
+                    if spec is not None:
+                        swap_shared.append(spec)
+                else:
+                    swap_pt.append([0] * n_log)
                 swap_com.append(com if com is not None else np.full(
                     (committed0.shape[1],), -1, np.int32))
             self._admission_dirty = False
@@ -484,7 +704,10 @@ class ServingEngine:
                         np.stack(swap_active),
                         row_kv_len=np.asarray(swap_kv, np.int32),
                         row_page_table=np.asarray(swap_pt, np.int32),
-                        row_committed=np.stack(swap_com))
+                        row_committed=np.stack(swap_com),
+                        row_shared=swap_shared or None)
+                    for i in swap_rows:
+                        self._maybe_publish(slots[i], sess)
                 else:
                     sess.replace_rows(swap_rows, np.stack(swap_tokens),
                                       np.stack(swap_active))

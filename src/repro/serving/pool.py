@@ -13,8 +13,13 @@ Invariants:
     written (paged scatters drop writes to it); every logical page past
     a request's ``kv_len`` aliases it, which is what lets heterogeneous
     ``gen_len`` requests share a lane without padding to the lane max.
-  * pages are exclusive: a physical page belongs to at most one request
-    at a time, so concurrent batch rows never write the same page.
+  * pages are refcounted: ``alloc`` hands out pages at refcount 1,
+    ``retain`` adds holds (the prefix index and its readers — DESIGN.md
+    §6), ``release`` drops them and returns the page to the free list at
+    zero.  WRITERS are still exclusive: a page with more than one hold
+    is read-only by convention, and a session that needs to commit into
+    one first copies it to a private page (copy-on-write — the page
+    table is host-owned, so the patch happens between jitted steps).
   * arenas are per cache SIGNATURE (identifier width + incremental
     buffer + quantization): requests whose strategies share a signature
     share the arena; page ACCOUNTING is global across signatures either
@@ -61,6 +66,7 @@ class PagePool:
         self.default_strategy = resolve_strategy(cfg, strategy)
         # page 0 is the zero page; 1..n_pages-1 are allocatable
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._rc: Dict[int, int] = {}   # holds per allocated page
         self._arenas: Dict[Tuple, Dict] = {}
         self.peak_used = 0
         self._util_samples: List[float] = []
@@ -88,17 +94,46 @@ class PagePool:
         return -(-row_len // self.page_size)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Allocate n pages (all-or-nothing). None when short."""
+        """Allocate n pages at refcount 1 (all-or-nothing). None when
+        short."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._rc[p] = 1
         self.peak_used = max(self.peak_used, self.used)
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def retain(self, pages: List[int]) -> None:
+        """Add one hold per page (a shared reader or the prefix index)."""
         for p in pages:
-            assert 0 < p < self.n_pages and p not in self._free, p
-            self._free.append(p)
+            assert self._rc.get(p, 0) > 0, f"retain of unallocated page {p}"
+            self._rc[p] += 1
+
+    def release(self, pages: List[int]) -> None:
+        """Drop one hold per page; a page returns to the free list when
+        its last hold goes."""
+        for p in pages:
+            assert 0 < p < self.n_pages, p
+            rc = self._rc.get(p, 0)
+            assert rc > 0 and p not in self._free, (p, rc)
+            if rc == 1:
+                del self._rc[p]
+                self._free.append(p)
+            else:
+                self._rc[p] = rc - 1
+
+    def free(self, pages: List[int]) -> None:
+        """Back-compat alias: drop ONE hold per page (see release)."""
+        self.release(pages)
+
+    def refcount(self, page: int) -> int:
+        return self._rc.get(page, 0)
+
+    @property
+    def refcounts(self) -> Dict[int, int]:
+        """{page: holds} for every allocated page (copy)."""
+        return dict(self._rc)
 
     def note_step(self) -> None:
         """Sample utilization once per engine step (steady-state stat)."""

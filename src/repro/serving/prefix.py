@@ -1,0 +1,318 @@
+"""Shared-prefix radix cache for the paged serving runtime (DESIGN.md §6).
+
+At production scale most traffic shares long system prompts and few-shot
+templates, yet every request re-prefills its full prompt.  This module
+indexes *prefill-time* cache pages by prompt content so later requests
+can attach them instead of recomputing:
+
+  * The index is a radix trie per **layout root**.  A root key is
+    ``(row_len, strategy.prefix_key())`` — ``row_len`` is the request's
+    page-aligned canvas span (== its ``kv_len``).  In a bidirectional
+    DLM the prefill state of every position attends over the whole
+    valid canvas, and in the engine's canvas construction every
+    position past the prompt up to ``row_len`` is [MASK] at prefill
+    time — so ``row_len`` is exactly the "canvas layout" part of the
+    match key (it subsumes ``gen_len``: two requests with the same
+    prompt and row span have byte-identical prefill states regardless
+    of how the span splits into prompt slack and active generation).
+  * Trie edges are page-sized token runs: a node at depth ``d`` owns
+    ONE physical page holding the prefill states of logical page ``d``,
+    valid for any prompt that starts with the node's token path.
+  * A node additionally carries **tail entries**: for a prompt that
+    *ends* at this node (loose, sub-page tokens as the key), the pages
+    covering the rest of the row span — at prefill those rows are all
+    [MASK], so together path + tail reproduce the publisher's ENTIRE
+    prefill.  A tail match is a *full hit*: the request skips its
+    prefill forward completely.
+
+Exactness (the headline guarantee, ``tests/test_prefix.py``): a full
+hit whose path+tail pages were published by one request with the same
+full prompt and row span is **byte-identical** to a cold prefill, so
+the subsequent decode matches a cold decode bit-for-bit.  A *partial*
+hit (the lookup prompt extends past the matched path, or path pages
+come from publishers with different suffixes) reuses states computed
+under a different canvas suffix — exactly the committed-token staleness
+the paper's drift identification manages; the unmatched suffix is
+recomputed bit-exactly against the matched pages
+(``decoding.prefill_partial``) and drifted prefix rows refresh through
+the normal strategy machinery.
+
+Pages are owned by the index at refcount 1 (``PagePool`` holds) and
+gain one hold per attached reader; readers drop their hold when they
+copy-on-write before their first commit.  Under admission pressure the
+engine evicts least-recently-used entries whose pages have no readers
+(``evict``) — deepest-first, so a surviving node's path to the root
+always has pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.pool import PagePool
+
+TokenRun = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class _Tail:
+    """Full-run completion for a prompt ending at the owning node."""
+    pages: List[int]
+    last_used: int
+
+
+@dataclasses.dataclass
+class _Node:
+    """One logical page of prompt tokens; ``page`` holds its states."""
+    page: Optional[int] = None
+    last_used: int = 0
+    children: Dict[TokenRun, "_Node"] = dataclasses.field(
+        default_factory=dict)
+    tails: Dict[TokenRun, _Tail] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Lookup result: ``pages`` map logical pages [0, len(pages)) of the
+    request's row; ``full`` means the whole row span is covered (skip
+    the prefill forward entirely)."""
+    pages: Tuple[int, ...]
+    full: bool
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages)
+
+
+class PrefixIndex:
+    """Radix trie over page-sized prompt token runs -> physical pages."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.roots: Dict[Tuple, _Node] = {}
+        self._clock = 0          # monotonic LRU clock (lookup/insert)
+        self.hits = 0
+        self.full_hits = 0
+        self.misses = 0
+        self.evicted_pages = 0
+
+    # ---- keys ---------------------------------------------------------
+
+    def _split(self, prompt: np.ndarray) -> Tuple[List[TokenRun], TokenRun]:
+        toks = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        ps = self.page_size
+        n_full = len(toks) // ps
+        runs = [tuple(toks[i * ps: (i + 1) * ps]) for i in range(n_full)]
+        return runs, tuple(toks[n_full * ps:])
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # ---- queries ------------------------------------------------------
+
+    def lookup(self, root_key: Tuple, prompt: np.ndarray,
+               partial_ok: bool = True) -> Optional[PrefixMatch]:
+        """Longest page-aligned match for ``prompt`` under the layout
+        root.  Returns a full-run match when the prompt ends exactly at
+        the matched node and a tail entry exists; otherwise the matched
+        prefix pages (None when empty or ``partial_ok`` is False)."""
+        now = self._tick()
+        node = self.roots.get(root_key)
+        runs, loose = self._split(prompt)
+        pages: List[int] = []
+        if node is not None:
+            for run in runs:
+                child = node.children.get(run)
+                if child is None or child.page is None:
+                    node = None if child is None else child
+                    break
+                child.last_used = now
+                pages.append(child.page)
+                node = child
+            else:
+                tail = node.tails.get(loose) if node is not None else None
+                if tail is not None:
+                    tail.last_used = now
+                    self.hits += 1
+                    self.full_hits += 1
+                    return PrefixMatch(tuple(pages + tail.pages), True)
+        if pages and partial_ok:
+            self.hits += 1
+            return PrefixMatch(tuple(pages), False)
+        self.misses += 1
+        return None
+
+    # ---- publication --------------------------------------------------
+
+    def missing_slots(self, root_key: Tuple, prompt: np.ndarray,
+                      n_pages: int) -> List[int]:
+        """Read-only probe: the depth indices in [0, n_pages) a
+        publication of this (prompt, run) would actually adopt — path
+        nodes without a page, plus the whole tail when the loose-token
+        entry is absent.  Lets the engine allocate + device-copy only
+        the missing pages instead of a full run per duplicate prompt
+        (same-batch retries / n>1 sampling)."""
+        runs, loose = self._split(prompt)
+        node = self.roots.get(root_key)
+        out: List[int] = []
+        for depth, run in enumerate(runs):
+            child = node.children.get(run) if node is not None else None
+            if child is None or child.page is None:
+                out.append(depth)
+            node = child
+        if node is None or loose not in node.tails:
+            out.extend(range(len(runs), n_pages))
+        return out
+
+    def evictable_total(self, pool: PagePool) -> int:
+        """Read-only cascade bound: pages :meth:`evict` could free if
+        asked for everything — rc-1 tails and rc-1 node pages whose
+        whole subtree is itself freeable (leaf-first order makes the
+        cascade exact)."""
+        total = 0
+
+        def walk(node: _Node) -> bool:
+            """True if the subtree pins any page the pool can't free."""
+            nonlocal total
+            stuck = False
+            for tail in node.tails.values():
+                if all(pool.refcount(p) == 1 for p in tail.pages):
+                    total += len(tail.pages)
+                else:
+                    stuck = True
+            for child in node.children.values():
+                if walk(child):
+                    stuck = True
+            if node.page is not None:
+                if not stuck and pool.refcount(node.page) == 1:
+                    total += 1
+                else:
+                    stuck = True
+            return stuck
+
+        for root in self.roots.values():
+            walk(root)
+        return total
+
+    def insert(self, root_key: Tuple, prompt: np.ndarray,
+               pages: Sequence[Optional[int]]) -> List[int]:
+        """Publish a full prefill run: ``pages[i]`` is the physical page
+        holding logical page ``i``'s states (prompt path first, then the
+        all-[MASK] tail to the row span), or None for depths the caller
+        knows are already present.  Existing nodes keep their pages
+        (first publisher wins — replacing them would silently retarget
+        live lookups).  Returns the pages NOT adopted; the caller must
+        release them back to the pool."""
+        now = self._tick()
+        runs, loose = self._split(prompt)
+        assert len(pages) >= len(runs), (len(pages), len(runs))
+        node = self.roots.setdefault(root_key, _Node())
+        rejected: List[int] = []
+        for depth, run in enumerate(runs):
+            child = node.children.setdefault(run, _Node())
+            page = pages[depth]
+            if page is not None:
+                if child.page is None:
+                    child.page = page
+                else:
+                    rejected.append(page)
+            child.last_used = now
+            node = child
+        tail_pages = [p for p in pages[len(runs):] if p is not None]
+        if tail_pages:
+            if loose in node.tails:
+                rejected.extend(tail_pages)
+            else:
+                node.tails[loose] = _Tail(tail_pages, now)
+        return rejected
+
+    # ---- eviction -----------------------------------------------------
+
+    def _evictable(self, pool: PagePool):
+        """(last_used, kind, ...) units safe to drop: tails, and leaf
+        node pages (no page-bearing descendants, no tails) — all with no
+        reader holds (pool refcount 1 = the index's own hold)."""
+        units = []
+
+        def walk(node: _Node):
+            blocked = False     # a page-bearing descendant or tail below
+            for tail_key, tail in node.tails.items():
+                if all(pool.refcount(p) == 1 for p in tail.pages):
+                    units.append((tail.last_used, "tail", node, tail_key))
+                blocked = True
+            for child in node.children.values():
+                if walk(child):
+                    blocked = True
+            if node.page is not None:
+                if not blocked and pool.refcount(node.page) == 1:
+                    units.append((node.last_used, "node", node, None))
+                return True
+            return blocked
+
+        for root in self.roots.values():
+            walk(root)
+        return units
+
+    def evict(self, pool: PagePool, n_pages: int) -> int:
+        """Free at least ``n_pages`` pages of LRU unreferenced entries
+        (deepest-first by construction).  Returns pages actually freed —
+        may be fewer when everything left has readers."""
+        freed = 0
+        while freed < n_pages:
+            units = self._evictable(pool)
+            if not units:
+                break
+            units.sort(key=lambda u: u[0])
+            _, kind, node, tail_key = units[0]
+            if kind == "tail":
+                tail = node.tails.pop(tail_key)
+                pool.release(tail.pages)
+                freed += len(tail.pages)
+                self.evicted_pages += len(tail.pages)
+            else:
+                pool.release([node.page])
+                node.page = None
+                freed += 1
+                self.evicted_pages += 1
+        return freed
+
+    def clear(self, pool: PagePool) -> int:
+        """Release every index hold (readers keep theirs) and drop the
+        trie.  Returns the number of holds released."""
+        n = 0
+
+        def walk(node: _Node):
+            nonlocal n
+            if node.page is not None:
+                pool.release([node.page])
+                n += 1
+            for tail in node.tails.values():
+                pool.release(tail.pages)
+                n += len(tail.pages)
+            for child in node.children.values():
+                walk(child)
+
+        for root in self.roots.values():
+            walk(root)
+        self.roots = {}
+        return n
+
+    # ---- stats --------------------------------------------------------
+
+    @property
+    def held_pages(self) -> int:
+        n = 0
+
+        def walk(node: _Node):
+            nonlocal n
+            n += int(node.page is not None)
+            n += sum(len(t.pages) for t in node.tails.values())
+            for child in node.children.values():
+                walk(child)
+
+        for root in self.roots.values():
+            walk(root)
+        return n

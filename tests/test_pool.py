@@ -298,3 +298,58 @@ def test_submit_larger_than_pool_raises(tiny_cfg, tiny_params):
                         strategy=SPACache(rank=16))
     with pytest.raises(OutOfPages):
         eng.submit(np.arange(8, dtype=np.int32), gen_len=8)
+
+
+def test_pool_refcounts(tiny_cfg):
+    pool = PagePool(tiny_cfg, n_pages=5, page_size=PAGE)
+    pages = pool.alloc(2)
+    assert all(pool.refcount(p) == 1 for p in pages)
+    pool.retain(pages)
+    pool.release(pages)               # reader hold dropped, still owned
+    assert pool.used == 2 and all(pool.refcount(p) == 1 for p in pages)
+    pool.release(pages)               # last hold: pages return
+    assert pool.used == 0 and not pool.refcounts
+    with pytest.raises(AssertionError):
+        pool.retain(pages)            # retaining freed pages is a bug
+
+
+def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params):
+    """Leak detector: an engine run mixing completions, preemptions,
+    prefix hits, publications and index evictions fully drains with
+    every page back in the free list and every refcount at zero (the
+    prefix index's own holds released via ``drop_prefix_cache``)."""
+    from repro.serving.engine import ServingEngine
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    eng = ServingEngine(tiny_cfg, tiny_params, max_batch=2,
+                        canvas_len=CANVAS, pool_pages=13, page_size=PAGE,
+                        strategy=strat, prefix_cache=True)
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    decoy = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    eng.submit(shared, gen_len=8)     # cold, publishes 4 pages
+    eng.submit(decoy, gen_len=8)      # cold, publishes 4 more (LRU-er)
+    eng.run()
+    # full hit (its plan protects the shared entry) + a small filler;
+    # admitting them under pressure evicts the decoy's pages
+    eng.submit(shared, gen_len=8)
+    eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 4)
+               .astype(np.int32), gen_len=4)
+    big = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    s0 = eng.stats.steps              # stats accumulate across runs
+
+    def on_step(e):
+        if e.stats.steps == s0 + 2:   # full batch + 2 free pages:
+            e.submit(big, gen_len=8, priority=5)   # evicts AND preempts
+
+    eng.run(on_step=on_step)
+    assert eng.stats.requests_done == 5
+    assert eng.stats.prefix_full_hits >= 1
+    assert eng.stats.preemptions > 0
+    assert eng.stats.prefix_evicted_pages > 0
+    # after the drain, the ONLY pages still held belong to the index
+    assert eng.pool.used == eng.prefix.held_pages
+    assert all(rc == 1 for rc in eng.pool.refcounts.values())
+    eng.drop_prefix_cache()
+    assert eng.pool.used == 0
+    assert eng.pool.available == eng.pool.capacity
+    assert not eng.pool.refcounts

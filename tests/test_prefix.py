@@ -1,0 +1,481 @@
+"""Shared-prefix radix cache (DESIGN.md §6): index mechanics, partial
+prefill bit-exactness, copy-on-write isolation, and the headline
+guarantee — a prefix-hit decode is byte-identical to a cold decode for
+every registered strategy on both kernel backends in both run modes."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import strategy as strategy_lib
+from repro.core.strategy import (AttnOutCache, SPACache, ValueProxyCache,
+                                 WindowCache)
+from repro.dlm import decoding
+from repro.dlm.session import DecodeSession, SharedPrefix
+from repro.serving.engine import ServingEngine
+from repro.serving.pool import PagePool
+from repro.serving.prefix import PrefixIndex
+
+PAGE = 4
+CANVAS = 16
+N_LOG = CANVAS // PAGE
+
+
+def _test_instance(ident: str):
+    inc = ident.endswith("+inc")
+    base = ident.split("+")[0]
+    cls = strategy_lib.REGISTRY[base]
+    if cls is SPACache:
+        return SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                        incremental_ident=inc)
+    if cls is ValueProxyCache:
+        return ValueProxyCache(projection=base, rho=0.3)
+    if cls is WindowCache:
+        return WindowCache(locality_window=8, rho=0.3)
+    if cls is AttnOutCache:
+        return AttnOutCache(rho=0.5)
+    return cls()
+
+
+CACHED_IDENTS = sorted(i for i in strategy_lib.REGISTRY
+                       if strategy_lib.REGISTRY[i].uses_cache) \
+    + ["singular+inc"]
+
+
+# ---------------------------------------------------------------------------
+# Radix index mechanics (no model involved)
+# ---------------------------------------------------------------------------
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_index_insert_lookup_full_and_partial(tiny_cfg):
+    pool = PagePool(tiny_cfg, n_pages=32, page_size=PAGE)
+    idx = PrefixIndex(PAGE)
+    key = (CANVAS, "spec")
+    prompt = _toks(*range(10))            # 2 full pages + 2 loose tokens
+    pages = pool.alloc(N_LOG)             # path(2) + tail(2) for row=16
+    assert idx.insert(key, prompt, pages) == []
+    # exact re-lookup: full hit, all 4 pages in order
+    m = idx.lookup(key, prompt)
+    assert m is not None and m.full and list(m.pages) == pages
+    # same pages, different tail tokens: partial hit on the 2 full pages
+    m2 = idx.lookup(key, _toks(*range(8), 99, 98))
+    assert m2 is not None and not m2.full and list(m2.pages) == pages[:2]
+    # extension: longer prompt matches the page-aligned prefix
+    m3 = idx.lookup(key, _toks(*range(13)))
+    assert m3 is not None and not m3.full and list(m3.pages) == pages[:2]
+    # partial_ok=False keeps only full hits
+    assert idx.lookup(key, _toks(*range(13)), partial_ok=False) is None
+    # a different layout root never matches
+    assert idx.lookup((CANVAS * 2, "spec"), prompt) is None
+    # first publisher wins: re-inserting the same path rejects the dupes
+    dup = pool.alloc(N_LOG)
+    assert sorted(idx.insert(key, prompt, dup)) == sorted(dup)
+
+
+def test_index_eviction_lru_and_refcount_gating(tiny_cfg):
+    pool = PagePool(tiny_cfg, n_pages=32, page_size=PAGE)
+    idx = PrefixIndex(PAGE)
+    key = (CANVAS, "spec")
+    pa = pool.alloc(N_LOG)
+    pb = pool.alloc(N_LOG)
+    idx.insert(key, _toks(*range(10)), pa)
+    idx.insert(key, _toks(*range(100, 110)), pb)
+    idx.lookup(key, _toks(*range(10)))    # touch A: B becomes LRU
+    before = pool.available
+    freed = idx.evict(pool, 1)            # evicts B's tail first (LRU)
+    assert freed >= 1 and pool.available == before + freed
+    assert idx.lookup(key, _toks(*range(10))).full   # A survives
+    # reader holds block eviction entirely
+    m = idx.lookup(key, _toks(*range(10)))
+    pool.retain(list(m.pages))
+    assert idx.evict(pool, 64) < idx.held_pages + 64  # can't free A
+    assert idx.lookup(key, _toks(*range(10))).full
+    pool.release(list(m.pages))
+    idx.evict(pool, 64)
+    assert idx.held_pages == 0
+    idx.clear(pool)
+    assert pool.used == 0 and not pool.refcounts
+
+
+def test_index_deep_eviction_is_leaf_first(tiny_cfg):
+    """Evicting a mid-path node before its descendants would leave
+    unreachable pages; eviction must free deepest entries first."""
+    pool = PagePool(tiny_cfg, n_pages=64, page_size=PAGE)
+    idx = PrefixIndex(PAGE)
+    key = (CANVAS, "spec")
+    idx.insert(key, _toks(*range(8)), pool.alloc(N_LOG))       # 2+2
+    idx.insert(key, _toks(*range(12)), [None, None]
+               + pool.alloc(2))                                # deepen
+    # evict everything one page at a time; at every point a lookup walk
+    # never crosses a page-less node into a page-bearing one
+    while idx.held_pages:
+        idx.evict(pool, 1)
+
+        def check(node, parent_has):
+            ok = True
+            for child in node.children.values():
+                if child.page is not None and not parent_has:
+                    return False
+                ok = ok and check(child, child.page is not None)
+            return ok
+
+        for root in idx.roots.values():
+            assert check(root, True)
+    assert pool.used == 0
+
+
+# ---------------------------------------------------------------------------
+# Partial prefill bit-exactness (the suffix-only forward)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ident", CACHED_IDENTS)
+def test_prefill_partial_matches_cold(tiny_cfg, tiny_params, ident):
+    """Given exact prefix K/V, ``prefill_partial`` reproduces the cold
+    prefill's suffix rows up to XLA op-scheduling error (the cold path
+    compiles a layer scan, the partial path an unrolled loop — fusion
+    grouping, not math, differs), and writes exact zeros at prefix
+    rows so the zero-page write table drops them."""
+    cfg, params = tiny_cfg, tiny_params
+    strat = _test_instance(ident)
+    proxies = strat.build_proxies(params, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, CANVAS), 0,
+                              cfg.vocab_size - 1)
+    kv = jnp.asarray([CANVAS, CANVAS], jnp.int32)
+    _, cold = decoding.prefill(params, cfg, {"tokens": toks}, proxies,
+                               strat, kv_len=kv)
+    view = {kind: {nm: bufs[nm] for nm in ("k", "v")}
+            for kind, bufs in cold.items()}
+    s0 = 8
+    part = decoding.prefill_partial(params, cfg, {"tokens": toks}, view,
+                                    s0, kv_len=kv, spa_proxies=proxies,
+                                    strategy=strat)
+    for kind, bufs in part.items():
+        for name, val in bufs.items():
+            np.testing.assert_allclose(
+                np.asarray(val)[:, :, s0:].astype(np.float32),
+                np.asarray(cold[kind][name])[:, :, s0:]
+                .astype(np.float32),
+                rtol=2e-3, atol=1e-5, err_msg=f"{ident}:{kind}:{name}")
+            assert np.abs(np.asarray(val)[:, :, :s0]).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Hit-decode == cold-decode (headline guarantee)
+# ---------------------------------------------------------------------------
+
+def _cold_attach(cfg, params, strat, backend, pool, pages, tokens,
+                 active, arenas):
+    pt = np.asarray([pool.page_table_row(pages, CANVAS)], np.int32)
+    sess = DecodeSession(params, cfg, strategy=strat, backend=backend)
+    sess.attach(tokens, active=jnp.asarray(active),
+                kv_len=np.asarray([CANVAS], np.int32),
+                arenas=arenas, page_table=pt)
+    return sess
+
+
+def _hit_attach(cfg, params, strat, backend, pool, shared_pages, m,
+                tokens, active, arenas_prefill):
+    """Attach with the first ``m`` logical pages shared (read-only) and
+    the rest private; m == N_LOG is a full hit (no prefill forward)."""
+    own = pool.alloc(N_LOG)
+    pt_pages = list(shared_pages[:m]) + own[m:]
+    pt = np.asarray([pool.page_table_row(pt_pages, CANVAS)], np.int32)
+    pool.retain(list(shared_pages[:m]))
+    spec = SharedPrefix(row=0, pages=tuple(shared_pages[:m]),
+                        reserve=tuple(own[:m]))
+    sess = DecodeSession(params, cfg, strategy=strat, backend=backend)
+    sess.attach(tokens, active=jnp.asarray(active),
+                kv_len=np.asarray([CANVAS], np.int32),
+                arenas=arenas_prefill, page_table=pt, shared=[spec])
+    return sess
+
+
+def _gather_pages(arenas, pages):
+    from repro.kernels.backend import XLA_BACKEND
+    pt = jnp.asarray([pages], jnp.int32)
+    return jax.tree.map(
+        lambda a: np.asarray(XLA_BACKEND.gather_pages(a, pt)), arenas)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("ident", CACHED_IDENTS)
+def test_prefix_hit_decode_byte_identical(tiny_cfg, tiny_params, ident,
+                                          backend):
+    """Acceptance: a FULL prefix hit (the only hit kind an exact prompt
+    rematch can produce — full runs are always published) decodes
+    byte-identically to the cold decode, in both the host loop and the
+    compiled loop; a PARTIAL hit attaches, partial-prefills, decodes to
+    completion; and in every case the shared (index) pages survive the
+    hit decode byte-unchanged (copy-on-write)."""
+    cfg, params = tiny_cfg, tiny_params
+    strat = _test_instance(ident)
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, cfg.vocab_size - 1, 8).astype(np.int32)
+    tokens = np.full((1, CANVAS), cfg.mask_id, np.int32)
+    tokens[0, :8] = p
+    active = np.zeros((1, CANVAS), bool)
+    active[0, 8:16] = True
+    pool = PagePool(cfg, n_pages=1 + 8 * N_LOG, page_size=PAGE,
+                    strategy=strat)
+    arenas = pool.arenas_for(strat)
+
+    pub = pool.alloc(N_LOG)       # "published" pages: prefill-time states
+    sa = _cold_attach(cfg, params, strat, backend, pool, pub, tokens,
+                      active, arenas)
+    arenas_prefill = sa.state.cache.arenas
+    shared_before = _gather_pages(arenas_prefill, pub)
+    cold_run, _ = sa.run()
+
+    sc = _cold_attach(cfg, params, strat, backend, pool, pool.alloc(N_LOG),
+                      tokens, active, arenas_prefill)
+    cold_compiled, _ = sc.run_compiled()
+    np.testing.assert_array_equal(np.asarray(cold_run),
+                                  np.asarray(cold_compiled))
+
+    for m, mode in ((N_LOG, "run"), (N_LOG, "run_compiled"),
+                    (2, "run"), (2, "run_compiled")):
+        sb = _hit_attach(cfg, params, strat, backend, pool, pub, m,
+                         tokens, active, arenas_prefill)
+        toks_b, _ = sb.run() if mode == "run" else sb.run_compiled()
+        if m == N_LOG:   # full hit: bit-exact end to end
+            np.testing.assert_array_equal(
+                np.asarray(cold_run), np.asarray(toks_b),
+                err_msg=f"{ident}/{backend}/{mode}/m={m}")
+        else:            # partial hit: drift-managed, must complete
+            assert int(np.max(np.asarray(sb.state.n_masked))) == 0
+        # COW: the hit decode never mutated the shared pages
+        shared_after = _gather_pages(sb.state.cache.arenas, pub)
+        jax.tree.map(np.testing.assert_array_equal, shared_before,
+                     shared_after)
+
+
+def test_cow_commit_never_mutates_sibling_view(tiny_cfg, tiny_params):
+    """Two concurrent readers of the same shared pages: one decodes
+    (commits -> COW), the sibling's gathered view of its prefix is
+    byte-unchanged, and both decodes produce identical tokens."""
+    cfg, params = tiny_cfg, tiny_params
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab_size - 1, 8).astype(np.int32)
+    tokens = np.full((1, CANVAS), cfg.mask_id, np.int32)
+    tokens[0, :8] = p
+    active = np.zeros((1, CANVAS), bool)
+    active[0, 8:16] = True
+    pool = PagePool(cfg, n_pages=1 + 4 * N_LOG, page_size=PAGE,
+                    strategy=strat)
+    arenas = pool.arenas_for(strat)
+    pub = pool.alloc(N_LOG)
+    sa = _cold_attach(cfg, params, strat, "xla", pool, pub, tokens,
+                      active, arenas)
+    arenas_prefill = sa.state.cache.arenas
+
+    sb = _hit_attach(cfg, params, strat, "xla", pool, pub, 2, tokens,
+                     active, arenas_prefill)
+    sc = _hit_attach(cfg, params, strat, "xla", pool, pub, 2, tokens,
+                     active, arenas_prefill)
+    view_c0 = _gather_pages(sc.state.cache.arenas, pub[:2])
+    for _ in range(3):
+        sb.step()                 # commits into (COW copies of) pages
+    # sibling C still reads the pristine prefill states
+    view_c1 = _gather_pages(sc.state.cache.arenas, pub[:2])
+    jax.tree.map(np.testing.assert_array_equal, view_c0, view_c1)
+    toks_b, _ = sb.run()
+    toks_c, _ = sc.run()
+    np.testing.assert_array_equal(np.asarray(toks_b), np.asarray(toks_c))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, params, strategy=None, pool_pages=40, **kw):
+    return ServingEngine(cfg, params, max_batch=2, canvas_len=CANVAS,
+                         pool_pages=pool_pages, page_size=PAGE,
+                         strategy=strategy, prefix_cache=True, **kw)
+
+
+def test_engine_resubmit_is_full_hit_and_byte_identical(tiny_cfg,
+                                                        tiny_params):
+    """The engine-level headline check: a resubmitted prompt full-hits
+    the index, skips its prefill forward, and decodes byte-identically
+    to its own cold first run."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    eng = _engine(tiny_cfg, tiny_params, strat)
+    rng = np.random.default_rng(0)
+    p = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    u0 = eng.submit(p, gen_len=8)
+    eng.run()
+    assert eng.stats.prefix_hits == 0
+    u1 = eng.submit(p, gen_len=8)
+    eng.run()
+    assert eng.stats.prefix_full_hits == 1
+    assert eng.stats.prefix_tokens_saved == CANVAS
+    out = {r.uid: r.output for r in eng.done}
+    np.testing.assert_array_equal(out[u0], out[u1])
+
+
+def test_engine_multiturn_extension_deepens_the_trie(tiny_cfg,
+                                                     tiny_params):
+    """A growing transcript partial-hits the previous turn's pages; the
+    unmatched extension is published, so resubmitting the longer prompt
+    full-hits.  ``row_len`` reservation keeps the layout key fixed."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    eng = _engine(tiny_cfg, tiny_params, strat, pool_pages=64)
+    rng = np.random.default_rng(1)
+    p1 = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    eng.submit(p1, gen_len=4, row_len=CANVAS)
+    eng.run()
+    p2 = np.concatenate([p1, rng.integers(
+        0, tiny_cfg.vocab_size - 1, 4).astype(np.int32)])
+    eng.submit(p2, gen_len=4, row_len=CANVAS)      # partial hit (2 pages)
+    eng.run()
+    assert eng.stats.prefix_hits == 1
+    assert eng.stats.prefix_full_hits == 0
+    assert eng.stats.prefix_tokens_saved == 8
+    u2 = eng.submit(p2, gen_len=4, row_len=CANVAS)  # full hit now
+    eng.run()
+    assert eng.stats.prefix_full_hits == 1
+    assert [r for r in eng.done if r.uid == u2][0].output is not None
+
+
+def test_engine_prefix_off_matches_on_for_cold_traffic(tiny_cfg,
+                                                       tiny_params):
+    """With only distinct prompts (all misses), the prefix engine serves
+    byte-identically to a prefix-off engine — publication copies never
+    leak into decode state."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, tiny_cfg.vocab_size - 1, 6 + i)
+               .astype(np.int32) for i in range(4)]
+
+    def serve(prefix_cache):
+        eng = ServingEngine(tiny_cfg, tiny_params, max_batch=2,
+                            canvas_len=CANVAS, pool_pages=40,
+                            page_size=PAGE, strategy=strat,
+                            prefix_cache=prefix_cache)
+        uids = [eng.submit(p, gen_len=6) for p in prompts]
+        eng.run()
+        out = {r.uid: r.output for r in eng.done}
+        return [out[u] for u in uids]
+
+    for a, b in zip(serve(True), serve(False)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_preemption_with_prefix_cache_matches_off(tiny_cfg,
+                                                         tiny_params):
+    """Preempt/resume under a tight pool with the index competing for
+    pages: same outputs as a prefix-off engine (resumed requests never
+    consult the index), and the index evicts instead of starving."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    rng = np.random.default_rng(7)
+    smalls = [rng.integers(0, tiny_cfg.vocab_size - 1, 4)
+              .astype(np.int32) for _ in range(2)]
+    big = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+
+    def serve(prefix_cache):
+        eng = ServingEngine(tiny_cfg, tiny_params, max_batch=2,
+                            canvas_len=CANVAS, pool_pages=5,
+                            page_size=PAGE, strategy=strat,
+                            prefix_cache=prefix_cache)
+        uids = [eng.submit(p, gen_len=4) for p in smalls]
+
+        def on_step(e):
+            if e.stats.steps == 2:
+                uids.append(e.submit(big, gen_len=8, priority=5))
+
+        eng.run(on_step=on_step)
+        out = {r.uid: r.output for r in eng.done}
+        return [out[u] for u in uids], eng
+
+    out_on, eng_on = serve(True)
+    out_off, _ = serve(False)
+    assert eng_on.stats.preemptions > 0
+    for a, b in zip(out_on, out_off):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_admission_evicts_index_before_preempting(tiny_cfg,
+                                                         tiny_params):
+    """A queued request short on pages reclaims reader-less index pages
+    (LRU) before any running request is preempted."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    eng = ServingEngine(tiny_cfg, tiny_params, max_batch=2,
+                        canvas_len=CANVAS, pool_pages=9, page_size=PAGE,
+                        strategy=strat, prefix_cache=True)
+    rng = np.random.default_rng(9)
+    eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+               .astype(np.int32), gen_len=8)
+    eng.run()
+    assert eng.stats.prefix_published == N_LOG    # index holds 4 of 8
+    for _ in range(2):                            # 8 pages, only 4 free
+        eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+                   .astype(np.int32), gen_len=8)
+    eng.run()
+    assert eng.stats.prefix_evicted_pages > 0
+    assert eng.stats.preemptions == 0
+    assert eng.stats.requests_done == 3
+
+
+def test_engine_no_eviction_for_unadmittable_candidate(tiny_cfg,
+                                                       tiny_params):
+    """A candidate that cannot be admitted even after eviction (no free
+    slot, no preemptible victims) must NOT destroy LRU index entries —
+    eviction only runs when it can actually complete an admission."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    eng = ServingEngine(tiny_cfg, tiny_params, max_batch=1,
+                        canvas_len=CANVAS, pool_pages=10, page_size=PAGE,
+                        strategy=strat, prefix_cache=True)
+    rng = np.random.default_rng(13)
+    eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+               .astype(np.int32), gen_len=8)
+    eng.run()                              # publishes 4 index pages
+    assert eng.prefix.held_pages == N_LOG
+    eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+               .astype(np.int32), gen_len=8, priority=5)
+    low = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    s0 = eng.stats.steps
+
+    def on_step(e):
+        if e.stats.steps == s0 + 1:        # slot held by priority 5:
+            e.submit(low, gen_len=8)       # low-pri candidate stalls
+
+    eng.run(on_step=on_step)
+    assert eng.stats.requests_done == 3
+    assert eng.stats.prefix_evicted_pages == 0
+    assert eng.prefix.held_pages == N_LOG  # entry survived the stall
+
+
+def test_engine_duplicate_prompts_publish_once(tiny_cfg, tiny_params):
+    """Identical prompts admitted in ONE batch (retries / n>1 samples)
+    all plan before the first publishes; the read-only probe must stop
+    the later ones from alloc+copying a full run that insert would
+    reject wholesale."""
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    eng = ServingEngine(tiny_cfg, tiny_params, max_batch=4,
+                        canvas_len=CANVAS, pool_pages=40, page_size=PAGE,
+                        strategy=strat, prefix_cache=True)
+    rng = np.random.default_rng(17)
+    p = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+    uids = [eng.submit(p, gen_len=8) for _ in range(4)]
+    eng.run()
+    assert eng.stats.requests_done == 4
+    assert eng.stats.prefix_published == N_LOG      # one run, not four
+    assert eng.stats.prefix_publish_skipped == 0
+    assert eng.prefix.held_pages == N_LOG
+    out = {r.uid: r.output for r in eng.done}
+    for u in uids[1:]:                              # rows are identical
+        np.testing.assert_array_equal(out[uids[0]], out[u])
+
+
+def test_engine_submit_rejects_unschedulable_gen_len(tiny_cfg,
+                                                     tiny_params):
+    eng = _engine(tiny_cfg, tiny_params, SPACache(rank=16))
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(4, dtype=np.int32), gen_len=0)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(4, dtype=np.int32), gen_len=CANVAS + 1)
