@@ -25,6 +25,23 @@ in ``BENCH_serving.json``:
                 "prefill_tokens_saved": 264,
                 "prefix_over_cold_tok_s": 1.6}}
 
+Part 3 is the online serving benchmark (DESIGN.md §8): arrival-process
+workloads — Poisson, bursty, and a closed-loop multi-turn chat trace —
+served under per-request latency SLOs, with **goodput** (SLO-met
+completions per unit time) as the headline metric.  Time is virtual: a
+``StepClock`` advances one tick per engine step, so TTFT/TPOT/e2e and
+goodput count engine steps and the numbers are machine-independent.
+Each open-loop workload runs twice over the same arrivals: an *offline*
+baseline (FIFO admission, no SLO policy — the old batch loop's
+behaviour) and the *SLO-aware* front-end policy (urgency boost + EDF
+ordering + hopeless-request shedding).  The bench asserts the headline
+claim: at a load where the offline loop misses >=30% of TTFT deadlines,
+the SLO-aware policy achieves strictly higher goodput while every
+request completed by both runs decodes byte-identically.  A final
+section pushes a short Poisson workload through the in-process
+``AsyncFrontend`` (real engine thread + asyncio bridge, no sockets) so
+CI exercises the full online stack.
+
 Wired into ``benchmarks/run.py --smoke`` (CI bench-smoke job).
 """
 from __future__ import annotations
@@ -186,6 +203,262 @@ def _serve_prefix(cfg, params, reqs, prefix_cache: bool) -> dict:
     return out
 
 
+def _online_classes(cfg, rng):
+    """Two request classes (DESIGN.md §8): *interactive* — short gen,
+    tight TTFT target; *batch* — long gen, loose e2e-only deadline.
+    SLO targets are in virtual seconds (= engine steps)."""
+    from repro.serving.slo import SLO
+    interactive = dict(p_len=6, gen=6, slo=SLO(ttft=8.0, deadline=60.0))
+    batch = dict(p_len=8, gen=16, slo=SLO(deadline=400.0))
+    def draw(i):
+        cls = interactive if rng.random() < 0.6 else batch
+        prompt = rng.integers(0, cfg.vocab_size - 1,
+                              cls["p_len"]).astype(np.int32)
+        return (i, prompt, cls["gen"], cls["slo"])
+    return draw
+
+
+def _poisson_arrivals(cfg, n, rate, seed=11):
+    """Open-loop Poisson process: exponential inter-arrival gaps at
+    ``rate`` requests per virtual second (engine step)."""
+    rng = np.random.default_rng(seed)
+    draw = _online_classes(cfg, rng)
+    t, out = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        out.append((t,) + draw(i))
+    return out
+
+
+def _bursty_arrivals(cfg, n, burst, gap, seed=13):
+    """Bursty arrivals: ``burst`` requests land together every ``gap``
+    virtual seconds (think: a page load fanning out, or synchronized
+    retries)."""
+    rng = np.random.default_rng(seed)
+    draw = _online_classes(cfg, rng)
+    out = []
+    for i in range(n):
+        out.append((float((i // burst) * gap),) + draw(i))
+    return out
+
+
+def _online_engine(cfg, params, slo_aware, clock):
+    from repro.core.strategy import SPACache
+    from repro.serving.engine import ServingEngine
+    from repro.serving.slo import SLOPolicy
+    # pool sized to the live batch: an overloaded arrival process must
+    # queue, which is exactly what separates FIFO from SLO-aware
+    # admission.  refresh_interval=1 keeps preemption/resume
+    # byte-identical (DESIGN.md §5), so both runs decode the same
+    # tokens per request no matter how scheduling interleaves them.
+    return ServingEngine(
+        cfg, params, max_batch=4, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=1),
+        pool_pages=4 * (CANVAS // PAGE) + 2, page_size=PAGE,
+        prefix_cache=True,
+        slo_policy=(SLOPolicy(boost=2, urgency_frac=0.6)
+                    if slo_aware else None),
+        clock=clock)
+
+
+def _serve_online(cfg, params, arrivals, slo_aware) -> dict:
+    """Serve one arrival trace to completion; time is virtual (one
+    clock tick per engine step, idle gaps jump to the next arrival)."""
+    from repro.serving.slo import StepClock
+    clock = StepClock(tick=1.0)
+    eng = _online_engine(cfg, params, slo_aware, clock)
+    # untimed warm-up: compile the lane step + both prefill shapes
+    for _, _, prompt, gen, _ in arrivals[:2] + arrivals[-2:]:
+        eng.submit(prompt, gen)
+    eng.run()
+    eng.done.clear()
+    eng.stats = type(eng.stats)()
+    eng.pool.reset_telemetry()
+    clock.t = 0.0
+
+    pending = sorted(arrivals, key=lambda a: (a[0], a[1]))
+    uid_to_idx = {}
+
+    def feed(e):
+        while pending and pending[0][0] <= clock.t + 1e-9:
+            _, idx, prompt, gen, slo = pending.pop(0)
+            uid_to_idx[e.submit(prompt, gen, slo=slo)] = idx
+
+    def on_step(e):
+        clock.advance()
+        feed(e)
+
+    t0 = time.time()
+    feed(eng)
+    while True:
+        stats = eng.run(max_steps=100_000, on_step=on_step)
+        if not pending:
+            break
+        clock.t = max(clock.t, pending[0][0])   # idle to next arrival
+        feed(eng)
+    wall = time.time() - t0
+
+    outputs, ttft_n, ttft_miss = {}, 0, 0
+    import math
+    for r in eng.done:
+        if r.output is not None and not (r.shed or r.canceled):
+            outputs[uid_to_idx[r.uid]] = r.output.tobytes()
+        if r.slo is not None and math.isfinite(r.slo.ttft):
+            ttft_n += 1
+            late = (r.first_token_at is None
+                    or r.first_token_at - r.submitted_at > r.slo.ttft)
+            ttft_miss += int(late)
+    pct = stats.percentiles()
+    return {
+        "metrics": {
+            "requests": len(arrivals),
+            "completed": len(outputs),
+            "shed": stats.requests_shed,
+            "virtual_s": round(clock.t, 1),
+            "wall_s": round(wall, 4),
+            "steps": stats.steps,
+            "slo_met": stats.slo_met,
+            "slo_missed": stats.slo_missed,
+            "goodput_per_s": round(stats.goodput(clock.t), 4),
+            "ttft_deadline_miss_rate": round(ttft_miss / max(ttft_n, 1),
+                                             3),
+            "ttft_p50_s": round(pct["ttft_p50"], 2),
+            "ttft_p95_s": round(pct["ttft_p95"], 2),
+            "tpot_p50_s": round(pct["tpot_p50"], 2),
+            "tpot_p95_s": round(pct["tpot_p95"], 2),
+            "preemptions": stats.preemptions,
+        },
+        "outputs": outputs,
+    }
+
+
+def _serve_chat(cfg, params, n_clients, turns) -> dict:
+    """Closed-loop multi-turn chat: each client fires turn k+1 a fixed
+    think time after turn k completes, with the conversation so far
+    (previous prompt + generated tokens + a fresh user message)
+    prepended.  Per-turn interactive SLOs; SLO-aware policy on."""
+    from repro.serving.slo import SLO, StepClock
+    clock = StepClock(tick=1.0)
+    eng = _online_engine(cfg, params, True, clock)
+    rng = np.random.default_rng(17)
+    slo = SLO(ttft=10.0, deadline=80.0)
+    gen, think = 5, 4.0
+    first = {c: rng.integers(0, cfg.vocab_size - 1, 5).astype(np.int32)
+             for c in range(n_clients)}
+    eng.submit(first[0], gen)               # untimed compile warm-up
+    eng.run()
+    eng.done.clear()
+    eng.stats = type(eng.stats)()
+    eng.pool.reset_telemetry()
+    clock.t = 0.0
+
+    pending = [(float(c), c, first[c]) for c in range(n_clients)]
+    uid_client, turn_of, harvested = {}, {c: 1 for c in range(n_clients)}, 0
+
+    def feed(e):
+        while pending and pending[0][0] <= clock.t + 1e-9:
+            _, c, prompt = pending.pop(0)
+            uid_client[e.submit(prompt, gen, slo=slo)] = (c, prompt)
+
+    def harvest_turns():
+        # closed loop: a finished turn schedules the client's next one
+        nonlocal harvested
+        while harvested < len(eng.done):
+            r = eng.done[harvested]
+            harvested += 1
+            if r.uid not in uid_client or r.output is None:
+                continue
+            c, prompt = uid_client[r.uid]
+            if turn_of[c] >= turns:
+                continue
+            turn_of[c] += 1
+            user = rng.integers(0, cfg.vocab_size - 1, 2).astype(np.int32)
+            nxt = np.concatenate([prompt, r.output, user]).astype(np.int32)
+            if len(nxt) + gen <= CANVAS:
+                pending.append((clock.t + think, c, nxt))
+                pending.sort(key=lambda a: a[0])
+
+    def on_step(e):
+        clock.advance()
+        harvest_turns()
+        feed(e)
+
+    feed(eng)
+    while True:
+        stats = eng.run(max_steps=100_000, on_step=on_step)
+        # requests finishing on the last step are harvested after run()
+        harvest_turns()
+        if not pending:
+            break
+        clock.t = max(clock.t, pending[0][0])
+        feed(eng)
+    pct = stats.percentiles()
+    return {
+        "clients": n_clients, "turns_per_client": turns,
+        "turns_served": stats.requests_done,
+        "virtual_s": round(clock.t, 1),
+        "slo_met": stats.slo_met,
+        "goodput_per_s": round(stats.goodput(clock.t), 4),
+        "ttft_p95_s": round(pct["ttft_p95"], 2),
+        "prefix_hits": stats.prefix_hits,
+    }
+
+
+def _frontend_smoke(cfg, params, n_requests) -> dict:
+    """Push a short Poisson workload through the in-process
+    ``AsyncFrontend`` — real engine thread + asyncio event bridge, no
+    sockets — so the bench-smoke CI job exercises the online stack
+    end to end (ISSUE satellite: CI/tooling)."""
+    import asyncio
+    from repro.serving.frontend import AsyncFrontend
+    from repro.serving.slo import SLO, SLOPolicy
+    from repro.serving.engine import ServingEngine
+    from repro.core.strategy import SPACache
+    eng = ServingEngine(
+        cfg, params, max_batch=4, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=1),
+        pool_pages=4 * (CANVAS // PAGE) + 2, page_size=PAGE,
+        slo_policy=SLOPolicy(boost=2, urgency_frac=0.6))
+    rng = np.random.default_rng(23)
+
+    async def client(front, i):
+        await asyncio.sleep(float(rng.exponential(0.05)))
+        prompt = rng.integers(0, cfg.vocab_size - 1, 6).astype(np.int32)
+        toks, terminal = [], None
+        async for ev in front.generate(prompt, 6,
+                                       slo=SLO(ttft=30.0, deadline=120.0)):
+            if ev.kind == "token":
+                toks.extend(ev.tokens)
+            else:
+                terminal = ev.kind
+        return terminal, len(toks)
+
+    async def main():
+        front = AsyncFrontend(eng, max_steps=4096)
+        async with front:
+            results = await asyncio.gather(
+                *(client(front, i) for i in range(n_requests)))
+        return results
+
+    t0 = time.time()
+    results = asyncio.run(main())
+    wall = time.time() - t0
+    done = sum(1 for kind, _ in results if kind == "done")
+    tokens = sum(n for kind, n in results if kind == "done")
+    assert done + eng.stats.requests_shed >= n_requests
+    for kind, n in results:
+        assert kind != "done" or n == 6, "stream lost tokens"
+    return {
+        "requests": n_requests, "completed": done,
+        "shed": eng.stats.requests_shed,
+        "streamed_tokens": tokens,
+        "wall_s": round(wall, 3),
+        "slo_met": eng.stats.slo_met,
+    }
+
+
 def run(quick: bool = False) -> dict:
     cfg, params = _build()
     n_requests = 6 if quick else 16
@@ -225,14 +498,60 @@ def run(quick: bool = False) -> dict:
         "prefix_over_cold_tok_s": round(speed, 3),
     }
 
+    # Part 3: online serving under SLOs (DESIGN.md §8) — goodput is
+    # the headline.  Same arrivals served twice: offline FIFO baseline
+    # vs SLO-aware (boost + EDF + shed); completed outputs must match
+    # byte-for-byte (same strategy/scheduler/backend, row-independent
+    # decode + byte-identical preemption resume).
+    n_online = 12 if quick else 24
+    results["online"] = {
+        "slo_policy": {"boost": 2, "urgency_frac": 0.6, "shed": True},
+        "classes": {
+            "interactive": {"gen": 6, "ttft_s": 8.0, "deadline_s": 60.0,
+                            "share": 0.6},
+            "batch": {"gen": 16, "deadline_s": 400.0, "share": 0.4},
+        },
+    }
+    for name, arrivals in (
+            ("poisson", _poisson_arrivals(cfg, n_online, rate=0.5)),
+            ("bursty", _bursty_arrivals(cfg, n_online, burst=12,
+                                        gap=12.0))):
+        off = _serve_online(cfg, params, arrivals, slo_aware=False)
+        slo = _serve_online(cfg, params, arrivals, slo_aware=True)
+        common = sorted(set(off["outputs"]) & set(slo["outputs"]))
+        byte_ok = all(off["outputs"][i] == slo["outputs"][i]
+                      for i in common)
+        assert byte_ok, f"{name}: completed outputs diverged"
+        m_off, m_slo = off["metrics"], slo["metrics"]
+        assert m_off["ttft_deadline_miss_rate"] >= 0.30, \
+            f"{name}: offline baseline not saturated " \
+            f"({m_off['ttft_deadline_miss_rate']:.0%} TTFT misses)"
+        assert m_slo["goodput_per_s"] > m_off["goodput_per_s"], \
+            f"{name}: SLO-aware goodput not strictly higher"
+        results["online"][name] = {
+            "offline": m_off, "slo_aware": m_slo,
+            "common_completed": len(common),
+            "byte_identical_completed": byte_ok,
+            "goodput_gain": round(m_slo["goodput_per_s"]
+                                  / max(m_off["goodput_per_s"], 1e-9),
+                                  3),
+        }
+    results["online"]["chat"] = _serve_chat(
+        cfg, params, n_clients=3 if quick else 4, turns=3)
+    results["online"]["frontend_smoke"] = _frontend_smoke(
+        cfg, params, 4 if quick else 8)
+
     out_path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serving.json")
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
     print(json.dumps(results, indent=2))
+    gp = results["online"]["poisson"]["goodput_gain"]
+    gb = results["online"]["bursty"]["goodput_gain"]
     print(f"[BENCH_serving.json written; paged/dense throughput at 1x = "
           f"{r1:.2f}; prefix-cache speedup = {speed:.2f} at "
-          f"{results['prefix']['hit_rate']:.0%} hit rate]")
+          f"{results['prefix']['hit_rate']:.0%} hit rate; "
+          f"SLO goodput gain = {gp:.2f}x (poisson) / {gb:.2f}x (bursty)]")
     return results
 
 

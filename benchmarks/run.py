@@ -47,7 +47,8 @@ def main(argv=None) -> None:
         "roofline": ("Roofline table", roofline.run),
         "kernels": ("Kernel microbench (BENCH_kernels.json)",
                     bench_kernels.run),
-        "serving": ("Serving runtime: paged pool vs dense slab "
+        "serving": ("Serving runtime: paged pool, prefix cache, online "
+                    "goodput-under-SLO + front-end smoke "
                     "(BENCH_serving.json)", bench_serving.run),
     }
     if args.smoke:

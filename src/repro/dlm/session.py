@@ -91,6 +91,14 @@ class StepEvent:
     committed: np.ndarray        # [B, ring] positions (-1 pad)
     done: bool
     refreshed: bool              # a full cache rebuild preceded this step
+    # token VALUES at the committed ring positions (-1 at ring pads):
+    # what a streaming consumer actually wants to print.  NOTE the ring
+    # caps at ``settings.commit_ring`` positions per step — wide
+    # parallel commits overflow it, so exact per-token streams should
+    # diff ``tokens`` against the previous step instead (the serving
+    # front-end does; DESIGN.md §8).
+    committed_tokens: Optional[np.ndarray] = None
+    tokens: Optional[np.ndarray] = None   # [B, N] full canvas snapshot
 
 
 class DecodeSession:
@@ -136,6 +144,11 @@ class DecodeSession:
         self.refresh_count = 0
         self._last_step_refreshed = False
         self._gen_span: Optional[Tuple[int, int]] = None  # semi-AR bounds
+        # one host transfer of the canvas per step, shared by every
+        # consumer (harvest, streaming diff, events()) — keyed on the
+        # state object, which is replaced by each step/row surgery
+        self._host_tokens: Optional[np.ndarray] = None
+        self._host_tokens_for: Optional[DecodeState] = None
 
     # ------------------------------------------------------------------
     # State construction
@@ -402,6 +415,16 @@ class DecodeSession:
     def tokens(self) -> jax.Array:
         return self.state.tokens
 
+    def host_tokens(self) -> np.ndarray:
+        """Host copy of the canvas, fetched AT MOST ONCE per state (the
+        serving engine's per-step streaming diff and its harvest both
+        read it; without the cache each would pay its own transfer)."""
+        assert self.state is not None
+        if self._host_tokens_for is not self.state:
+            self._host_tokens = np.asarray(self.state.tokens)
+            self._host_tokens_for = self.state
+        return self._host_tokens
+
     def run(self, max_steps: Optional[int] = None
             ) -> Tuple[jax.Array, Dict[str, Any]]:
         """Step until every active slot is committed (or max_steps)."""
@@ -514,11 +537,18 @@ class DecodeSession:
         for _ in range(max_steps):
             info = self.step()
             done = self.done
+            committed = np.asarray(self.state.committed)
+            toks = self.host_tokens()
+            ctoks = np.where(committed >= 0,
+                             np.take_along_axis(
+                                 toks, np.maximum(committed, 0), axis=-1),
+                             -1).astype(np.int32)
             yield StepEvent(
                 step=self.steps_taken,
                 n_committed=np.asarray(info["n_committed"]),
-                committed=np.asarray(self.state.committed),
-                done=done, refreshed=self._last_step_refreshed)
+                committed=committed,
+                done=done, refreshed=self._last_step_refreshed,
+                committed_tokens=ctoks, tokens=toks)
             if done:
                 break
 

@@ -7,6 +7,13 @@ none, ...) without touching the model config.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llada-8b \
       --requests 8 --gen-len 16 --strategy singular
+
+``--serve`` switches from the offline batch loop to the online
+front-end (DESIGN.md §8): an asyncio HTTP server on ``--port`` that
+streams per-token ndjson events per request, with SLO-aware admission
+(``--slo-ttft`` / ``--slo-deadline``, seconds; 0 disables the policy).
+``--client HOST:PORT`` instead runs a demo streaming client against a
+running server (see also ``examples/serve_stream.py``).
 """
 from __future__ import annotations
 
@@ -59,7 +66,23 @@ def main(argv=None):
                          "(paged mode only; default on)")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false")
+    ap.add_argument("--serve", action="store_true",
+                    help="online mode (DESIGN.md §8): run the asyncio "
+                         "streaming front-end instead of the offline "
+                         "batch loop")
+    ap.add_argument("--port", type=int, default=8411)
+    ap.add_argument("--slo-ttft", type=float, default=0.0,
+                    help="TTFT target (s) attached to demo/client "
+                         "requests; enables the SLO-aware policy")
+    ap.add_argument("--slo-deadline", type=float, default=0.0,
+                    help="e2e deadline (s) for demo/client requests")
+    ap.add_argument("--client", default="",
+                    help="HOST:PORT — run a streaming client against a "
+                         "running --serve front-end and exit")
     args = ap.parse_args(argv)
+
+    if args.client:
+        return _run_client(args)
 
     cfg = reduced(get_arch(args.arch))
     if args.ckpt:
@@ -81,14 +104,20 @@ def main(argv=None):
         strategy = (strategy or strategy_from_spec(cfg.spa)) \
             .with_backend(args.kernel_backend)
 
+    slo_policy = None
+    if args.slo_ttft or args.slo_deadline:
+        from repro.serving.slo import SLOPolicy
+        slo_policy = SLOPolicy()
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
         pool_pages=args.pool_pages, page_size=args.page_size,
-        prefix_cache=args.prefix_cache,
+        prefix_cache=args.prefix_cache, slo_policy=slo_policy,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
+    if args.serve:
+        return _serve_online(engine, args)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size - 1,
@@ -99,11 +128,7 @@ def main(argv=None):
           f"{stats.tokens_committed} tokens, {stats.steps} steps, "
           f"{stats.swaps} slot swaps, "
           f"{stats.tps(engine._wall):.1f} tok/s")
-    pct = stats.percentiles()
-    print(f"latency: e2e p50={pct['e2e_p50'] * 1e3:.0f}ms "
-          f"p95={pct['e2e_p95'] * 1e3:.0f}ms | queue-wait "
-          f"p50={pct['wait_p50'] * 1e3:.0f}ms "
-          f"p95={pct['wait_p95'] * 1e3:.0f}ms")
+    _print_latency(stats)
     if args.pool_pages:
         print(f"pool: {args.pool_pages} pages x {args.page_size} rows, "
               f"peak util {stats.peak_pool_util:.0%}, steady "
@@ -119,6 +144,84 @@ def main(argv=None):
                   f"{stats.prefix_evicted_pages} evicted")
     for req in engine.done[:3]:
         print(f"  req {req.uid}: out={req.output[:10]}...")
+    return 0
+
+
+def _print_latency(stats) -> None:
+    pct = stats.percentiles()
+    print(f"latency: e2e p50={pct['e2e_p50'] * 1e3:.0f}ms "
+          f"p95={pct['e2e_p95'] * 1e3:.0f}ms | queue-wait "
+          f"p50={pct['wait_p50'] * 1e3:.0f}ms "
+          f"p95={pct['wait_p95'] * 1e3:.0f}ms")
+    print(f"streaming: TTFT p50={pct['ttft_p50'] * 1e3:.0f}ms "
+          f"p95={pct['ttft_p95'] * 1e3:.0f}ms | TPOT "
+          f"p50={pct['tpot_p50'] * 1e3:.0f}ms "
+          f"p95={pct['tpot_p95'] * 1e3:.0f}ms | SLO "
+          f"{stats.slo_met} met / {stats.slo_missed} missed, "
+          f"{stats.requests_shed} shed, "
+          f"{stats.requests_canceled} canceled")
+
+
+def _serve_online(engine, args) -> int:
+    """``--serve``: run the asyncio streaming front-end until ^C."""
+    import asyncio
+
+    from repro.serving.frontend import AsyncFrontend
+
+    async def amain():
+        front = AsyncFrontend(engine, port=args.port, max_steps=4096)
+        await front.start(serve_http=True)
+        print(f"serving on http://{front.host}:{front.port} — "
+              f"POST /generate {{prompt, gen_len, slo?}} streams "
+              f"ndjson; GET /stats")
+        try:
+            await asyncio.Event().wait()      # until interrupted
+        finally:
+            await front.stop()
+            _print_latency(engine.stats)
+
+    try:
+        asyncio.run(amain())
+    except KeyboardInterrupt:
+        pass
+    return 0
+
+
+def _run_client(args) -> int:
+    """``--client HOST:PORT``: stream one demo request and print the
+    per-event arrivals (see also examples/serve_stream.py)."""
+    import asyncio
+    import time as _time
+
+    from repro.serving.frontend import fetch_stats, stream_request
+
+    host, _, port = args.client.partition(":")
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 128, 8).astype(np.int32)
+    slo = None
+    if args.slo_ttft or args.slo_deadline:
+        slo = {"ttft": args.slo_ttft or 1e9,
+               "deadline": args.slo_deadline or 1e9}
+
+    async def amain():
+        t0 = _time.time()
+        n = 0
+        async for ev in stream_request(host, int(port), prompt,
+                                       args.gen_len, slo=slo):
+            dt = _time.time() - t0
+            if ev["kind"] == "token":
+                n += len(ev["tokens"])
+                print(f"  +{dt * 1e3:7.1f}ms step {ev['step']:4d} "
+                      f"tokens {ev['tokens']}")
+            else:
+                print(f"  +{dt * 1e3:7.1f}ms {ev['kind']} "
+                      f"({n} tokens streamed)")
+        stats = await fetch_stats(host, int(port))
+        print(f"server: {stats['requests_done']} done, "
+              f"TTFT p50={stats['ttft_p50'] * 1e3:.0f}ms, "
+              f"TPOT p50={stats['tpot_p50'] * 1e3:.0f}ms")
+
+    asyncio.run(amain())
     return 0
 
 

@@ -51,6 +51,42 @@ byte-parity guarantee, so publication snapshots BEFORE the first step.
 Under admission pressure, least-recently-used index entries with no
 readers are evicted before any running request is preempted.
 
+Online serving (DESIGN.md §8): the engine doubles as the backend of an
+asyncio streaming front-end (``serving/frontend.py``).  Three pieces:
+
+  * **Thread-safe intake** — ``submit_threadsafe``/``cancel_threadsafe``
+    enqueue closures on a mailbox the engine thread drains at its
+    *overlap point*; the engine's own state is only ever touched from
+    the engine thread.
+  * **Double-buffered dispatch** — each loop iteration dispatches the
+    jitted device step, then does its host-side work (mailbox drain,
+    SLO shedding, prefix planning for the next admission candidate)
+    BEFORE the first host sync on the step's outputs, so admission and
+    planning overlap the in-flight device step instead of sitting on
+    the critical path.
+  * **Per-token events** — requests submitted with a ``sink`` (or
+    ``stream=True`` with an engine-level ``event_sink``) get a
+    :class:`RequestEvent` per newly committed token batch, produced by
+    diffing the canvas against a per-request emitted mask.  The mask
+    lives on the ``Request``, so a preempted-then-resumed request's
+    stream has no duplicated and no lost tokens (its committed canvas
+    is snapshot/restored; ``tests/test_serving.py``).
+
+SLO-aware scheduling (``serving/slo.py``): requests may carry an
+:class:`~repro.serving.slo.SLO` (TTFT target + e2e deadline).  With an
+engine-level :class:`~repro.serving.slo.SLOPolicy`, near-deadline
+requests are boosted onto the existing strict-priority + preemption
+machinery (and EDF-ordered within a priority), while hopeless requests
+— TTFT already missed in queue, or e2e deadline passed — are shed
+instead of burning pool pages for zero goodput.  ``EngineStats`` tracks
+per-request TTFT/TPOT percentiles and goodput-under-SLO
+(``benchmarks/bench_serving.py``).
+
+Cancellation: ``cancel(uid)`` aborts a queued OR running request —
+pages, prefix read holds and the canvas row are all released, and the
+pool drain invariant (used == index-held pages after a full drain)
+still holds (``tests/test_pool.py`` leak detector).
+
 Slot bookkeeping uses the session's explicit active-position mask;
 token ids are never overloaded as "committed filler" sentinels.
 """
@@ -58,9 +94,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import queue as queue_mod
+import threading
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -72,10 +110,29 @@ from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
 from repro.dlm.session import DecodeSession, SharedPrefix
 from repro.serving.pool import OutOfPages, PagePool
 from repro.serving.prefix import PrefixIndex
+from repro.serving.slo import SLO, SLOPolicy
 
 # (settings, strategy, scheduler): everything the compiled step closes
 # over statically — one DecodeSession (one executable) per distinct key.
 LaneKey = Tuple[DecodeSettings, CacheStrategy, UnmaskScheduler]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestEvent:
+    """One streaming event for a request (DESIGN.md §8).
+
+    ``kind``: "token" (``positions``/``tokens`` carry the gen-span
+    offsets and values committed since the last event), "done" (final
+    output in ``tokens``), "shed" (SLO policy dropped it), or
+    "canceled".  Delivered to ``Request.sink`` if set, else the
+    engine-level ``event_sink`` for ``stream=True`` requests — always
+    on the engine thread (the front-end bridges to asyncio)."""
+    kind: str
+    uid: int
+    step: int
+    ts: float
+    positions: Tuple[int, ...] = ()   # offsets into the gen span
+    tokens: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -105,6 +162,21 @@ class Request:
     preemptions: int = 0
     served_steps: int = 0           # per-request max_steps budget
     snapshot: Optional[Dict[str, np.ndarray]] = None  # preempt resume
+    # online serving (DESIGN.md §8)
+    slo: Optional[SLO] = None       # TTFT target + e2e deadline
+    stream: bool = False            # emit per-token events
+    sink: Optional[Callable] = None  # per-request event callback
+    canceled: bool = False          # set by cancel(); loop releases slot
+    shed: bool = False              # canceled BY the SLO policy
+    first_token_at: Optional[float] = None
+    last_commit_at: Optional[float] = None
+    tokens_done: int = 0            # committed so far (TPOT denominator)
+    # per-request emitted mask [gen_len]: which gen-span offsets have
+    # already been streamed — survives preemption, so a resumed
+    # request's stream never duplicates or drops a token
+    emitted: Optional[np.ndarray] = None
+    plan_epoch: Optional[int] = None  # prefix plan validity (see §8)
+    boosted: bool = False           # urgency transition already seen
 
 
 @dataclasses.dataclass
@@ -124,17 +196,32 @@ class EngineStats:
     prefix_evicted_pages: int = 0   # index pages evicted under pressure
     peak_pool_util: float = 0.0
     steady_pool_util: float = 0.0
+    # online serving / SLO accounting (DESIGN.md §8)
+    requests_shed: int = 0          # dropped by the SLO policy
+    requests_canceled: int = 0      # client cancel / disconnect
+    slo_met: int = 0                # completed within their SLO
+    slo_missed: int = 0             # completed but past TTFT/deadline
     e2e_latencies: List[float] = dataclasses.field(default_factory=list)
     queue_waits: List[float] = dataclasses.field(default_factory=list)
+    ttft_latencies: List[float] = dataclasses.field(default_factory=list)
+    tpot_latencies: List[float] = dataclasses.field(default_factory=list)
 
     def tps(self, wall: float) -> float:
         return self.tokens_committed / max(wall, 1e-9)
 
+    def goodput(self, wall: float) -> float:
+        """Requests completed WITHIN their SLO per second — the online
+        headline metric (a request without an SLO counts as met when it
+        completes; shed/canceled/late requests never count)."""
+        return self.slo_met / max(wall, 1e-9)
+
     def percentiles(self) -> Dict[str, float]:
-        """p50/p95 end-to-end + queue-wait latency (seconds)."""
+        """p50/p95 end-to-end, queue-wait, TTFT and TPOT (seconds)."""
         out: Dict[str, float] = {}
         for name, xs in (("e2e", self.e2e_latencies),
-                         ("wait", self.queue_waits)):
+                         ("wait", self.queue_waits),
+                         ("ttft", self.ttft_latencies),
+                         ("tpot", self.tpot_latencies)):
             if xs:
                 out[f"{name}_p50"] = float(np.percentile(xs, 50))
                 out[f"{name}_p95"] = float(np.percentile(xs, 95))
@@ -151,7 +238,9 @@ class ServingEngine:
                  scheduler: Optional[UnmaskScheduler] = None,
                  continuous: bool = True,
                  pool_pages: int = 0, page_size: int = 16,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 slo_policy: Optional[SLOPolicy] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -188,13 +277,32 @@ class ServingEngine:
         self._sessions: Dict[LaneKey, DecodeSession] = {}
         # offline proxy artefacts are per STRATEGY, shared across lanes
         self._proxies: Dict[CacheStrategy, object] = {}
+        # online serving (DESIGN.md §8)
+        self.slo_policy = slo_policy
+        self._clock = clock or time.time
+        self.event_sink: Optional[Callable[[RequestEvent], None]] = None
+        # thread-safe intake: closures enqueued by submit_threadsafe /
+        # cancel_threadsafe, drained on the engine thread at the
+        # double-buffer overlap point (and while idle in run_online)
+        self._mailbox: "queue_mod.Queue[Callable[[], None]]" = \
+            queue_mod.Queue()
+        self._uid_lock = threading.Lock()
+        self._running: Dict[int, Request] = {}   # uid -> in-flight req
+        self._stop: Optional[threading.Event] = None
+        self._prefix_epoch = 0        # bumps on any index mutation
+
+    def _now(self) -> float:
+        return self._clock()
 
     def submit(self, prompt: np.ndarray, gen_len: int,
                settings: Optional[DecodeSettings] = None,
                strategy: Optional[CacheStrategy] = None,
                scheduler: Optional[UnmaskScheduler] = None,
                priority: int = 0,
-               row_len: Optional[int] = None) -> int:
+               row_len: Optional[int] = None,
+               slo: Optional[SLO] = None,
+               stream: bool = False,
+               sink: Optional[Callable] = None) -> int:
         """Queue one request.  Rejects requests that can never be
         scheduled (``gen_len`` outside the canvas, or a page footprint
         beyond the whole pool) with a clear error instead of letting
@@ -203,7 +311,70 @@ class ServingEngine:
         ``row_len`` (paged mode) reserves a larger page-aligned canvas
         span than prompt+gen needs — cross-turn chat reserves the same
         span every turn so the prefix index's layout keys line up
-        (DESIGN.md §6)."""
+        (DESIGN.md §6).  ``slo``/``stream``/``sink`` are the online
+        serving surface (DESIGN.md §8).  Engine-thread only — remote
+        threads use ``submit_threadsafe``."""
+        req = self._build_request(prompt, gen_len, settings, strategy,
+                                  scheduler, priority=priority,
+                                  row_len=row_len, slo=slo,
+                                  stream=stream, sink=sink)
+        self._enqueue(req)
+        return req.uid
+
+    def submit_threadsafe(self, prompt: np.ndarray, gen_len: int,
+                          **kw) -> int:
+        """``submit`` from any thread: validation and lane resolution
+        run on the caller (errors raise there), the queue append rides
+        the mailbox onto the engine thread.  Returns the uid
+        immediately — events may start arriving before this returns
+        only on the request's own ``sink``, which is attached first."""
+        req = self._build_request(prompt, gen_len, **kw)
+        self._mailbox.put(lambda: self._enqueue(req))
+        return req.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a queued or running request: its pages, prefix holds
+        and canvas row are released and it finalizes with no output
+        (``canceled`` on the request; "canceled" event).  Engine-thread
+        only — remote threads use ``cancel_threadsafe``.  Returns False
+        for unknown/already-finished uids."""
+        for r in list(self.queue):
+            if r.uid == uid:
+                self.queue.remove(r)
+                self._drop_plan(r)
+                r.canceled = True
+                self._finalize_aborted(r)
+                return True
+        r = self._running.get(uid)
+        if r is not None and not r.canceled:
+            r.canceled = True     # the step loop releases slot + pages
+            return True
+        return False
+
+    def cancel_threadsafe(self, uid: int) -> None:
+        self._mailbox.put(lambda: self.cancel(uid))
+
+    def _enqueue(self, req: Request) -> None:
+        self._admission_dirty = True
+        self.queue.append(req)
+
+    def _drain_mailbox(self) -> None:
+        while True:
+            try:
+                fn = self._mailbox.get_nowait()
+            except queue_mod.Empty:
+                return
+            fn()
+
+    def _build_request(self, prompt: np.ndarray, gen_len: int,
+                       settings: Optional[DecodeSettings] = None,
+                       strategy: Optional[CacheStrategy] = None,
+                       scheduler: Optional[UnmaskScheduler] = None,
+                       priority: int = 0,
+                       row_len: Optional[int] = None,
+                       slo: Optional[SLO] = None,
+                       stream: bool = False,
+                       sink: Optional[Callable] = None) -> Request:
         if gen_len <= 0 or gen_len > self.canvas_len:
             raise ValueError(
                 f"gen_len {gen_len} cannot be scheduled on a "
@@ -212,12 +383,15 @@ class ServingEngine:
         # monotonic counter — NOT len(done)+len(queue): with requests
         # in-flight (popped but not done) that length dips and reuses
         # live uids (regression-tested in tests/test_serving.py).
-        uid = self._next_uid
-        self._next_uid += 1
+        # Locked so submit_threadsafe callers never race the engine.
+        with self._uid_lock:
+            uid = self._next_uid
+            self._next_uid += 1
         req = Request(uid, np.asarray(prompt, np.int32), gen_len,
-                      settings, strategy, scheduler, priority=priority)
+                      settings, strategy, scheduler, priority=priority,
+                      submitted_at=self._now(), slo=slo, stream=stream,
+                      sink=sink)
         req.lane = self._lane_of(req)   # freeze vs later default changes
-        self._admission_dirty = True
         if self.paged:
             p_len = min(len(req.prompt), self.canvas_len - gen_len)
             span = max(p_len + gen_len, row_len or 0)
@@ -235,8 +409,7 @@ class ServingEngine:
                     f"request)")
         else:
             req.row_len = self.canvas_len
-        self.queue.append(req)
-        return uid
+        return req
 
     # ------------------------------------------------------------------
 
@@ -280,6 +453,126 @@ class ServingEngine:
         return self._sessions[lane]
 
     # ------------------------------------------------------------------
+    # Online serving: events, SLO shedding, cancellation (DESIGN.md §8)
+    # ------------------------------------------------------------------
+
+    def _emit(self, req: Request, kind: str,
+              positions: Tuple[int, ...] = (),
+              tokens: Tuple[int, ...] = ()) -> None:
+        sink = req.sink or (self.event_sink if req.stream else None)
+        if sink is None:
+            return
+        sink(RequestEvent(kind=kind, uid=req.uid, step=self.stats.steps,
+                          ts=self._now(), positions=positions,
+                          tokens=tokens))
+
+    def _eff_priority(self, req: Request, now: float) -> int:
+        if self.slo_policy is None:
+            return req.priority
+        return self.slo_policy.effective_priority(req, now)
+
+    def _shed_hopeless(self) -> None:
+        """Drop queued requests that can no longer contribute goodput
+        (missed TTFT while waiting / e2e deadline passed)."""
+        if self.slo_policy is None or not self.slo_policy.shed:
+            return
+        now = self._now()
+        for r in list(self.queue):
+            if r.slo is not None and self.slo_policy.hopeless(r, now):
+                self.queue.remove(r)
+                self._drop_plan(r)
+                r.shed = True
+                self._finalize_aborted(r)
+
+    def _finalize_aborted(self, req: Request) -> None:
+        """Common exit for canceled and shed requests: release every
+        resource (read holds were dropped by the caller for queued
+        requests; running requests still own pages) and finalize with
+        no output."""
+        if self.paged:
+            self._release_holds(req)
+            if req.pages:
+                self.pool.free(req.pages)
+                req.pages = None
+        req.completed_at = self._now()
+        self._running.pop(req.uid, None)
+        self._admission_dirty = True   # a slot/pages may have freed
+        self.done.append(req)
+        if req.shed:
+            self.stats.requests_shed += 1
+            if req.slo is not None:   # a shed request IS a missed SLO
+                self.stats.slo_missed += 1
+            self._emit(req, "shed")
+        else:
+            self.stats.requests_canceled += 1
+            self._emit(req, "canceled")
+
+    def _host_overlap(self, lane: LaneKey,
+                      slots: List[Optional[Request]]) -> None:
+        """Host-side work double-buffered against the in-flight device
+        step (DESIGN.md §8): runs after the step is dispatched but
+        before the first host sync on its outputs.  Everything here is
+        host-only — mailbox intake, SLO shedding, and the prefix-trie
+        lookup + read holds for the next admission candidate (which
+        ``_admit_one`` then reuses via ``plan_epoch``)."""
+        self._drain_mailbox()
+        self._shed_hopeless()
+        pol = self.slo_policy
+        if pol is not None and self.queue and not self._admission_dirty:
+            # a queued request crossing the urgency threshold changes
+            # the admission outcome (boost can preempt a running row) —
+            # re-scan even though no finish/arrival event fired
+            now = self._now()
+            for r in self.queue:
+                if not r.boosted and pol.urgent(r, now):
+                    r.boosted = True
+                    self._admission_dirty = True
+        if pol is not None and pol.shed:
+            now = self._now()
+            for s in slots:
+                if (s is not None and not s.canceled and s.slo is not None
+                        and now > s.submitted_at + s.slo.deadline):
+                    s.canceled = True    # running past deadline: shed
+                    s.shed = True
+        if self._stop is not None and self._stop.is_set():
+            for s in slots:              # clean shutdown: abort in-flight
+                if s is not None:
+                    s.canceled = True
+        if (self.paged and self.prefix is not None
+                and self._admission_dirty):
+            for req in self._lane_candidates(lane)[:1]:
+                if req.n_pages and req.plan_epoch != self._prefix_epoch:
+                    self._prefix_plan(req)
+                    req.plan_epoch = self._prefix_epoch
+
+    def _stream_tokens(self, slots: List[Optional[Request]],
+                       sess: DecodeSession,
+                       p_lens: List[int]) -> None:
+        """Emit token events for streaming slots: diff the gen span of
+        the canvas against each request's emitted mask.  Canvas
+        diffing (not the commit ring) so wide parallel commits that
+        overflow the ring never drop stream tokens."""
+        live = [(i, s) for i, s in enumerate(slots)
+                if s is not None and not s.canceled
+                and (s.sink is not None
+                     or (s.stream and self.event_sink is not None))]
+        if not live:
+            return
+        toks = sess.host_tokens()
+        mask_id = self.cfg.mask_id
+        for i, req in live:
+            span = toks[i, p_lens[i]: p_lens[i] + req.gen_len]
+            if req.emitted is None:
+                req.emitted = np.zeros((req.gen_len,), bool)
+            fresh = (span != mask_id) & ~req.emitted
+            if not fresh.any():
+                continue
+            pos = np.nonzero(fresh)[0]
+            req.emitted[pos] = True
+            self._emit(req, "token", positions=tuple(int(p) for p in pos),
+                       tokens=tuple(int(t) for t in span[pos]))
+
+    # ------------------------------------------------------------------
     # Shared-prefix index (DESIGN.md §6)
     # ------------------------------------------------------------------
 
@@ -317,6 +610,7 @@ class ServingEngine:
     def _drop_plan(self, req: Request) -> None:
         self._release_holds(req)
         req.shared_n, req.shared_full = 0, False
+        req.plan_epoch = None
 
     def _count_prefix_hit(self, req: Request) -> None:
         """Admission succeeded: account the planned hit."""
@@ -392,12 +686,14 @@ class ServingEngine:
         if rejected:
             self.pool.release(rejected)
         self.stats.prefix_published += len(pub) - len(rejected)
+        self._prefix_epoch += 1       # pre-planned misses may now hit
 
     def drop_prefix_cache(self) -> int:
         """Release every index hold and clear the trie (tests, or
         explicit memory reclamation).  Returns pages released."""
         if self.prefix is None:
             return 0
+        self._prefix_epoch += 1
         return self.prefix.clear(self.pool)
 
     # ------------------------------------------------------------------
@@ -406,9 +702,21 @@ class ServingEngine:
 
     def _lane_candidates(self, lane: LaneKey) -> List[Request]:
         """Lane-matching queued requests in admission order: strict
-        priority first, submission (queue) order within a priority."""
-        matches = [r for r in self.queue if r.lane == lane]
-        return sorted(matches, key=lambda r: -r.priority)
+        (effective) priority first; within a priority, queue order —
+        or, under an SLO policy, earliest TTFT deadline first (EDF),
+        with queue order breaking slack ties.  The SLO boost folds into
+        the effective priority, so a near-deadline request jumps ahead
+        of (and may preempt) slack-rich peers."""
+        matches = [(i, r) for i, r in enumerate(self.queue)
+                   if r.lane == lane]
+        if self.slo_policy is None:
+            return [r for _, r in
+                    sorted(matches, key=lambda ir: (-ir[1].priority,
+                                                    ir[0]))]
+        pol, now = self.slo_policy, self._now()
+        return [r for _, r in sorted(matches, key=lambda ir: (
+            -pol.effective_priority(ir[1], now),
+            pol.ttft_slack(ir[1], now), ir[0]))]
 
     def _preempt(self, slot: int, victim: Request,
                  slots: List[Optional[Request]],
@@ -425,6 +733,7 @@ class ServingEngine:
         victim.preemptions += 1
         self.stats.preemptions += 1
         slots[slot] = None
+        self._running.pop(victim.uid, None)
         self.queue.appendleft(victim)
 
     def _admit_one(self, lane: LaneKey, slots: List[Optional[Request]],
@@ -444,25 +753,34 @@ class ServingEngine:
         round: the session has no state for them, so they cannot be
         preemption victims."""
         stalled = False
+        now = self._now()
         for req in self._lane_candidates(lane):
             slot_free = any(s is None for s in slots)
             if not self.paged:
                 if not slot_free:
                     return None     # dense mode: no preemption
                 self.queue.remove(req)
+                self._admit_bookkeep(req)
                 return req
             # plan the prefix hit FIRST: the read holds protect the
-            # matched entry from this admission's own index eviction
-            self._prefix_plan(req)
+            # matched entry from this admission's own index eviction.
+            # A plan made at the current index epoch (the double-buffer
+            # overlap pre-plans the head candidate while the device
+            # step is in flight) is reused as-is.
+            if req.plan_epoch != self._prefix_epoch:
+                self._prefix_plan(req)
+                req.plan_epoch = self._prefix_epoch
             page_short = (max(0, req.n_pages - self.pool.available)
                           if req.n_pages else 0)
             victims = []
             if sess is not None:
+                req_eff = self._eff_priority(req, now)
                 victims = [(i, r) for i, r in enumerate(slots)
                            if r is not None and i not in protected
-                           and r.priority < req.priority]
+                           and self._eff_priority(r, now) < req_eff]
                 victims.sort(key=lambda ir: (
-                    ir[1].priority, -(ir[1].started_at or 0.0)))
+                    self._eff_priority(ir[1], now),
+                    -(ir[1].started_at or 0.0)))
             if page_short and self.prefix is not None:
                 # admission pressure: evict LRU reader-less index
                 # entries before touching any RUNNING request — but
@@ -480,6 +798,7 @@ class ServingEngine:
                          if feasible else 0)
                 if freed:
                     self.stats.prefix_evicted_pages += freed
+                    self._prefix_epoch += 1
                     page_short = max(0, req.n_pages - self.pool.available)
             if page_short or not slot_free:
                 if sess is None:
@@ -502,10 +821,14 @@ class ServingEngine:
             self.queue.remove(req)
             req.pages = pages
             self._count_prefix_hit(req)
+            self._admit_bookkeep(req)
             return req
         if stalled:
             self.stats.admission_stalls += 1
         return None
+
+    def _admit_bookkeep(self, req: Request) -> None:
+        self._running[req.uid] = req   # cancel() finds in-flight by uid
 
     # ------------------------------------------------------------------
     # Canvas rows
@@ -535,19 +858,34 @@ class ServingEngine:
     def _harvest(self, req: Request, toks_row: np.ndarray,
                  p_len: int) -> None:
         req.output = toks_row[p_len: p_len + req.gen_len]
-        req.completed_at = time.time()
-        self.stats.e2e_latencies.append(
-            req.completed_at - req.submitted_at)
+        req.completed_at = self._now()
+        e2e = req.completed_at - req.submitted_at
+        self.stats.e2e_latencies.append(e2e)
         if req.started_at is not None:
             self.stats.queue_waits.append(
                 req.started_at - req.submitted_at)
+        ttft = float("inf")
+        if req.first_token_at is not None:
+            ttft = req.first_token_at - req.submitted_at
+            self.stats.ttft_latencies.append(ttft)
+            if req.last_commit_at is not None and req.tokens_done > 1:
+                self.stats.tpot_latencies.append(
+                    (req.last_commit_at - req.first_token_at)
+                    / (req.tokens_done - 1))
+        if req.slo is None or req.slo.met(ttft, e2e):
+            self.stats.slo_met += 1
+        else:
+            self.stats.slo_missed += 1
         if self.paged:
             self._release_holds(req)
             if req.pages:
                 self.pool.free(req.pages)
                 req.pages = None
+        self._running.pop(req.uid, None)
         self.done.append(req)
         self.stats.requests_done += 1
+        self._emit(req, "done",
+                   tokens=tuple(int(t) for t in req.output))
 
     # ------------------------------------------------------------------
 
@@ -556,16 +894,55 @@ class ServingEngine:
         fires after every engine step — submissions made from it join
         the live run and are admitted mid-loop (the arrival path that
         exercises preemption)."""
-        t0 = time.time()
-        while self.queue:
+        t0 = self._now()
+        while True:
+            self._drain_mailbox()
+            self._shed_hopeless()
+            if not self.queue:
+                break
             lane = self.queue[0].lane
             self._run_lane(lane, max_steps, on_step)
-        self._wall = time.time() - t0
+        self._wall = self._now() - t0
+        self._note_pool_stats()
+        return self.stats
+
+    def run_online(self, stop: threading.Event, *, max_steps: int = 256,
+                   idle_wait: float = 0.01, on_step=None) -> EngineStats:
+        """Serve arrivals until ``stop`` is set — the online front-end's
+        engine-thread loop (DESIGN.md §8).  While idle it blocks on the
+        mailbox; while serving, arrivals ride the double-buffer overlap
+        point into the live batch.  On stop, in-flight requests are
+        aborted cleanly (canceled, resources released) and queued
+        requests stay queued with their prefix plans dropped — the
+        engine can be resumed or drained later."""
+        self._stop = stop
+        t0 = self._now()
+        try:
+            while not stop.is_set():
+                self._drain_mailbox()
+                self._shed_hopeless()
+                if self.queue:
+                    self._run_lane(self.queue[0].lane, max_steps, on_step)
+                    continue
+                try:
+                    fn = self._mailbox.get(timeout=idle_wait)
+                except queue_mod.Empty:
+                    continue
+                fn()
+        finally:
+            self._stop = None
+            self._drain_mailbox()
+            for r in list(self.queue):   # shutdown never leaks holds
+                self._drop_plan(r)
+            self._wall = self._now() - t0
+            self._note_pool_stats()
+        return self.stats
+
+    def _note_pool_stats(self) -> None:
         if self.paged:
             self.stats.peak_pool_util = (self.pool.peak_used
                                          / max(self.pool.capacity, 1))
             self.stats.steady_pool_util = self.pool.steady_utilization
-        return self.stats
 
     def _run_lane(self, lane: LaneKey, max_steps: int,
                   on_step=None) -> None:
@@ -586,7 +963,7 @@ class ServingEngine:
         # admit without a reshape/recompile
         b = self.max_batch if self.paged else len(batch)
         slots = [None] * b
-        now = time.time()
+        now = self._now()
         mask_id = self.cfg.mask_id
         tokens = np.full((b, self.canvas_len), mask_id, np.int32)
         active = np.zeros((b, self.canvas_len), bool)
@@ -630,15 +1007,29 @@ class ServingEngine:
 
         while any(s is not None for s in slots):
             info = sess.step()
+            # double-buffered dispatch (DESIGN.md §8): the jitted step
+            # is dispatched but NOT synced yet — mailbox intake, SLO
+            # shedding and next-candidate prefix planning run on the
+            # host while the device step is in flight.
+            self._host_overlap(lane, slots)
             self.stats.steps += 1
             if self.paged:
                 self.pool.note_step()
-            self.stats.tokens_committed += int(
-                np.sum(np.asarray(info["n_committed"])))
+            n_comm = np.asarray(info["n_committed"])  # first host sync
+            self.stats.tokens_committed += int(n_comm.sum())
             if on_step is not None:
                 on_step(self)
+            now = self._now()
+            for i, s in enumerate(slots):     # TTFT / TPOT bookkeeping
+                if s is None or n_comm[i] <= 0:
+                    continue
+                if s.first_token_at is None:
+                    s.first_token_at = now
+                s.last_commit_at = now
+                s.tokens_done += int(n_comm[i])
+            self._stream_tokens(slots, sess, p_lens)
             n_masked = np.asarray(sess.state.n_masked)
-            finished = []
+            finished, dead = [], []
             for i, s in enumerate(slots):
                 if s is None:
                     continue
@@ -647,22 +1038,28 @@ class ServingEngine:
                 # a request that exhausts its own step budget is
                 # harvested as-is (same semantics as the old
                 # run-to-max_steps static batch loop)
-                if n_masked[i] <= 0 or ages[i] >= max_steps:
+                if s.canceled:
+                    dead.append(i)
+                elif n_masked[i] <= 0 or ages[i] >= max_steps:
                     finished.append(i)
-            if not finished and not (self.continuous
-                                     and self._admission_dirty):
+            if not (finished or dead) and not (self.continuous
+                                               and self._admission_dirty):
                 continue
-            if finished:
-                toks = np.asarray(sess.tokens)
+            if finished or dead:
+                toks = sess.host_tokens()
                 for i in finished:
                     self._harvest(slots[i], toks[i], p_lens[i])
                     slots[i] = None
+                for i in dead:
+                    req = slots[i]
+                    slots[i] = None
+                    self._finalize_aborted(req)
                 if self.paged:
                     # zero the finished rows' page-table entries BEFORE
                     # their freed pages can be re-allocated below — a
                     # stale entry would let the dead row's next
                     # write-back corrupt the new owner's pages
-                    sess.release_rows(finished)
+                    sess.release_rows(finished + dead)
             swap_rows, swap_tokens, swap_active = [], [], []
             swap_kv, swap_pt, swap_com = [], [], []
             swap_shared: List[SharedPrefix] = []
@@ -682,7 +1079,7 @@ class ServingEngine:
                 p_lens[i] = p_len
                 ages[i] = req.served_steps
                 if req.started_at is None:
-                    req.started_at = time.time()
+                    req.started_at = self._now()
                 swap_rows.append(i)
                 swap_tokens.append(row)
                 swap_active.append(act)
@@ -712,7 +1109,7 @@ class ServingEngine:
                     sess.replace_rows(swap_rows, np.stack(swap_tokens),
                                       np.stack(swap_active))
                 self.stats.swaps += len(swap_rows)
-            parked = [i for i in finished if i not in swap_rows
+            parked = [i for i in finished + dead if i not in swap_rows
                       and slots[i] is None]
             if parked and not self.paged:   # paged rows released above
                 sess.deactivate_rows(parked)

@@ -1,0 +1,280 @@
+"""Async streaming serving front-end (DESIGN.md §8).
+
+An asyncio layer over :class:`~repro.serving.engine.ServingEngine`
+using ONLY stdlib primitives (``asyncio`` streams for HTTP, a
+``threading.Thread`` for the engine).  Three layers:
+
+  * **Engine thread** — the blocking decode loop
+    (``ServingEngine.run_online``) runs on a dedicated thread.  The
+    asyncio side never touches engine state directly: submissions and
+    cancels ride the engine's thread-safe mailbox
+    (``submit_threadsafe``/``cancel_threadsafe``), which the engine
+    drains at its double-buffer overlap point — intake costs the
+    serving loop nothing.
+  * **Event bridge** — each request carries its own ``sink`` callback
+    (attached BEFORE the engine can see the request, so no
+    registration race).  The sink fires on the engine thread and
+    trampolines every :class:`~repro.serving.engine.RequestEvent` onto
+    the event loop with ``loop.call_soon_threadsafe`` into a
+    per-request ``asyncio.Queue`` — ``generate()`` is just an async
+    iterator over that queue.
+  * **HTTP** — a deliberately tiny HTTP/1.1 server
+    (``asyncio.start_server``): ``POST /generate`` streams
+    newline-delimited JSON events (``Connection: close`` delimits the
+    body; no chunked-encoding machinery), ``GET /stats`` returns an
+    engine-stats snapshot.  A dropped client connection cancels the
+    request — pages and prefix holds are released mid-decode.
+
+In-process use (benchmarks, tests: no sockets)::
+
+    front = AsyncFrontend(engine)
+    async with front:                      # starts the engine thread
+        async for ev in front.generate(prompt, gen_len=16, slo=slo):
+            ...                            # ev.kind: token/done/...
+
+Socket use: ``await front.start(serve_http=True)`` then point
+``stream_request()`` (or ``examples/serve_stream.py``) at
+``front.port``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import threading
+from typing import AsyncIterator, Dict, Optional
+
+import numpy as np
+
+from repro.serving.engine import RequestEvent, ServingEngine
+from repro.serving.slo import SLO
+
+_TERMINAL = ("done", "shed", "canceled")
+
+
+class AsyncFrontend:
+    """Bridges asyncio clients onto a ServingEngine thread."""
+
+    def __init__(self, engine: ServingEngine, *, host: str = "127.0.0.1",
+                 port: int = 0, max_steps: int = 256,
+                 idle_wait: float = 0.005):
+        self.engine = engine
+        self.host = host
+        self.port = port              # 0 = ephemeral; set after start()
+        self.max_steps = max_steps
+        self.idle_wait = idle_wait
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    async def start(self, serve_http: bool = False) -> "AsyncFrontend":
+        assert self._thread is None, "frontend already started"
+        self._loop = asyncio.get_running_loop()
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self.engine.run_online,
+            kwargs=dict(stop=self._stop, max_steps=self.max_steps,
+                        idle_wait=self.idle_wait),
+            name="serving-engine", daemon=True)
+        self._thread.start()
+        if serve_http:
+            self._server = await asyncio.start_server(
+                self._handle_conn, self.host, self.port)
+            self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        self._stop.set()
+        if self._thread is not None:
+            # run_online wakes on its idle mailbox timeout
+            await asyncio.get_running_loop().run_in_executor(
+                None, self._thread.join)
+            self._thread = None
+
+    async def __aenter__(self) -> "AsyncFrontend":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ------------------------------------------------------------------
+    # Streaming generate
+    # ------------------------------------------------------------------
+
+    async def generate(self, prompt, gen_len: int, *,
+                       priority: int = 0, slo: Optional[SLO] = None,
+                       row_len: Optional[int] = None,
+                       ) -> AsyncIterator[RequestEvent]:
+        """Submit one request and yield its events ("token" batches,
+        then exactly one terminal "done"/"shed"/"canceled").  Closing
+        the iterator early (client gone) cancels the request on the
+        engine."""
+        assert self._loop is not None, "call start() first"
+        q: asyncio.Queue = asyncio.Queue()
+        loop = self._loop
+
+        def sink(ev: RequestEvent) -> None:   # fires on engine thread
+            loop.call_soon_threadsafe(q.put_nowait, ev)
+
+        uid = self.engine.submit_threadsafe(
+            np.asarray(prompt, np.int32), gen_len, priority=priority,
+            slo=slo, row_len=row_len, stream=True, sink=sink)
+        try:
+            while True:
+                ev = await q.get()
+                yield ev
+                if ev.kind in _TERMINAL:
+                    return
+        finally:
+            # reached on early generator close / task cancellation too
+            self.engine.cancel_threadsafe(uid)
+
+    def stats_snapshot(self) -> Dict:
+        """JSON-safe engine stats copy (reads race the engine thread
+        benignly: ints and list appends under the GIL)."""
+        s = self.engine.stats
+        pct = s.percentiles()
+        out = {k: v for k, v in dataclasses.asdict(s).items()
+               if not isinstance(v, list)}
+        out.update(pct)
+        out["queued"] = len(self.engine.queue)
+        out["running"] = len(self.engine._running)
+        return out
+
+    # ------------------------------------------------------------------
+    # Minimal HTTP/1.1 layer (stdlib streams only)
+    # ------------------------------------------------------------------
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            request_line = (await reader.readline()).decode("latin1")
+            if not request_line:
+                return
+            method, path, _ = request_line.split(None, 2)
+            headers = {}
+            while True:
+                line = (await reader.readline()).decode("latin1").strip()
+                if not line:
+                    break
+                k, _, v = line.partition(":")
+                headers[k.strip().lower()] = v.strip()
+            body = b""
+            n = int(headers.get("content-length", 0) or 0)
+            if n:
+                body = await reader.readexactly(n)
+            if method == "POST" and path == "/generate":
+                await self._route_generate(writer, body)
+            elif method == "GET" and path == "/stats":
+                payload = json.dumps(self.stats_snapshot()).encode()
+                writer.write(_response_head("application/json")
+                             + payload)
+                await writer.drain()
+            else:
+                writer.write(b"HTTP/1.1 404 Not Found\r\n"
+                             b"Connection: close\r\n\r\n")
+                await writer.drain()
+        except (asyncio.IncompleteReadError, ConnectionResetError,
+                BrokenPipeError, ValueError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _route_generate(self, writer: asyncio.StreamWriter,
+                              body: bytes) -> None:
+        req = json.loads(body.decode())
+        slo = None
+        if req.get("slo"):
+            slo = SLO(ttft=req["slo"].get("ttft", float("inf")),
+                      deadline=req["slo"].get("deadline", float("inf")))
+        writer.write(_response_head("application/x-ndjson"))
+        await writer.drain()
+        agen = self.generate(req["prompt"], int(req["gen_len"]),
+                             priority=int(req.get("priority", 0)),
+                             slo=slo, row_len=req.get("row_len"))
+        try:
+            # a dropped connection raises from drain(); the explicit
+            # aclose() below (not GC) then cancels the request on the
+            # engine
+            async for ev in agen:
+                writer.write(json.dumps(_event_json(ev)).encode()
+                             + b"\n")
+                await writer.drain()
+        finally:
+            await agen.aclose()
+
+
+def _response_head(ctype: str) -> bytes:
+    return (f"HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\n"
+            f"Connection: close\r\n\r\n").encode()
+
+
+def _event_json(ev: RequestEvent) -> Dict:
+    return {"kind": ev.kind, "uid": ev.uid, "step": ev.step,
+            "ts": ev.ts, "positions": list(ev.positions),
+            "tokens": list(ev.tokens)}
+
+
+# ----------------------------------------------------------------------
+# Client helpers (examples/serve_stream.py, launch/serve.py --serve)
+# ----------------------------------------------------------------------
+
+async def stream_request(host: str, port: int, prompt, gen_len: int, *,
+                         priority: int = 0,
+                         slo: Optional[Dict] = None) -> AsyncIterator[Dict]:
+    """Stream one request against a running front-end over HTTP; yields
+    decoded ndjson event dicts."""
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = json.dumps({
+        "prompt": [int(t) for t in np.asarray(prompt).reshape(-1)],
+        "gen_len": gen_len, "priority": priority, "slo": slo,
+    }).encode()
+    writer.write((f"POST /generate HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(payload)}\r\n"
+                  f"Connection: close\r\n\r\n").encode() + payload)
+    await writer.drain()
+    try:
+        # skip response headers
+        while True:
+            line = await reader.readline()
+            if not line or line in (b"\r\n", b"\n"):
+                break
+        while True:
+            line = await reader.readline()
+            if not line:
+                return
+            line = line.strip()
+            if line:
+                yield json.loads(line.decode())
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+
+
+async def fetch_stats(host: str, port: int) -> Dict:
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write((f"GET /stats HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Connection: close\r\n\r\n").encode())
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    head, _, body = raw.partition(b"\r\n\r\n")
+    return json.loads(body.decode())

@@ -1,0 +1,157 @@
+"""Async streaming front-end (DESIGN.md §8): engine-thread bridge,
+in-process streaming, the stdlib HTTP layer, and disconnect-cancel."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.strategy import SPACache
+from repro.serving.engine import ServingEngine
+from repro.serving.frontend import AsyncFrontend, fetch_stats, \
+    stream_request
+from repro.serving.slo import SLO, SLOPolicy
+
+PAGE, CANVAS = 4, 16
+
+
+def _engine(cfg, params, max_batch=2):
+    return ServingEngine(
+        cfg, params, max_batch=max_batch, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=1),
+        pool_pages=max_batch * (CANVAS // PAGE) + 1, page_size=PAGE,
+        prefix_cache=True, slo_policy=SLOPolicy())
+
+
+def test_frontend_streams_tokens_in_process(tiny_cfg, tiny_params):
+    """generate() yields per-token events as decode progresses, ending
+    in one "done" whose reassembled stream equals the engine output."""
+    eng = _engine(tiny_cfg, tiny_params)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, tiny_cfg.vocab_size - 1, 4)
+               .astype(np.int32) for _ in range(3)]
+
+    async def client(front, prompt):
+        stream, kinds = {}, []
+        async for ev in front.generate(prompt, 6,
+                                       slo=SLO(ttft=60.0)):
+            kinds.append(ev.kind)
+            if ev.kind == "token":
+                for pos, tok in zip(ev.positions, ev.tokens):
+                    assert pos not in stream      # no duplicates
+                    stream[pos] = tok
+        return kinds, stream
+
+    async def main():
+        async with AsyncFrontend(eng, max_steps=2048) as front:
+            return await asyncio.gather(
+                *(client(front, p) for p in prompts))
+
+    results = asyncio.run(main())
+    outputs = {tuple(int(t) for t in r.prompt): r.output
+               for r in eng.done}
+    assert len(eng.done) == 3
+    for (kinds, stream), prompt in zip(results, prompts):
+        assert kinds[-1] == "done"
+        assert kinds.count("done") == 1
+        assert len(kinds) > 2                     # streamed, not batched
+        got = np.asarray([stream[i] for i in sorted(stream)])
+        np.testing.assert_array_equal(
+            got, outputs[tuple(int(t) for t in prompt)])
+    # engine thread stopped cleanly; nothing leaked
+    assert eng.pool.used == eng.prefix.held_pages
+    assert eng.stats.slo_met == 3
+
+
+def test_frontend_http_roundtrip(tiny_cfg, tiny_params):
+    """POST /generate streams ndjson over a real localhost socket;
+    GET /stats reports the new TTFT/TPOT percentiles."""
+    eng = _engine(tiny_cfg, tiny_params)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, tiny_cfg.vocab_size - 1, 4).astype(np.int32)
+
+    async def main():
+        front = AsyncFrontend(eng, max_steps=2048)
+        await front.start(serve_http=True)
+        try:
+            events = []
+            async for ev in stream_request(
+                    front.host, front.port, prompt, 6,
+                    slo={"ttft": 60.0, "deadline": 240.0}):
+                events.append(ev)
+            stats = await fetch_stats(front.host, front.port)
+        finally:
+            await front.stop()
+        return events, stats
+
+    events, stats = asyncio.run(main())
+    assert events[-1]["kind"] == "done"
+    # token events arrive in COMMIT order (low-confidence-last), so
+    # reassemble the gen span by position
+    stream = {pos: tok for ev in events if ev["kind"] == "token"
+              for pos, tok in zip(ev["positions"], ev["tokens"])}
+    assert sorted(stream) == list(range(6))
+    np.testing.assert_array_equal(
+        np.asarray([stream[i] for i in range(6)]), eng.done[0].output)
+    assert stats["requests_done"] == 1
+    for key in ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95"):
+        assert key in stats
+    assert stats["ttft_p50"] > 0.0
+
+
+def test_frontend_disconnect_cancels_request(tiny_cfg, tiny_params):
+    """A client that hangs up mid-stream (HTTP) or closes its generator
+    (in-process) cancels the request on the engine; pages and prefix
+    holds are released."""
+    eng = _engine(tiny_cfg, tiny_params)
+    rng = np.random.default_rng(2)
+    pr = [rng.integers(0, tiny_cfg.vocab_size - 1, 4).astype(np.int32)
+          for _ in range(2)]
+
+    async def main():
+        front = AsyncFrontend(eng, max_steps=2048)
+        await front.start(serve_http=True)
+        try:
+            # in-process: close the generator after the first token
+            agen = front.generate(pr[0], 10)
+            async for ev in agen:
+                if ev.kind == "token":
+                    break
+            await agen.aclose()
+            # HTTP: drop the socket after the first token event
+            hgen = stream_request(front.host, front.port, pr[1], 10)
+            async for ev in hgen:
+                if ev["kind"] == "token":
+                    break
+            await hgen.aclose()
+            for _ in range(200):                 # until both aborts land
+                if eng.stats.requests_canceled == 2:
+                    break
+                await asyncio.sleep(0.05)
+        finally:
+            await front.stop()
+
+    asyncio.run(main())
+    assert eng.stats.requests_canceled == 2
+    assert eng.stats.requests_done == 0
+    assert all(r.canceled and r.output is None for r in eng.done)
+    assert eng.pool.used == eng.prefix.held_pages
+    eng.drop_prefix_cache()
+    assert eng.pool.used == 0
+
+
+def test_submit_threadsafe_and_cancel_queued(tiny_cfg, tiny_params):
+    """Mailbox intake: submissions from a foreign thread are enqueued
+    on the engine thread; canceling a queued uid before the engine
+    drains it aborts cleanly with a "canceled" event."""
+    eng = _engine(tiny_cfg, tiny_params)
+    rng = np.random.default_rng(3)
+    events = []
+    uid = eng.submit_threadsafe(
+        rng.integers(0, tiny_cfg.vocab_size - 1, 4).astype(np.int32),
+        6, stream=True, sink=events.append)
+    eng.cancel_threadsafe(uid)
+    eng._drain_mailbox()
+    assert eng.stats.requests_canceled == 1
+    assert [ev.kind for ev in events] == ["canceled"]
+    assert not eng.queue

@@ -349,6 +349,33 @@ def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params):
     # after the drain, the ONLY pages still held belong to the index
     assert eng.pool.used == eng.prefix.held_pages
     assert all(rc == 1 for rc in eng.pool.refcounts.values())
+
+    # --- cancellation (DESIGN.md §8) must uphold the same invariant:
+    # cancel-while-running releases the row's pages mid-decode,
+    # cancel-while-queued drops the request (and its prefix-plan holds)
+    # before it ever owns a row
+    run_victim = eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+                            .astype(np.int32), gen_len=8)
+    filler = rng.integers(0, tiny_cfg.vocab_size - 1, 4).astype(np.int32)
+    eng.submit(filler, gen_len=4)
+    queue_victim = eng.submit(shared, gen_len=8)  # full hit: plan holds
+    s1 = eng.stats.steps
+
+    def on_step_cancel(e):
+        if e.stats.steps == s1 + 2:
+            assert e.cancel(run_victim)       # in-flight: owns pages
+            assert e.cancel(queue_victim)     # still queued
+    eng.run(on_step=on_step_cancel)
+    assert eng.stats.requests_canceled == 2
+    canceled = {r.uid: r for r in eng.done
+                if r.uid in (run_victim, queue_victim)}
+    assert canceled[run_victim].canceled
+    assert canceled[run_victim].output is None
+    assert canceled[queue_victim].canceled
+    assert not eng.cancel(run_victim)         # already finalized
+    assert eng.pool.used == eng.prefix.held_pages
+    assert all(rc == 1 for rc in eng.pool.refcounts.values())
+
     eng.drop_prefix_cache()
     assert eng.pool.used == 0
     assert eng.pool.available == eng.pool.capacity

@@ -101,10 +101,15 @@ def test_engine_latency_percentiles(small):
                       .astype(np.int32), gen_len=4)
     stats = engine.run()
     pct = stats.percentiles()
-    assert set(pct) == {"e2e_p50", "e2e_p95", "wait_p50", "wait_p95"}
+    assert set(pct) == {"e2e_p50", "e2e_p95", "wait_p50", "wait_p95",
+                        "ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95"}
     assert pct["e2e_p95"] >= pct["e2e_p50"] > 0.0
     assert pct["e2e_p50"] >= pct["wait_p50"] >= 0.0
     assert len(stats.e2e_latencies) == 3
+    # TTFT is bounded by e2e; both streaming metrics were recorded
+    assert len(stats.ttft_latencies) == 3
+    assert 0.0 < pct["ttft_p50"] <= pct["e2e_p50"]
+    assert pct["tpot_p50"] >= 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +223,59 @@ def test_preemption_engine_byte_identical(tiny_cfg, tiny_params):
     assert et.stats.preemptions > 0
     assert any(r.preemptions > 0 for r in et.done)
     # roomy twin: pages AND slots to spare, nothing preempted
+    roomy, er = serve(1 + 3 * (CANVAS // PAGE), arrival_step=2,
+                      max_batch=3)
+    assert er.stats.preemptions == 0
+    assert set(tight) == set(roomy)
+    for uid in tight:
+        np.testing.assert_array_equal(tight[uid], roomy[uid])
+
+
+def test_streaming_continuity_across_preemption(tiny_cfg, tiny_params):
+    """DESIGN.md §8: a preempted-then-resumed request's event stream
+    has no duplicated and no lost committed tokens — each gen-span
+    position is emitted exactly once — and reassembling the stream
+    yields tokens byte-identical to an unpreempted run."""
+    rng = np.random.default_rng(4)
+    smalls = [rng.integers(0, tiny_cfg.vocab_size - 1, 4)
+              .astype(np.int32) for _ in range(2)]
+    big = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+
+    def serve(pool_pages, arrival_step, max_batch=2):
+        eng = _paged_engine(tiny_cfg, tiny_params, pool_pages,
+                            max_batch=max_batch,
+                            strategy_kw=dict(refresh_interval=1))
+        events = []
+        uids = [eng.submit(p, gen_len=4, stream=True, sink=events.append)
+                for p in smalls]
+        fired = {"done": False}
+
+        def on_step(e):
+            if not fired["done"] and e.stats.steps >= arrival_step:
+                fired["done"] = True
+                uids.append(e.submit(big, gen_len=8, priority=5,
+                                     stream=True, sink=events.append))
+
+        eng.run(on_step=on_step)
+        streams = {u: {} for u in uids}
+        for ev in events:
+            if ev.kind != "token":
+                continue
+            for pos, tok in zip(ev.positions, ev.tokens):
+                assert pos not in streams[ev.uid], \
+                    f"uid {ev.uid}: position {pos} emitted twice"
+                streams[ev.uid][pos] = tok
+        out = {}
+        for r in eng.done:
+            got = streams[r.uid]
+            assert sorted(got) == list(range(len(r.output))), \
+                f"uid {r.uid}: stream lost positions"
+            out[r.uid] = np.asarray([got[i] for i in sorted(got)])
+            np.testing.assert_array_equal(out[r.uid], r.output)
+        return out, eng
+
+    tight, et = serve(1 + 4, arrival_step=2)
+    assert et.stats.preemptions > 0            # stream crossed a resume
     roomy, er = serve(1 + 3 * (CANVAS // PAGE), arrival_step=2,
                       max_batch=3)
     assert er.stats.preemptions == 0
