@@ -48,8 +48,9 @@ def main(argv=None) -> None:
         "kernels": ("Kernel microbench (BENCH_kernels.json)",
                     bench_kernels.run),
         "serving": ("Serving runtime: paged pool, prefix cache, online "
-                    "goodput-under-SLO + front-end smoke "
-                    "(BENCH_serving.json)", bench_serving.run),
+                    "goodput-under-SLO + front-end smoke, host-tier "
+                    "hit-rate gain (BENCH_serving.json)",
+                    bench_serving.run),
     }
     if args.smoke:
         names = ["t2", "t3", "kernels", "serving"]

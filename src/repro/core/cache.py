@@ -22,6 +22,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ATTENTION_KINDS, ModelConfig
 
@@ -44,6 +45,27 @@ def dequantize_rows(q: jax.Array, scale: jax.Array,
                     dtype=jnp.float32) -> jax.Array:
     return (q.astype(jnp.float32)
             * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def quantize_rows_np(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side (numpy) twin of :func:`quantize_rows` for the cold
+    host-RAM page tier (DESIGN.md §9): symmetric int8 over the last
+    axis with a float16 per-row scale.  Per-row reconstruction error is
+    bounded by ``scale/2`` per element (= ``max|row| / 254``) plus the
+    f16 cast of the scale itself (relative 2^-11, absolute 2^-24 for
+    subnormal scales), which ``tests/test_hier.py`` asserts
+    property-style."""
+    xf = np.asarray(x).astype(np.float32)
+    amax = np.max(np.abs(xf), axis=-1)
+    scale = np.maximum(amax / 127.0, 1e-8).astype(np.float32)
+    q = np.clip(np.round(xf / scale[..., None]), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float16)
+
+
+def dequantize_rows_np(q: np.ndarray, scale: np.ndarray,
+                       dtype=np.float32) -> np.ndarray:
+    return (q.astype(np.float32)
+            * np.asarray(scale).astype(np.float32)[..., None]).astype(dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +204,60 @@ def copy_arena_pages(arenas: Dict[str, Dict[str, jax.Array]],
     s = jnp.asarray(list(src) + [0] * pad, jnp.int32)
     d = jnp.asarray(list(dst) + [0] * pad, jnp.int32)
     return jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), arenas)
+
+
+def _page_bucket(n: int) -> int:
+    bucket = 1
+    while bucket < n:
+        bucket *= 2
+    return bucket
+
+
+def read_arena_pages(arenas: Dict[str, Dict[str, jax.Array]],
+                     pages: "list[int]") -> Dict[str, Dict[str, jax.Array]]:
+    """Gather whole physical pages out of every buffer of every arena:
+    returns blocks ``{kind: {name: [Lk, n, page, ...]}}`` with
+    ``n == len(pages)`` (the tier demotion read, DESIGN.md §9).
+
+    Like :func:`copy_arena_pages` the index list is padded to a
+    power-of-two bucket with zero-page entries so similar-sized reads
+    share one executable; the pad rows are sliced off before returning,
+    so callers see exactly the pages they asked for."""
+    if not pages:
+        return {}
+    n = len(pages)
+    pad = _page_bucket(n) - n
+    idx = jnp.asarray(list(pages) + [0] * pad, jnp.int32)
+    return jax.tree.map(lambda a: a[:, idx][:, :n], arenas)
+
+
+def write_arena_pages(arenas: Dict[str, Dict[str, jax.Array]],
+                      pages: "list[int]", blocks
+                      ) -> Dict[str, Dict[str, jax.Array]]:
+    """Scatter page blocks (``{kind: {name: [Lk, n, page, ...]}}``, the
+    layout :func:`read_arena_pages` returns) into physical pages of
+    every arena buffer — the tier promotion write (DESIGN.md §9).
+
+    The index list pads to a power-of-two bucket with zero-page entries
+    whose block rows are zeros: re-writing the reserved zero page with
+    zeros is a value-level no-op, so every similar-sized promotion
+    shares one executable."""
+    if not pages:
+        return arenas
+    n = len(pages)
+    pad = _page_bucket(n) - n
+    idx = jnp.asarray(list(pages) + [0] * pad, jnp.int32)
+
+    def wr(a, b):
+        b = jnp.asarray(b).astype(a.dtype)
+        assert b.shape[1] == n, (b.shape, n)
+        if pad:
+            b = jnp.concatenate(
+                [b, jnp.zeros((b.shape[0], pad) + b.shape[2:], a.dtype)],
+                axis=1)
+        return a.at[:, idx].set(b)
+
+    return jax.tree.map(wr, arenas, blocks)
 
 
 def paged_step_view(pc: PagedCache,

@@ -343,6 +343,31 @@ class DecodeSession:
         self.state = self.state._replace(
             cache=PagedCache(arenas, cache.page_table))
 
+    def read_cache_pages(self, pages: Sequence[int]):
+        """Gather whole physical pages out of this session's LIVE paged
+        arenas (the tier demotion read, DESIGN.md §9).  Mid-lane the
+        pool's stored arenas are stale — the current values ride this
+        session's step futures — so host-ward copies must come through
+        here.  Returns device blocks {kind: {name: [Lk, n, page, ...]}}
+        (callers ``np.asarray`` them, which syncs on the in-flight
+        step)."""
+        cache = self.state.cache
+        assert isinstance(cache, PagedCache), "page read needs paging"
+        return cache_lib.read_arena_pages(cache.arenas, list(pages))
+
+    def write_cache_pages(self, pages: Sequence[int], blocks) -> None:
+        """Scatter whole-page blocks into this session's LIVE paged
+        arenas (the tier promotion write, §9).  The write is dispatched
+        as an ``.at[].set`` on the step-future arenas, so it lands in
+        dataflow order after the in-flight step without a host sync —
+        which is what lets promotions overlap decode."""
+        cache = self.state.cache
+        assert isinstance(cache, PagedCache), "page write needs paging"
+        arenas = cache_lib.write_arena_pages(cache.arenas, list(pages),
+                                             blocks)
+        self.state = self.state._replace(
+            cache=PagedCache(arenas, cache.page_table))
+
     def _cow_if_shared(self) -> None:
         """Copy-on-write barrier: immediately before the first cache
         write (first step, compiled-loop entry, or an explicit refresh),

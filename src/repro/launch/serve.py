@@ -66,6 +66,18 @@ def main(argv=None):
                          "(paged mode only; default on)")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="hierarchical cache (DESIGN.md §9): host-RAM "
+                         "page tier capacity in exact-page units — "
+                         "evicted prefix entries demote there instead "
+                         "of dying and promote back on a hit; 0 = off "
+                         "(needs --pool-pages and the prefix cache)")
+    ap.add_argument("--host-dtype", default="auto",
+                    choices=["auto", "f32", "int8"],
+                    help="cold-tier representation: f32 = every "
+                         "promotion byte-identical; int8 = ~2x host "
+                         "capacity, promoted prefixes allclose-class; "
+                         "auto = int8 only for stability-scored pages")
     ap.add_argument("--serve", action="store_true",
                     help="online mode (DESIGN.md §8): run the asyncio "
                          "streaming front-end instead of the offline "
@@ -112,7 +124,8 @@ def main(argv=None):
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
         pool_pages=args.pool_pages, page_size=args.page_size,
-        prefix_cache=args.prefix_cache, slo_policy=slo_policy,
+        prefix_cache=args.prefix_cache, host_pages=args.host_pages,
+        host_dtype=args.host_dtype, slo_policy=slo_policy,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
@@ -141,7 +154,17 @@ def main(argv=None):
                   f"{stats.prefix_tokens_saved} prefill tokens saved, "
                   f"{stats.prefix_published} pages published "
                   f"({stats.prefix_publish_skipped} skipped), "
-                  f"{stats.prefix_evicted_pages} evicted")
+                  f"{stats.prefix_evicted_pages} evicted "
+                  f"({stats.prefix_demoted_pages} demoted, "
+                  f"{stats.prefix_dropped_pages} dropped)")
+        if engine.host_pool is not None:
+            print(f"host tier: {args.host_pages} page units "
+                  f"({args.host_dtype}), "
+                  f"{stats.prefix_promoted_pages} pages promoted in "
+                  f"{stats.prefix_promotions} promotions "
+                  f"({stats.promotion_stalls} stalls), "
+                  f"peak util {stats.peak_host_util:.0%}, "
+                  f"{engine.host_pool.used_pages} resident at exit")
     for req in engine.done[:3]:
         print(f"  req {req.uid}: out={req.output[:10]}...")
     return 0

@@ -103,13 +103,15 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
 from repro.core.cache import PagedCache, n_logical_pages
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm.decoding import DecodeSettings, partial_prefill_supported
 from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
 from repro.dlm.session import DecodeSession, SharedPrefix
-from repro.serving.pool import OutOfPages, PagePool
-from repro.serving.prefix import PrefixIndex
+from repro.serving.hier import HostPagePool, TierManager
+from repro.serving.pool import OutOfPages, PagePool, cache_signature
+from repro.serving.prefix import PrefixIndex, PrefixMatch
 from repro.serving.slo import SLO, SLOPolicy
 
 # (settings, strategy, scheduler): everything the compiled step closes
@@ -177,6 +179,12 @@ class Request:
     emitted: Optional[np.ndarray] = None
     plan_epoch: Optional[int] = None  # prefix plan validity (see §8)
     boosted: bool = False           # urgency transition already seen
+    # host tier (DESIGN.md §9): a plan whose match lives (partly) in
+    # host RAM parks here in the PROMOTING admission state until the
+    # engine services it (overlap window or synchronously at admission)
+    pending_promotion: Optional["PrefixMatch"] = None
+    no_promote: bool = False        # sticky: promotion failed once —
+    #                                 this admission runs device-only
 
 
 @dataclasses.dataclass
@@ -194,8 +202,15 @@ class EngineStats:
     prefix_published: int = 0       # pages copied into the index
     prefix_publish_skipped: int = 0  # publications dropped (pool short)
     prefix_evicted_pages: int = 0   # index pages evicted under pressure
+    # host tier (DESIGN.md §9): evicted splits into demoted vs dropped
+    prefix_demoted_pages: int = 0   # ... demoted to the host tier
+    prefix_dropped_pages: int = 0   # ... dropped (tier off/full/stable)
+    prefix_promoted_pages: int = 0  # host pages promoted back
+    prefix_promotions: int = 0      # promotion events serviced
+    promotion_stalls: int = 0       # promotions abandoned (no headroom)
     peak_pool_util: float = 0.0
     steady_pool_util: float = 0.0
+    peak_host_util: float = 0.0     # host-tier unit budget high-water
     # online serving / SLO accounting (DESIGN.md §8)
     requests_shed: int = 0          # dropped by the SLO policy
     requests_canceled: int = 0      # client cancel / disconnect
@@ -239,6 +254,7 @@ class ServingEngine:
                  continuous: bool = True,
                  pool_pages: int = 0, page_size: int = 16,
                  prefix_cache: bool = False,
+                 host_pages: int = 0, host_dtype: str = "auto",
                  slo_policy: Optional[SLOPolicy] = None,
                  clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
@@ -260,6 +276,19 @@ class ServingEngine:
                                  strategy=self.strategy)
             if prefix_cache:
                 self.prefix = PrefixIndex(page_size)
+        # host-RAM page tier (DESIGN.md §9): evicted index entries
+        # demote host-ward instead of dying; hits promote back
+        self.host_pool: Optional[HostPagePool] = None
+        self.tier: Optional[TierManager] = None
+        if self.paged and self.prefix is not None and host_pages > 0:
+            self.host_pool = HostPagePool(host_pages)
+            self.tier = TierManager(self.host_pool, host_dtype=host_dtype,
+                                    read_pages=self._tier_read)
+            self.prefix.tier = self.tier
+        # tier IO routing: mid-lane the live arenas ride the active
+        # session's step futures, not the pool's stored copies
+        self._active_sess: Optional[DecodeSession] = None
+        self._active_sig: Optional[Tuple] = None
         # partial (suffix-only) reuse needs a window-free all-attention
         # stack and a float cache (DESIGN.md §6); full-run hits are an
         # exact page copy and work for any architecture/dtype
@@ -541,9 +570,12 @@ class ServingEngine:
         if (self.paged and self.prefix is not None
                 and self._admission_dirty):
             for req in self._lane_candidates(lane)[:1]:
-                if req.n_pages and req.plan_epoch != self._prefix_epoch:
-                    self._prefix_plan(req)
-                    req.plan_epoch = self._prefix_epoch
+                if req.n_pages:
+                    # plans AND services a PROMOTING candidate inside
+                    # the dispatch window: the host->device write rides
+                    # the live arenas in dataflow order, overlapping
+                    # the in-flight decode step (DESIGN.md §9)
+                    self._plan_with_promotion(req)
 
     def _stream_tokens(self, slots: List[Optional[Request]],
                        sess: DecodeSession,
@@ -599,8 +631,15 @@ class ServingEngine:
             return
         match = self.prefix.lookup(self._prefix_key(req),
                                    self._prompt_in_canvas(req),
-                                   partial_ok=self._partial_ok)
+                                   partial_ok=self._partial_ok,
+                                   promote_ok=(self.tier is not None
+                                               and not req.no_promote))
         if match is None:
+            return
+        if match.needs_promotion:
+            # PROMOTING: the match lives (partly) in the host tier —
+            # no holds yet; _promote_now converts this to a device plan
+            req.pending_promotion = match
             return
         self.pool.retain(list(match.pages))
         req.holds = list(match.pages)
@@ -611,6 +650,7 @@ class ServingEngine:
         self._release_holds(req)
         req.shared_n, req.shared_full = 0, False
         req.plan_epoch = None
+        req.pending_promotion = None
 
     def _count_prefix_hit(self, req: Request) -> None:
         """Admission succeeded: account the planned hit."""
@@ -685,16 +725,153 @@ class ServingEngine:
         rejected = self.prefix.insert(key, prompt, pages)
         if rejected:
             self.pool.release(rejected)
+        adopted = [p for p in pub if p not in rejected]
+        if adopted and self.tier is not None:
+            # register signature + per-page stability (from the
+            # identifier rows just copied) so a later demotion knows
+            # which arenas to read and how cold-worthy each page is
+            self.tier.note_published(
+                cache_signature(self.cfg, req.lane[1]), adopted,
+                self._proxy_blocks(sess, adopted))
         self.stats.prefix_published += len(pub) - len(rejected)
         self._prefix_epoch += 1       # pre-planned misses may now hit
 
     def drop_prefix_cache(self) -> int:
-        """Release every index hold and clear the trie (tests, or
-        explicit memory reclamation).  Returns pages released."""
+        """Release every index hold, free every host-tier ref, and
+        clear the trie (tests, or explicit memory reclamation).
+        Returns device pages released."""
         if self.prefix is None:
             return 0
         self._prefix_epoch += 1
         return self.prefix.clear(self.pool)
+
+    # ------------------------------------------------------------------
+    # Host tier: demote/promote IO + promotion service (DESIGN.md §9)
+    # ------------------------------------------------------------------
+
+    def _tier_read(self, sig: Tuple, pages: List[int]):
+        """Demotion read: whole physical pages as host (numpy) blocks.
+        Mid-lane the live arenas are the active session's step futures
+        — the pool's stored copies are stale — so reads route through
+        the session (np.asarray syncs on the in-flight step)."""
+        if self._active_sess is not None and self._active_sig == sig:
+            blocks = self._active_sess.read_cache_pages(pages)
+        else:
+            arenas = self.pool.peek_arenas(sig)
+            assert arenas is not None, (
+                "demoting pages from a signature with no arenas")
+            blocks = cache_lib.read_arena_pages(arenas, pages)
+        return {kind: {name: np.asarray(b) for name, b in bufs.items()}
+                for kind, bufs in blocks.items()}
+
+    def _tier_write(self, sig: Tuple, pages: List[int], blocks) -> None:
+        """Promotion write: scatter host blocks into the signature's
+        device arenas.  Through the live session mid-lane the write is
+        dispatched (not synced), landing in dataflow order after the
+        in-flight step — promotions overlap decode."""
+        if self._active_sess is not None and self._active_sig == sig:
+            self._active_sess.write_cache_pages(pages, blocks)
+            return
+        arenas = self.pool.peek_arenas(sig)
+        assert arenas is not None, (
+            "promoting pages into a signature with no arenas")
+        self.pool.put_arenas(
+            sig, cache_lib.write_arena_pages(arenas, pages, blocks))
+
+    def _proxy_blocks(self, sess: DecodeSession, pages: List[int]):
+        """Per-page singular-proxy identifier rows for stability
+        scoring (hier.page_stability) — None for proxy-less caches."""
+        cache = sess.state.cache
+        sub = {kind: {"proxy": bufs["proxy"]}
+               for kind, bufs in cache.arenas.items() if "proxy" in bufs}
+        if not sub:
+            return None
+        kind = next(iter(sub))
+        blk = np.asarray(
+            cache_lib.read_arena_pages(sub, list(pages))[kind]["proxy"])
+        return {p: blk[:, i] for i, p in enumerate(pages)}
+
+    def _evict_index(self, n_pages: int) -> int:
+        """Index eviction with the §9 telemetry split: evicted device
+        pages divide into demoted (moved host-ward) and dropped.
+        Delta-accounted off the prefix counters so warm-up resets of
+        ``stats`` don't double-count."""
+        d0 = self.prefix.demoted_pages
+        x0 = self.prefix.dropped_pages
+        freed = self.prefix.evict(self.pool, n_pages)
+        self.stats.prefix_demoted_pages += self.prefix.demoted_pages - d0
+        self.stats.prefix_dropped_pages += self.prefix.dropped_pages - x0
+        if freed:
+            self.stats.prefix_evicted_pages += freed
+            self._prefix_epoch += 1
+        return freed
+
+    def _promote_now(self, req: Request) -> bool:
+        """Service a PROMOTING request: allocate device pages for the
+        match's host refs, write the (dequantized) blocks into the
+        signature's arenas, re-point the trie entries, and leave the
+        request with a normal device plan + read holds.  Returns True
+        on success.  On failure the plan is dropped — a stale match
+        replans; a headroom failure marks the request ``no_promote`` so
+        its replan runs device-only instead of retrying forever."""
+        match = req.pending_promotion
+        req.pending_promotion = None
+        if match is None:
+            return False
+        if not self.prefix.sites_intact(match):
+            req.plan_epoch = None       # trie moved: replan fresh
+            return False
+        n = len(match.host_refs)
+        # hold the match's device prefix while we make headroom — the
+        # eviction below must not cannibalize our own plan
+        self.pool.retain(list(match.pages))
+        short = max(0, n - self.pool.available)
+        if short and self.prefix.evictable_total(self.pool) >= short:
+            self._evict_index(short)
+        pages = self.pool.alloc(n)
+        if pages is None or not self.prefix.sites_intact(match):
+            if pages is not None:
+                self.pool.free(pages)
+            else:
+                req.no_promote = True
+            self.pool.release(list(match.pages))
+            req.plan_epoch = None
+            self.stats.promotion_stalls += 1
+            return False
+        refs = list(match.host_refs)
+        sig, blocks = self.tier.promote(refs)
+        self._tier_write(sig, pages, blocks)
+        all_pages = self.prefix.install_promoted(match, pages)
+        self.tier.note_promoted(sig, pages, refs)
+        self.pool.retain(pages)         # index owns rc1; reader hold
+        req.holds = all_pages
+        req.shared_n = len(all_pages)
+        req.shared_full = match.full
+        self.stats.prefix_promoted_pages += n
+        self.stats.prefix_promotions += 1
+        self._prefix_epoch += 1         # planned misses may now hit
+        req.plan_epoch = self._prefix_epoch
+        self._admission_dirty = True
+        return True
+
+    def _plan_with_promotion(self, req: Request) -> None:
+        """Plan an admission candidate, resolving a PROMOTING state
+        synchronously.  A failed promotion replans once against the
+        fresh trie (a second PROMOTING outcome is only possible after
+        another concurrent mutation — promote again or give up cold)."""
+        if req.plan_epoch != self._prefix_epoch:
+            self._prefix_plan(req)
+            req.plan_epoch = self._prefix_epoch
+        if req.pending_promotion is None:
+            return
+        if not self._promote_now(req) and req.plan_epoch is None:
+            self._prefix_plan(req)
+            req.plan_epoch = self._prefix_epoch
+            if req.pending_promotion is not None:
+                self._promote_now(req)
+                req.pending_promotion = None
+                if req.plan_epoch is None:
+                    req.plan_epoch = self._prefix_epoch
 
     # ------------------------------------------------------------------
     # Admission control + preemption (paged mode)
@@ -766,10 +943,10 @@ class ServingEngine:
             # matched entry from this admission's own index eviction.
             # A plan made at the current index epoch (the double-buffer
             # overlap pre-plans the head candidate while the device
-            # step is in flight) is reused as-is.
-            if req.plan_epoch != self._prefix_epoch:
-                self._prefix_plan(req)
-                req.plan_epoch = self._prefix_epoch
+            # step is in flight) is reused as-is; a PROMOTING plan is
+            # serviced synchronously here (the overlap window is the
+            # async fast path for the head candidate).
+            self._plan_with_promotion(req)
             page_short = (max(0, req.n_pages - self.pool.available)
                           if req.n_pages else 0)
             victims = []
@@ -794,11 +971,9 @@ class ServingEngine:
                     and self.pool.available + freeable
                     + self.prefix.evictable_total(self.pool)
                     >= req.n_pages)
-                freed = (self.prefix.evict(self.pool, page_short)
+                freed = (self._evict_index(page_short)
                          if feasible else 0)
                 if freed:
-                    self.stats.prefix_evicted_pages += freed
-                    self._prefix_epoch += 1
                     page_short = max(0, req.n_pages - self.pool.available)
             if page_short or not slot_free:
                 if sess is None:
@@ -943,6 +1118,10 @@ class ServingEngine:
             self.stats.peak_pool_util = (self.pool.peak_used
                                          / max(self.pool.capacity, 1))
             self.stats.steady_pool_util = self.pool.steady_utilization
+        if self.host_pool is not None:
+            self.stats.peak_host_util = (
+                self.host_pool.peak_units
+                / max(self.host_pool.capacity_units, 1))
 
     def _run_lane(self, lane: LaneKey, max_steps: int,
                   on_step=None) -> None:
@@ -997,6 +1176,11 @@ class ServingEngine:
             sess.attach(tokens, active=active, kv_len=kv,
                         arenas=arenas, page_table=pt,
                         shared=shared_specs or None)
+            if strategy.uses_cache:
+                # tier reads/writes route through this session until
+                # the lane ends (the pool's copies are stale, §9)
+                self._active_sess = sess
+                self._active_sig = cache_signature(self.cfg, strategy)
             for req in batch:
                 self._maybe_publish(req, sess)
         else:
@@ -1116,3 +1300,5 @@ class ServingEngine:
         if (self.paged and strategy.uses_cache and sess.state is not None
                 and isinstance(sess.state.cache, PagedCache)):
             self.pool.store_arenas(strategy, sess.state.cache.arenas)
+        self._active_sess = None
+        self._active_sig = None

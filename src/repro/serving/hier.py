@@ -1,0 +1,400 @@
+"""Hierarchical cache: host-RAM page tier + dynamic eviction (DESIGN.md §9).
+
+The device :class:`~repro.serving.pool.PagePool` caps the prefix index
+at one HBM arena: under multi-tenant traffic ``PrefixIndex.evict``
+permanently frees LRU entries, so the index can never hold more
+prefixes than HBM fits — the rigid-capacity limitation SPA-Cache argues
+against at the layer level, recurring at the memory-system level.  This
+module adds the second tier:
+
+  * :class:`HostPagePool` — per-signature page arenas mirrored in host
+    memory (numpy stands in for pinned allocations on this CPU
+    container; on TPU the same layout maps onto ``pinned_host`` buffer
+    donation).  Capacity is counted in *exact-page units*; an int8 page
+    costs half a unit, so the cold tier stretches ~2x per byte.
+  * :class:`TierManager` — the demote/promote broker between the device
+    pool and the host pool.  On prefix-index eviction it reads the
+    victim pages device->host (one bucketed
+    :func:`~repro.core.cache.read_arena_pages` gather) and stores them
+    exact or int8; on a host-resident prefix hit the engine promotes
+    them back with :func:`~repro.core.cache.write_arena_pages`,
+    overlapped with the in-flight decode step (DESIGN.md §8/§9).
+  * Sparse-dLLM-style **dynamic eviction**: a per-page stability score
+    derived from the singular-proxy identifiers the strategy already
+    keeps.  Stable pages (near-parallel identifier rows — e.g. the
+    all-[MASK] tail pages of a prefill) are demote-FIRST, quantize to
+    int8 under ``host_dtype="auto"``, and are dropped outright instead
+    of demoted when the host tier is full — recomputing a stable page
+    via prefill is the cheap case, so the host budget goes to the
+    drift-heavy pages that are expensive to reproduce.
+
+Exactness classes (DESIGN.md §9): a page demoted exact (f32, or an
+already-int8 device cache) promotes byte-identical, so a full prefix
+hit through the host tier keeps the §6 byte-parity guarantee.  A page
+demoted int8 promotes within the documented per-row quantization bound
+(``max|row|/254`` per element) — its entries are permanently marked
+inexact and any hit through them is *partial-hit class*: decode states
+allclose, not byte-identical (``tests/test_hier.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache import dequantize_rows_np, quantize_rows_np
+
+# host-buffer suffix for the int8 representation's per-row scales —
+# distinct from the device "_scale" buffers an int8 cache signature
+# already carries (those pass through the host tier untouched).
+_SCALE_SUFFIX = "_hscale"
+
+
+def page_stability(proxy_block: np.ndarray) -> float:
+    """Sparse-dLLM-style stability score for ONE page from its
+    identifier (singular-proxy) rows: the mean cosine of each row's
+    proxy to the page-mean proxy direction, clipped to [0, 1].
+
+    ``proxy_block`` is ``[Lk, page, r]`` (or any ``[..., rows, r]``).
+    Rows that all point the same way carry little mutual information —
+    the canonical case is a prefill's all-[MASK] tail pages, whose rows
+    see near-identical context — so the page is cheap to reproduce and
+    safe to quantize; drift-heterogeneous pages score low and keep
+    their exact representation.  Pages without identifier buffers score
+    0.0 (least stable: never dropped in favour of a scored page)."""
+    x = np.asarray(proxy_block).astype(np.float32)
+    if x.size == 0:
+        return 0.0
+    x = x.reshape(-1, x.shape[-1])
+    norms = np.linalg.norm(x, axis=-1)
+    live = norms > 1e-8
+    if not live.any():
+        return 0.0
+    unit = x[live] / norms[live, None]
+    mean = unit.mean(axis=0)
+    mn = np.linalg.norm(mean)
+    if mn < 1e-8:
+        return 0.0
+    cos = unit @ (mean / mn)
+    return float(np.clip(cos.mean(), 0.0, 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class HostPageRef:
+    """One demoted page's host-tier address.
+
+    ``sig``: the device cache signature whose arenas the page came from
+    (and must promote back into); ``repr_``: "exact" | "int8";
+    ``slot``: slot index in the (sig, repr_) host arena; ``units``:
+    half-page accounting units the slot occupies; ``exact``: whether a
+    promotion reproduces the ORIGINAL device bytes (False once a page
+    has ever passed through int8); ``stability``: the score the page
+    was demoted with (kept so a re-demotion after promotion reuses it).
+    """
+    sig: Tuple
+    repr_: str
+    slot: int
+    units: int
+    exact: bool
+    stability: float
+
+
+class HostPagePool:
+    """Host-memory mirror of :class:`~repro.serving.pool.PagePool`:
+    one numpy arena per cache buffer per (signature, representation),
+    with a global capacity counted in exact-page units.
+
+    ``n_pages`` is the budget in EXACT pages; internal accounting uses
+    half-page units (exact page = 2 units, int8 page = 1 unit) so an
+    int8 cold tier holds ~2x the pages of the same byte budget.  Arenas
+    materialize lazily from the first demoted block's shapes and grow
+    by doubling — host RAM is the abundant resource here, the budget
+    models the *transfer + residency* cost, not an allocator limit."""
+
+    def __init__(self, n_pages: int):
+        if n_pages <= 0:
+            raise ValueError("host tier needs n_pages > 0")
+        self.n_pages = n_pages
+        self.capacity_units = 2 * n_pages
+        self.used_units = 0
+        self.peak_units = 0
+        # (sig, repr) -> {"arenas": {kind: {name: np [Lk, slots, ...]}},
+        #                 "free": [slot], "n_slots": int}
+        self._store: Dict[Tuple, Dict] = {}
+        self.pages_in = 0      # lifetime demotions accepted
+        self.pages_out = 0     # lifetime promotions served
+
+    # ---- accounting --------------------------------------------------
+
+    @property
+    def used_pages(self) -> int:
+        """Live host slots (pages resident in the tier)."""
+        return sum(e["n_slots"] - len(e["free"])
+                   for e in self._store.values())
+
+    @property
+    def utilization(self) -> float:
+        return self.used_units / max(self.capacity_units, 1)
+
+    def fits(self, units: int) -> bool:
+        return self.used_units + units <= self.capacity_units
+
+    def reset_telemetry(self) -> None:
+        self.peak_units = self.used_units
+        self.pages_in = 0
+        self.pages_out = 0
+
+    # ---- slots -------------------------------------------------------
+
+    def _entry(self, sig: Tuple, repr_: str, block_one):
+        key = (sig, repr_)
+        e = self._store.get(key)
+        if e is None:
+            e = {"arenas": {}, "free": [], "n_slots": 0}
+            self._store[key] = e
+        if not e["arenas"]:
+            e["arenas"] = {
+                kind: {name: np.zeros((b.shape[0], 0) + b.shape[2:],
+                                      b.dtype)
+                       for name, b in bufs.items()}
+                for kind, bufs in block_one.items()}
+        return e
+
+    def _grow(self, e: Dict, n: int) -> None:
+        grow = max(n, e["n_slots"], 4)
+        for bufs in e["arenas"].values():
+            for name, a in list(bufs.items()):
+                bufs[name] = np.concatenate(
+                    [a, np.zeros((a.shape[0], grow) + a.shape[2:],
+                                 a.dtype)], axis=1)
+        e["free"].extend(range(e["n_slots"], e["n_slots"] + grow))
+        e["n_slots"] += grow
+
+    def store(self, sig: Tuple, repr_: str, units_per_page: int,
+              blocks) -> Optional[List[int]]:
+        """Adopt ``blocks`` ({kind: {name: [Lk, n, ...]}}) into the
+        (sig, repr_) arena; returns the slots, or None when the unit
+        budget can't cover them (the caller drops the pages)."""
+        n = next(iter(next(iter(blocks.values())).values())).shape[1]
+        if not self.fits(n * units_per_page):
+            return None
+        e = self._entry(sig, repr_, blocks)
+        if len(e["free"]) < n:
+            self._grow(e, n - len(e["free"]))
+        slots = [e["free"].pop() for _ in range(n)]
+        idx = np.asarray(slots)
+        for kind, bufs in blocks.items():
+            for name, b in bufs.items():
+                e["arenas"][kind][name][:, idx] = b
+        self.used_units += n * units_per_page
+        self.peak_units = max(self.peak_units, self.used_units)
+        self.pages_in += n
+        return slots
+
+    def load(self, sig: Tuple, repr_: str, slots: List[int]):
+        """Blocks ({kind: {name: [Lk, n, ...]}}) for host slots, in
+        order.  Read-only: pair with :meth:`free` to evict them."""
+        e = self._store[(sig, repr_)]
+        idx = np.asarray(slots)
+        return {kind: {name: a[:, idx].copy() for name, a in bufs.items()}
+                for kind, bufs in e["arenas"].items()}
+
+    def free(self, sig: Tuple, repr_: str, slots: List[int],
+             units_per_page: int) -> None:
+        e = self._store[(sig, repr_)]
+        for s in slots:
+            assert s not in e["free"], f"double free of host slot {s}"
+            e["free"].append(s)
+        self.used_units -= len(slots) * units_per_page
+        assert self.used_units >= 0
+
+
+class TierManager:
+    """Demotion/promotion policy between the device pool and the host
+    tier (DESIGN.md §9).
+
+    The engine wires ``read_pages(sig, pages) -> blocks`` to the LIVE
+    arenas (the running lane's session mid-lane, the pool's stored
+    arenas otherwise) and registers per-page stability + signature at
+    prefix publication time; :class:`~repro.serving.prefix.PrefixIndex`
+    calls :meth:`demote` from its eviction loop and the engine calls
+    :meth:`promote` from its overlap window.
+
+    ``host_dtype``: "f32" keeps every demoted page exact, "int8"
+    quantizes every float page, "auto" (default) quantizes pages whose
+    stability clears ``stable_threshold`` and keeps drift-heavy pages
+    exact.  A device signature that is already int8 always demotes
+    exact (it is bytes, and costs the int8 unit rate)."""
+
+    def __init__(self, host: HostPagePool, *, host_dtype: str = "auto",
+                 stable_threshold: float = 0.9,
+                 read_pages: Optional[Callable] = None):
+        assert host_dtype in ("f32", "int8", "auto"), host_dtype
+        self.host = host
+        self.host_dtype = host_dtype
+        self.stable_threshold = stable_threshold
+        self.read_pages = read_pages     # (sig, pages) -> np blocks
+        self._sig_of: Dict[int, Tuple] = {}       # device page -> sig
+        self._stability: Dict[int, float] = {}    # device page -> score
+        self.demoted_pages = 0
+        self.promoted_pages = 0
+        self.dropped_full = 0      # demotions refused: host tier full
+        self.dropped_stable = 0    # demotions skipped: stable under pressure
+
+    # ---- engine registration ----------------------------------------
+
+    def note_published(self, sig: Tuple, pages: List[int],
+                       proxy_blocks: Optional[Dict[int, np.ndarray]]
+                       ) -> None:
+        """Register freshly published index pages: their signature (so
+        a later demotion reads the right arenas) and their stability
+        score from the identifier rows (``proxy_blocks`` maps page ->
+        [Lk, page_rows, r], or None for proxy-less strategies)."""
+        for p in pages:
+            self._sig_of[p] = sig
+            blk = (proxy_blocks or {}).get(p)
+            self._stability[p] = (page_stability(blk)
+                                  if blk is not None else 0.0)
+
+    def forget(self, pages: List[int]) -> None:
+        """Device pages left the index without demoting (dropped)."""
+        for p in pages:
+            self._sig_of.pop(p, None)
+            self._stability.pop(p, None)
+
+    def stability(self, page: int) -> float:
+        return self._stability.get(page, 0.0)
+
+    # ---- representation policy --------------------------------------
+
+    def _sig_is_int8(self, sig: Tuple) -> bool:
+        # cache_signature = (proxy_dim, incremental, uses_cache, dtype)
+        return len(sig) >= 4 and sig[3] == "int8"
+
+    def _repr_for(self, sig: Tuple, stability: float,
+                  exact_in: bool) -> Tuple[str, int, bool]:
+        """(repr_, units_per_page, exact_out) for one page."""
+        if self._sig_is_int8(sig):
+            # already int8 bytes: exact round-trip at the cold rate
+            return "exact", 1, exact_in
+        if self.host_dtype == "f32":
+            return "exact", 2, exact_in
+        if self.host_dtype == "int8":
+            return "int8", 1, False
+        if stability >= self.stable_threshold:
+            return "int8", 1, False
+        return "exact", 2, exact_in
+
+    # ---- demote ------------------------------------------------------
+
+    def demote(self, pages: List[int],
+               exact_in: bool = True) -> Optional[List[HostPageRef]]:
+        """Move one eviction unit's device pages host-ward.  Returns
+        one :class:`HostPageRef` per page, or None to DROP the whole
+        unit (unknown signature, read path unwired, or the host budget
+        can't take it — a tail is all-or-nothing: a partial tail can
+        never serve a full hit).  The caller releases the device pages
+        either way; the refs own the host slots until :meth:`promote`
+        or :meth:`free_refs`."""
+        if not pages or self.read_pages is None:
+            return None
+        sig = self._sig_of.get(pages[0])
+        if sig is None or any(self._sig_of.get(p) != sig for p in pages):
+            return None
+        plan = [self._repr_for(sig, self.stability(p), exact_in)
+                for p in pages]
+        need = sum(u for _, u, _ in plan)
+        if not self.host.fits(need):
+            # under host pressure stable pages skip the tier entirely
+            # (Sparse-dLLM: stable state is the cheap-to-recompute kind)
+            if all(self.stability(p) >= self.stable_threshold
+                   for p in pages):
+                self.dropped_stable += len(pages)
+            else:
+                self.dropped_full += len(pages)
+            return None
+        blocks = self.read_pages(sig, list(pages))
+        refs: List[HostPageRef] = []
+        for i, (p, (repr_, units, exact_out)) in enumerate(
+                zip(pages, plan)):
+            one = {kind: {name: b[:, i:i + 1] for name, b in bufs.items()}
+                   for kind, bufs in blocks.items()}
+            if repr_ == "int8":
+                one = _quantize_blocks(one)
+            slots = self.host.store(sig, repr_, units, one)
+            assert slots is not None        # fits() checked above
+            refs.append(HostPageRef(sig=sig, repr_=repr_, slot=slots[0],
+                                    units=units, exact=exact_out,
+                                    stability=self.stability(p)))
+        self.demoted_pages += len(pages)
+        self.forget(pages)
+        return refs
+
+    # ---- promote -----------------------------------------------------
+
+    def promote(self, refs: List[HostPageRef]):
+        """Read the refs' pages back as DEVICE-layout blocks
+        ({kind: {name: [Lk, n, page, ...]}}, int8 hosts dequantized)
+        and free their host slots.  All refs must share one signature
+        (one prefix entry, one arena set)."""
+        assert refs
+        sig = refs[0].sig
+        assert all(r.sig == sig for r in refs)
+        outs = []
+        for r in refs:
+            one = self.host.load(sig, r.repr_, [r.slot])
+            if r.repr_ == "int8":
+                one = _dequantize_blocks(one)
+            outs.append(one)
+            self.host.free(sig, r.repr_, [r.slot], r.units)
+        blocks = {
+            kind: {name: np.concatenate([o[kind][name] for o in outs],
+                                        axis=1)
+                   for name in outs[0][kind]}
+            for kind in outs[0]}
+        self.promoted_pages += len(refs)
+        self.host.pages_out += len(refs)
+        return sig, blocks
+
+    def note_promoted(self, sig: Tuple, pages: List[int],
+                      refs: List[HostPageRef]) -> None:
+        """Promoted pages are device pages again: keep their signature
+        and carried stability so a re-demotion skips the re-score."""
+        for p, r in zip(pages, refs):
+            self._sig_of[p] = sig
+            self._stability[p] = r.stability
+
+    def free_refs(self, refs: List[HostPageRef]) -> None:
+        """Drop host refs without promoting (index clear / supersede)."""
+        for r in refs:
+            self.host.free(r.sig, r.repr_, [r.slot], r.units)
+
+
+def _quantize_blocks(blocks):
+    """int8-quantize every float buffer of a block tree (per-row scale
+    stored as ``{name}_hscale``); integer buffers pass through."""
+    out = {}
+    for kind, bufs in blocks.items():
+        out[kind] = {}
+        for name, b in bufs.items():
+            if np.issubdtype(np.asarray(b).dtype, np.integer):
+                out[kind][name] = np.asarray(b)
+            else:
+                q, s = quantize_rows_np(b)
+                out[kind][name] = q
+                out[kind][name + _SCALE_SUFFIX] = s
+    return out
+
+
+def _dequantize_blocks(blocks):
+    out = {}
+    for kind, bufs in blocks.items():
+        out[kind] = {}
+        for name, b in bufs.items():
+            if name.endswith(_SCALE_SUFFIX):
+                continue
+            s = bufs.get(name + _SCALE_SUFFIX)
+            out[kind][name] = (b if s is None
+                               else dequantize_rows_np(b, s))
+    return out

@@ -124,7 +124,17 @@ class PagePool:
                 self._rc[p] = rc - 1
 
     def free(self, pages: List[int]) -> None:
-        """Back-compat alias: drop ONE hold per page (see release)."""
+        """Free exclusively-owned pages.  Unlike :meth:`release` (drop
+        ONE hold), ``free`` asserts the caller is the LAST holder —
+        freeing a page the prefix index or another reader still holds
+        is the double-release footgun that used to corrupt the
+        free-list silently.  Shared pages must go through ``release``.
+        """
+        for p in pages:
+            rc = self._rc.get(p, 0)
+            assert rc == 1, (
+                f"free of page {p} with refcount {rc}; "
+                "shared pages must be release()d, not free()d")
         self.release(pages)
 
     def refcount(self, page: int) -> int:
@@ -172,6 +182,18 @@ class PagePool:
         the next lane with the same signature reuses the allocation."""
         if arenas:
             self._arenas[cache_signature(self.cfg, strategy)] = arenas
+
+    def peek_arenas(self, sig: Tuple):
+        """Stored arenas for a raw signature (None if never built).
+        NOTE: stale while a lane is mid-flight — the live values ride
+        the session's step futures; the engine's tier read/write hooks
+        route through the active session in that window (§9)."""
+        return self._arenas.get(sig)
+
+    def put_arenas(self, sig: Tuple, arenas) -> None:
+        """Store updated arena arrays for a raw signature (promotion
+        writes between lanes go through here)."""
+        self._arenas[sig] = arenas
 
     def page_table_row(self, pages: List[int], canvas_len: int
                        ) -> List[int]:

@@ -43,6 +43,21 @@ copy-on-write before their first commit.  Under admission pressure the
 engine evicts least-recently-used entries whose pages have no readers
 (``evict``) — deepest-first, so a surviving node's path to the root
 always has pages.
+
+**Host tier (DESIGN.md §9).** When a :class:`~repro.serving.hier.\
+TierManager` is attached (``self.tier``), eviction DEMOTES victims to
+host RAM instead of freeing their states: the entry stays in the trie
+with ``host`` refs in place of device pages, and a later hit promotes
+them back device-ward (``sites_intact`` / ``install_promoted`` are the
+engine's promotion handshake).  Victim order becomes stability-first
+(Sparse-dLLM-style: stable pages are cheap to re-prefill, so they go
+cold first), LRU within a stability bucket.  Deepest-first eviction
+keeps the invariant that along any path DEVICE pages form a contiguous
+logical prefix and host refs a suffix, with a surviving device tail
+implying an all-device path.  Entries carry an ``exact`` flag: pages
+demoted f32 (or from an already-int8 device cache) promote
+byte-identical; a page that ever passed through the int8 cold
+representation is permanently partial-hit class (allclose).
 """
 from __future__ import annotations
 
@@ -58,32 +73,54 @@ TokenRun = Tuple[int, ...]
 
 @dataclasses.dataclass
 class _Tail:
-    """Full-run completion for a prompt ending at the owning node."""
+    """Full-run completion for a prompt ending at the owning node.
+    Either ``pages`` (device-resident) or ``host`` (demoted to the §9
+    host tier) holds the states; ``exact`` is False once they have
+    passed through the int8 cold representation."""
     pages: List[int]
     last_used: int
+    host: Optional[List["HostPageRef"]] = None
+    exact: bool = True
 
 
 @dataclasses.dataclass
 class _Node:
-    """One logical page of prompt tokens; ``page`` holds its states."""
+    """One logical page of prompt tokens; ``page`` holds its states
+    (or ``host`` after a demotion to the §9 host tier)."""
     page: Optional[int] = None
     last_used: int = 0
     children: Dict[TokenRun, "_Node"] = dataclasses.field(
         default_factory=dict)
     tails: Dict[TokenRun, _Tail] = dataclasses.field(default_factory=dict)
+    host: Optional["HostPageRef"] = None
+    exact: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
 class PrefixMatch:
     """Lookup result: ``pages`` map logical pages [0, len(pages)) of the
     request's row; ``full`` means the whole row span is covered (skip
-    the prefill forward entirely)."""
+    the prefill forward entirely).  ``host_refs`` extend the match with
+    host-tier pages the engine must PROMOTE before attaching (they
+    cover logical pages [len(pages), n_pages) in order); ``sites``
+    records where each matched page/ref lives in the trie so the
+    promotion can validate (``sites_intact``) and install
+    (``install_promoted``) against concurrent evictions.  ``exact`` is
+    False when any matched state passed through int8 — the hit is then
+    partial-hit class (allclose), not byte-identical."""
     pages: Tuple[int, ...]
     full: bool
+    exact: bool = True
+    host_refs: Tuple["HostPageRef", ...] = ()
+    sites: Tuple[Tuple, ...] = ()
 
     @property
     def n_pages(self) -> int:
-        return len(self.pages)
+        return len(self.pages) + len(self.host_refs)
+
+    @property
+    def needs_promotion(self) -> bool:
+        return bool(self.host_refs)
 
 
 class PrefixIndex:
@@ -96,7 +133,13 @@ class PrefixIndex:
         self.hits = 0
         self.full_hits = 0
         self.misses = 0
-        self.evicted_pages = 0
+        self.evicted_pages = 0   # device pages freed by evict (total)
+        self.demoted_pages = 0   # ... of which moved host-ward (§9)
+        self.dropped_pages = 0   # ... of which died (+ host-ref prunes)
+        self.promoted_pages = 0  # host pages brought back device-ward
+        # Optional[hier.TierManager] — wired by the engine; None keeps
+        # the PR 5 single-tier behaviour (evict == drop) byte-for-byte.
+        self.tier = None
 
     # ---- keys ---------------------------------------------------------
 
@@ -114,34 +157,66 @@ class PrefixIndex:
     # ---- queries ------------------------------------------------------
 
     def lookup(self, root_key: Tuple, prompt: np.ndarray,
-               partial_ok: bool = True) -> Optional[PrefixMatch]:
+               partial_ok: bool = True,
+               promote_ok: bool = True) -> Optional[PrefixMatch]:
         """Longest page-aligned match for ``prompt`` under the layout
         root.  Returns a full-run match when the prompt ends exactly at
         the matched node and a tail entry exists; otherwise the matched
-        prefix pages (None when empty or ``partial_ok`` is False)."""
+        prefix pages (None when empty or ``partial_ok`` is False).
+
+        With ``promote_ok`` (and a host tier attached) the walk
+        continues through host-resident entries: the returned
+        ``host_refs``/``sites`` describe the promotion the engine must
+        perform before the covered pages are attachable."""
         now = self._tick()
         node = self.roots.get(root_key)
         runs, loose = self._split(prompt)
         pages: List[int] = []
+        host_refs: List = []
+        sites: List[Tuple] = []
+        exact = True
         if node is not None:
             for run in runs:
                 child = node.children.get(run)
-                if child is None or child.page is None:
-                    node = None if child is None else child
+                if child is None:
+                    node = None
                     break
-                child.last_used = now
-                pages.append(child.page)
+                if child.page is not None:
+                    child.last_used = now
+                    pages.append(child.page)
+                    sites.append(("dev", child, child.page))
+                    exact = exact and child.exact
+                elif child.host is not None and promote_ok:
+                    child.last_used = now
+                    host_refs.append(child.host)
+                    sites.append(("node", child))
+                    exact = exact and child.host.exact
+                else:
+                    node = child
+                    break
                 node = child
             else:
-                tail = node.tails.get(loose) if node is not None else None
-                if tail is not None:
+                tail = node.tails.get(loose)
+                if tail is not None and tail.pages and not host_refs:
                     tail.last_used = now
                     self.hits += 1
                     self.full_hits += 1
-                    return PrefixMatch(tuple(pages + tail.pages), True)
-        if pages and partial_ok:
+                    return PrefixMatch(tuple(pages + tail.pages), True,
+                                       exact=exact and tail.exact)
+                if tail is not None and tail.host and promote_ok:
+                    tail.last_used = now
+                    self.hits += 1
+                    self.full_hits += 1
+                    return PrefixMatch(
+                        tuple(pages), True,
+                        exact=exact and all(r.exact for r in tail.host),
+                        host_refs=tuple(host_refs) + tuple(tail.host),
+                        sites=tuple(sites) + (("tail", node, loose),))
+        if (pages or host_refs) and partial_ok:
             self.hits += 1
-            return PrefixMatch(tuple(pages), False)
+            return PrefixMatch(tuple(pages), False, exact=exact,
+                               host_refs=tuple(host_refs),
+                               sites=tuple(sites))
         self.misses += 1
         return None
 
@@ -161,9 +236,12 @@ class PrefixIndex:
         for depth, run in enumerate(runs):
             child = node.children.get(run) if node is not None else None
             if child is None or child.page is None:
+                # host-resident nodes count as missing: a fresh device
+                # publish supersedes the cold copy (insert frees it)
                 out.append(depth)
             node = child
-        if node is None or loose not in node.tails:
+        if (node is None or loose not in node.tails
+                or not node.tails[loose].pages):
             out.extend(range(len(runs), n_pages))
         return out
 
@@ -179,6 +257,8 @@ class PrefixIndex:
             nonlocal total
             stuck = False
             for tail in node.tails.values():
+                if not tail.pages:
+                    continue        # host-resident: no device hold
                 if all(pool.refcount(p) == 1 for p in tail.pages):
                     total += len(tail.pages)
                 else:
@@ -216,14 +296,25 @@ class PrefixIndex:
             page = pages[depth]
             if page is not None:
                 if child.page is None:
+                    if child.host is not None:
+                        # fresh device states supersede the cold copy
+                        self.tier.free_refs([child.host])
+                        child.host = None
                     child.page = page
+                    child.exact = True
                 else:
                     rejected.append(page)
             child.last_used = now
             node = child
         tail_pages = [p for p in pages[len(runs):] if p is not None]
         if tail_pages:
-            if loose in node.tails:
+            old = node.tails.get(loose)
+            if old is not None and not old.pages:
+                if old.host:
+                    self.tier.free_refs(old.host)
+                node.tails.pop(loose)
+                old = None
+            if old is not None:
                 rejected.extend(tail_pages)
             else:
                 node.tails[loose] = _Tail(tail_pages, now)
@@ -240,6 +331,8 @@ class PrefixIndex:
         def walk(node: _Node):
             blocked = False     # a page-bearing descendant or tail below
             for tail_key, tail in node.tails.items():
+                if not tail.pages:
+                    continue    # host-resident: no device hold, no block
                 if all(pool.refcount(p) == 1 for p in tail.pages):
                     units.append((tail.last_used, "tail", node, tail_key))
                 blocked = True
@@ -256,32 +349,163 @@ class PrefixIndex:
             walk(root)
         return units
 
+    def _unit_key(self, unit):
+        """Victim order.  Single-tier: pure LRU (PR 5 behaviour).  With
+        a host tier: stability-first — Sparse-dLLM's observation that
+        stable state is the cheap-to-reproduce kind, so it goes cold
+        before drift-heavy state — with LRU inside a stability bucket
+        (rounded to 0.1 so near-ties fall back to recency)."""
+        last_used, kind, node, tail_key = unit
+        if self.tier is None:
+            return (0.0, last_used)
+        pages = node.tails[tail_key].pages if kind == "tail" else [node.page]
+        stab = sum(self.tier.stability(p) for p in pages) / max(len(pages), 1)
+        return (-round(stab, 1), last_used)
+
     def evict(self, pool: PagePool, n_pages: int) -> int:
-        """Free at least ``n_pages`` pages of LRU unreferenced entries
-        (deepest-first by construction).  Returns pages actually freed —
-        may be fewer when everything left has readers."""
+        """Free at least ``n_pages`` device pages of unreferenced
+        entries (deepest-first by construction).  With a host tier
+        attached, victims DEMOTE host-ward and stay in the trie; the
+        tier may refuse (host budget full, or stable-under-pressure)
+        and the victim drops as in the single-tier path.  A dropped
+        NODE severs the lookup path through it, so host refs in its
+        subtree are pruned.  Returns device pages actually freed — may
+        be fewer when everything left has readers."""
         freed = 0
         while freed < n_pages:
             units = self._evictable(pool)
             if not units:
                 break
-            units.sort(key=lambda u: u[0])
+            units.sort(key=self._unit_key)
             _, kind, node, tail_key = units[0]
             if kind == "tail":
-                tail = node.tails.pop(tail_key)
-                pool.release(tail.pages)
-                freed += len(tail.pages)
-                self.evicted_pages += len(tail.pages)
+                tail = node.tails[tail_key]
+                pages = list(tail.pages)
+                refs = (self.tier.demote(pages, exact_in=tail.exact)
+                        if self.tier is not None else None)
+                if refs is not None:
+                    tail.pages = []
+                    tail.host = refs
+                    tail.exact = all(r.exact for r in refs)
+                    self.demoted_pages += len(pages)
+                else:
+                    node.tails.pop(tail_key)
+                    if self.tier is not None:
+                        self.tier.forget(pages)
+                    self.dropped_pages += len(pages)
             else:
-                pool.release([node.page])
+                pages = [node.page]
+                refs = (self.tier.demote(pages, exact_in=node.exact)
+                        if self.tier is not None else None)
+                if refs is not None:
+                    node.host = refs[0]
+                    node.exact = refs[0].exact
+                    self.demoted_pages += 1
+                else:
+                    if self.tier is not None:
+                        self.tier.forget(pages)
+                        self.dropped_pages += self._prune_host(node)
+                    self.dropped_pages += 1
                 node.page = None
-                freed += 1
-                self.evicted_pages += 1
+            pool.release(pages)
+            freed += len(pages)
+            self.evicted_pages += len(pages)
         return freed
 
+    def _prune_host(self, node: _Node) -> int:
+        """A dropped node severs the lookup path through it: host refs
+        at or below it can never be matched again, so free them now
+        (counted as drops) to keep the host tier leak-free.  Device
+        pages below a droppable node are impossible (deepest-first)."""
+        n = 0
+
+        def scrub(nd: _Node, subtree: bool):
+            nonlocal n
+            for key in list(nd.tails):
+                tail = nd.tails[key]
+                if tail.host:
+                    self.tier.free_refs(tail.host)
+                    n += len(tail.host)
+                    del nd.tails[key]
+            if subtree and nd.host is not None:
+                self.tier.free_refs([nd.host])
+                nd.host = None
+                n += 1
+            for child in nd.children.values():
+                scrub(child, True)
+
+        scrub(node, False)
+        return n
+
+    # ---- promotion (host tier, DESIGN.md §9) --------------------------
+
+    def sites_intact(self, match: PrefixMatch) -> bool:
+        """True while ``match`` still holds exactly the device pages and
+        host refs recorded at lookup time.  Evictions between planning
+        and the engine's promotion service window invalidate the match
+        — the engine replans instead of promoting stale refs."""
+        i = 0
+        for site in match.sites:
+            kind = site[0]
+            if kind == "dev":
+                _, node, page = site
+                if node.page != page:
+                    return False
+            elif kind == "node":
+                node = site[1]
+                if node.host is not match.host_refs[i]:
+                    return False
+                i += 1
+            else:
+                _, node, tail_key = site
+                tail = node.tails.get(tail_key)
+                if tail is None or not tail.host:
+                    return False
+                k = len(tail.host)
+                if tuple(tail.host) != match.host_refs[i:i + k]:
+                    return False
+                i += k
+        return i == len(match.host_refs)
+
+    def install_promoted(self, match: PrefixMatch,
+                         new_pages: Sequence[int]) -> List[int]:
+        """Point ``match``'s host-resident entries at the freshly
+        written device pages (the engine has already scattered the
+        promoted blocks into the arenas and owns the index hold).
+        Entries keep the exactness class their refs carried — a page
+        that ever passed through int8 stays partial-hit class.  Returns
+        the full logical page run (device prefix + promoted pages, in
+        row order)."""
+        assert len(new_pages) == len(match.host_refs)
+        now = self._tick()
+        i = 0
+        for site in match.sites:
+            kind = site[0]
+            if kind == "dev":
+                continue
+            if kind == "node":
+                node = site[1]
+                node.page = new_pages[i]
+                node.exact = match.host_refs[i].exact
+                node.host = None
+                node.last_used = now
+                i += 1
+            else:
+                _, node, tail_key = site
+                tail = node.tails[tail_key]
+                k = len(tail.host)
+                tail.pages = list(new_pages[i:i + k])
+                tail.exact = all(r.exact for r in tail.host)
+                tail.host = None
+                tail.last_used = now
+                i += k
+        self.promoted_pages += len(new_pages)
+        return list(match.pages) + list(new_pages)
+
     def clear(self, pool: PagePool) -> int:
-        """Release every index hold (readers keep theirs) and drop the
-        trie.  Returns the number of holds released."""
+        """Release every index hold (readers keep theirs), free every
+        host-tier ref, and drop the trie.  Returns the number of device
+        holds released."""
         n = 0
 
         def walk(node: _Node):
@@ -289,9 +513,14 @@ class PrefixIndex:
             if node.page is not None:
                 pool.release([node.page])
                 n += 1
+            if node.host is not None:
+                self.tier.free_refs([node.host])
             for tail in node.tails.values():
-                pool.release(tail.pages)
-                n += len(tail.pages)
+                if tail.pages:
+                    pool.release(tail.pages)
+                    n += len(tail.pages)
+                if tail.host:
+                    self.tier.free_refs(tail.host)
             for child in node.children.values():
                 walk(child)
 
@@ -310,6 +539,23 @@ class PrefixIndex:
             nonlocal n
             n += int(node.page is not None)
             n += sum(len(t.pages) for t in node.tails.values())
+            for child in node.children.values():
+                walk(child)
+
+        for root in self.roots.values():
+            walk(root)
+        return n
+
+    @property
+    def host_held_pages(self) -> int:
+        """Host-tier pages the trie currently references (the host pool
+        must hold exactly these — tests/test_hier.py leak detector)."""
+        n = 0
+
+        def walk(node: _Node):
+            nonlocal n
+            n += int(node.host is not None)
+            n += sum(len(t.host or ()) for t in node.tails.values())
             for child in node.children.values():
                 walk(child)
 

@@ -15,6 +15,17 @@ from repro.configs import get_arch, reduced  # noqa: E402
 from repro.models import transformer  # noqa: E402
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """The suite compiles hundreds of distinct executables (engine
+    lanes x strategies x backends x run/run_compiled); keeping them
+    all live eventually segfaults XLA's CPU compiler deep into the
+    run.  No test shares jitted state across modules, so drop the
+    caches at module boundaries."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

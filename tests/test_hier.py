@@ -1,0 +1,501 @@
+"""Hierarchical cache (DESIGN.md §9): host page pool accounting, int8
+round-trip fidelity bounds, stability scoring, the index demote ->
+lookup -> promote handshake, and the engine-level guarantees — an
+f32-demoted full hit decodes byte-identically to a cold decode for
+every cached strategy in both run modes, an int8-demoted hit is
+partial-hit class (states within the quantization bound, decode
+completes), and the two-tier engine drains leak-free."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core import strategy as strategy_lib
+from repro.core.strategy import SPACache
+from repro.dlm.session import DecodeSession, SharedPrefix
+from repro.serving.engine import ServingEngine
+from repro.serving.hier import (HostPagePool, TierManager, page_stability)
+from repro.serving.pool import PagePool, cache_signature
+from repro.serving.prefix import PrefixIndex
+
+PAGE = 4
+CANVAS = 16
+N_LOG = CANVAS // PAGE
+
+
+def _test_instance(ident: str):
+    inc = ident.endswith("+inc")
+    base = ident.split("+")[0]
+    cls = strategy_lib.REGISTRY[base]
+    if cls is strategy_lib.SPACache:
+        return SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                        incremental_ident=inc)
+    if cls is strategy_lib.ValueProxyCache:
+        return strategy_lib.ValueProxyCache(projection=base, rho=0.3)
+    if cls is strategy_lib.WindowCache:
+        return strategy_lib.WindowCache(locality_window=8, rho=0.3)
+    if cls is strategy_lib.AttnOutCache:
+        return strategy_lib.AttnOutCache(rho=0.5)
+    return cls()
+
+
+CACHED_IDENTS = sorted(i for i in strategy_lib.REGISTRY
+                       if strategy_lib.REGISTRY[i].uses_cache) \
+    + ["singular+inc"]
+
+
+def _quant_bound(x):
+    """Per-element int8 round-trip error bound: scale/2 (rounding) plus
+    the f16 cast of the scale — 2^-11 relative when the scale is a
+    normal f16, 2^-24 absolute in the subnormal range — times the worst
+    |q| of 127."""
+    amax = np.max(np.abs(np.asarray(x, np.float32)), axis=-1,
+                  keepdims=True)
+    scale = np.maximum(amax / 127.0, 1e-8)
+    return (scale * 0.5
+            + 127 * np.maximum(scale * 2.0 ** -11, 2.0 ** -24) + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# int8 round-trip bound (property-style, no model)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,seed", [((8, 16), 0), ((3, 4, 32), 1),
+                                        ((2, 5, 4, 16), 2), ((1, 256), 3)])
+def test_quantize_rows_roundtrip_bound(shape, seed):
+    """Per-element reconstruction error of the host int8 representation
+    is bounded by the documented ``max|row|/254`` (= scale/2) plus the
+    float16 scale cast's rounding: relative 2^-11 per scale for normal
+    f16 scales, absolute 2^-24 in the subnormal range (tiny rows)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=shape)
+         * 10.0 ** float(rng.integers(-3, 3))).astype(np.float32)
+    q, s = cache_lib.quantize_rows_np(x)
+    assert q.dtype == np.int8 and s.dtype == np.float16
+    back = cache_lib.dequantize_rows_np(q, s)
+    assert np.all(np.abs(x - back) <= _quant_bound(x))
+    # all-zero rows round-trip to exact zeros
+    z, zs = cache_lib.quantize_rows_np(np.zeros((2, 8), np.float32))
+    assert np.all(cache_lib.dequantize_rows_np(z, zs) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# HostPagePool: half-unit accounting + double-free guard
+# ---------------------------------------------------------------------------
+
+def _blk(n, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return {"kv": {"k": rng.normal(size=(2, n, PAGE, 6)).astype(dtype),
+                   "v": rng.normal(size=(2, n, PAGE, 6)).astype(dtype)}}
+
+
+def test_host_pool_units_and_double_free():
+    host = HostPagePool(n_pages=2)               # 4 half-page units
+    assert host.capacity_units == 4
+    sig = ("s",)
+    a = host.store(sig, "exact", 2, _blk(1))     # 2 units
+    assert a is not None and host.used_units == 2
+    b = host.store(sig, "int8", 1, _blk(2, 1))   # int8: half rate
+    assert b is not None and host.used_units == 4
+    assert host.used_pages == 3 and host.utilization == 1.0
+    assert host.store(sig, "exact", 2, _blk(1, 2)) is None   # over budget
+    got = host.load(sig, "exact", a)
+    np.testing.assert_array_equal(got["kv"]["k"], _blk(1)["kv"]["k"])
+    host.free(sig, "exact", a, 2)
+    assert host.used_units == 2 and host.used_pages == 2
+    with pytest.raises(AssertionError):
+        host.free(sig, "exact", a, 2)            # double free of a slot
+    host.free(sig, "int8", b, 1)
+    assert host.used_units == 0 and host.used_pages == 0
+    assert host.peak_units == 4 and host.pages_in == 3
+
+
+def test_pool_free_asserts_on_shared_page(tiny_cfg):
+    """Regression (DESIGN.md §5): ``PagePool.free`` is for exclusively
+    owned pages — freeing a page the prefix index (or any reader) still
+    holds must raise instead of silently double-releasing it into the
+    free list."""
+    pool = PagePool(tiny_cfg, n_pages=6, page_size=PAGE)
+    pages = pool.alloc(2)
+    pool.retain(pages)                           # a second holder appears
+    with pytest.raises(AssertionError, match="release"):
+        pool.free(pages)
+    pool.release(pages)                          # drop the reader hold
+    pool.free(pages)                             # now exclusive: fine
+    assert pool.used == 0 and not pool.refcounts
+
+
+# ---------------------------------------------------------------------------
+# Stability scoring
+# ---------------------------------------------------------------------------
+
+def test_page_stability_scores():
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=16).astype(np.float32)
+    aligned = np.stack([d * s for s in (1.0, 2.0, 0.5, 3.0)])[None]
+    assert page_stability(aligned) > 0.999       # parallel rows: stable
+    noisy = rng.normal(size=(1, 32, 16)).astype(np.float32)
+    assert page_stability(noisy) < page_stability(aligned)
+    assert page_stability(np.zeros((1, 4, 16))) == 0.0
+    assert page_stability(np.zeros((1, 0, 16))) == 0.0
+    assert 0.0 <= page_stability(noisy) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# TierManager policy (fake arenas, no model)
+# ---------------------------------------------------------------------------
+
+def _fake_tier(n_host, host_dtype, n_pages=16, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(2, n_pages, PAGE, 6)).astype(np.float32)
+
+    def read(sig, pages):
+        return {"kv": {"k": data[:, pages], "v": 2.0 * data[:, pages]}}
+
+    tier = TierManager(HostPagePool(n_host), host_dtype=host_dtype,
+                       read_pages=read)
+    return tier, data
+
+
+def test_tier_demote_promote_exact_is_byte_identical():
+    tier, data = _fake_tier(8, "f32")
+    sig = (16, True, True, "f32")
+    tier.note_published(sig, [1, 2], None)
+    refs = tier.demote([1, 2])
+    assert refs is not None and all(r.exact and r.repr_ == "exact"
+                                    for r in refs)
+    assert tier.host.used_units == 4 and tier.demoted_pages == 2
+    out_sig, blocks = tier.promote(refs)
+    assert out_sig == sig
+    np.testing.assert_array_equal(blocks["kv"]["k"], data[:, [1, 2]])
+    np.testing.assert_array_equal(blocks["kv"]["v"], 2.0 * data[:, [1, 2]])
+    assert tier.host.used_units == 0 and tier.promoted_pages == 2
+
+
+def test_tier_int8_within_bound_and_inexact():
+    tier, data = _fake_tier(8, "int8")
+    sig = (16, True, True, "f32")
+    tier.note_published(sig, [3], None)
+    refs = tier.demote([3])
+    assert refs is not None and not refs[0].exact
+    assert refs[0].repr_ == "int8" and refs[0].units == 1
+    _, blocks = tier.promote(refs)
+    orig = data[:, [3]]
+    assert np.all(np.abs(blocks["kv"]["k"] - orig) <= _quant_bound(orig))
+
+
+def test_tier_auto_policy_and_int8_signature():
+    tier, _ = _fake_tier(8, "auto")
+    sig = (16, True, True, "f32")
+    stable = np.repeat(np.ones((1, 1, 8), np.float32), 4, axis=1)
+    drifty = np.random.default_rng(1).normal(size=(1, 4, 8)) \
+        .astype(np.float32)
+    tier.note_published(sig, [1, 2], {1: stable, 2: drifty})
+    assert tier.stability(1) > 0.9 > tier.stability(2)
+    # auto: stable page quantizes (inexact), drifty page stays exact
+    assert tier._repr_for(sig, tier.stability(1), True) == ("int8", 1, False)
+    assert tier._repr_for(sig, tier.stability(2), True) == ("exact", 2, True)
+    # an already-int8 device cache is bytes: exact at the cold unit rate
+    sig8 = (16, True, True, "int8")
+    assert tier._repr_for(sig8, 0.0, True) == ("exact", 1, True)
+
+
+def test_tier_pressure_drops_stable_first():
+    tier, _ = _fake_tier(1, "f32")               # 2 units: room for 1 page
+    sig = (16, True, True, "f32")
+    stable = np.repeat(np.ones((1, 1, 8), np.float32), 4, axis=1)
+    tier.note_published(sig, [1, 2, 3], {3: stable})
+    assert tier.demote([1]) is not None          # fills the tier
+    assert tier.demote([2]) is None              # drift page, tier full
+    assert tier.dropped_full == 1
+    assert tier.demote([3]) is None              # stable page skips the
+    assert tier.dropped_stable == 1              # tier under pressure
+    # unknown pages (never published) always drop
+    assert tier.demote([9]) is None
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex demote -> lookup -> promote handshake (no model)
+# ---------------------------------------------------------------------------
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def _index_with_tier(tiny_cfg, host_pages, host_dtype="f32"):
+    pool = PagePool(tiny_cfg, n_pages=32, page_size=PAGE)
+    idx = PrefixIndex(PAGE)
+    tier, data = _fake_tier(host_pages, host_dtype, n_pages=32)
+    idx.tier = tier
+    return pool, idx, tier, data
+
+
+def test_index_demote_then_promote_handshake(tiny_cfg):
+    pool, idx, tier, _ = _index_with_tier(tiny_cfg, 8)
+    key = (CANVAS, "spec")
+    prompt = _toks(*range(10))
+    pages = pool.alloc(N_LOG)
+    sig = (16, True, True, "f32")
+    idx.insert(key, prompt, pages)
+    tier.note_published(sig, pages, None)
+    freed = idx.evict(pool, N_LOG)               # demotes, stays in trie
+    assert freed == N_LOG and pool.used == 0
+    assert idx.held_pages == 0
+    assert idx.host_held_pages == N_LOG == tier.host.used_pages
+    assert idx.demoted_pages == N_LOG and idx.dropped_pages == 0
+
+    m = idx.lookup(key, prompt)
+    assert m is not None and m.full and m.needs_promotion and m.exact
+    assert m.n_pages == N_LOG and len(m.host_refs) == N_LOG
+    assert idx.sites_intact(m)
+    # the engine handshake: promote the refs, install fresh device pages
+    out_sig, _ = tier.promote(list(m.host_refs))
+    assert out_sig == sig
+    new = pool.alloc(len(m.host_refs))
+    run = idx.install_promoted(m, new)
+    assert run == list(new) and idx.promoted_pages == N_LOG
+    assert idx.host_held_pages == 0 == tier.host.used_pages
+    assert not idx.sites_intact(m)               # refs are gone now
+    m2 = idx.lookup(key, prompt)                 # device-resident again
+    assert m2.full and not m2.needs_promotion and list(m2.pages) == new
+    idx.clear(pool)
+    assert pool.used == 0 and tier.host.used_units == 0
+
+
+def test_index_node_drop_prunes_host_subtree(tiny_cfg):
+    """When the host tier refuses a NODE demotion the node drops and
+    severs the lookup path — host refs stranded below it are freed and
+    counted as drops, keeping host accounting leak-free."""
+    pool, idx, tier, _ = _index_with_tier(tiny_cfg, 1)   # 1-page host tier
+    key = (CANVAS, "spec")
+    prompt = _toks(*range(10))                   # nodes n1,n2 + 2-page tail
+    pages = pool.alloc(N_LOG)
+    idx.insert(key, prompt, pages)
+    tier.note_published((16, True, True, "f32"), pages, None)
+    freed = idx.evict(pool, N_LOG)
+    # tail (2 pages = 4 units) can't fit -> dropped; n2 demotes (fills
+    # the tier); n1 demotion then fails -> n1 drops and prunes n2's ref
+    assert freed == N_LOG and pool.used == 0
+    assert idx.demoted_pages == 1
+    assert idx.dropped_pages == 3 + 1            # tail(2) + n1 + pruned n2
+    assert idx.host_held_pages == 0 == tier.host.used_pages
+    assert idx.lookup(key, prompt) is None       # path is severed
+
+
+def test_index_insert_supersedes_host_refs(tiny_cfg):
+    """A fresh device publication of a host-resident entry frees the
+    cold copy and resets the entry to the exact class."""
+    pool, idx, tier, _ = _index_with_tier(tiny_cfg, 8, host_dtype="int8")
+    key = (CANVAS, "spec")
+    prompt = _toks(*range(10))
+    pages = pool.alloc(N_LOG)
+    idx.insert(key, prompt, pages)
+    tier.note_published((16, True, True, "f32"), pages, None)
+    idx.evict(pool, N_LOG)                       # all host-ward, int8
+    m = idx.lookup(key, prompt)
+    assert m.needs_promotion and not m.exact     # int8: partial-hit class
+    # missing_slots treats host-resident depths as missing
+    assert idx.missing_slots(key, prompt, N_LOG) == list(range(N_LOG))
+    fresh = pool.alloc(N_LOG)
+    assert idx.insert(key, prompt, fresh) == []
+    assert idx.host_held_pages == 0 == tier.host.used_pages
+    m2 = idx.lookup(key, prompt)
+    assert m2.full and not m2.needs_promotion and m2.exact
+    idx.clear(pool)
+    assert pool.used == 0
+
+
+# ---------------------------------------------------------------------------
+# Session-level fidelity: demoted pages -> promoted pages -> decode
+# ---------------------------------------------------------------------------
+
+def _attach_cold(cfg, params, strat, pool, pages, tokens, active, arenas):
+    pt = np.asarray([pool.page_table_row(pages, CANVAS)], np.int32)
+    sess = DecodeSession(params, cfg, strategy=strat, backend="xla")
+    sess.attach(tokens, active=jnp.asarray(active),
+                kv_len=np.asarray([CANVAS], np.int32),
+                arenas=arenas, page_table=pt)
+    return sess
+
+
+def _attach_hit(cfg, params, strat, pool, shared_pages, tokens, active,
+                arenas):
+    own = pool.alloc(N_LOG)
+    pt = np.asarray([pool.page_table_row(list(shared_pages), CANVAS)],
+                    np.int32)
+    pool.retain(list(shared_pages))
+    spec = SharedPrefix(row=0, pages=tuple(shared_pages),
+                        reserve=tuple(own))
+    sess = DecodeSession(params, cfg, strategy=strat, backend="xla")
+    sess.attach(tokens, active=jnp.asarray(active),
+                kv_len=np.asarray([CANVAS], np.int32),
+                arenas=arenas, page_table=pt, shared=[spec])
+    return sess
+
+
+@pytest.mark.parametrize("ident", CACHED_IDENTS)
+def test_demoted_promoted_hit_decode_fidelity(tiny_cfg, tiny_params,
+                                              ident):
+    """Acceptance (DESIGN.md §9): round-trip a cold prefill's pages
+    through the host tier and decode a full hit off the promoted
+    copies, in the host loop AND the compiled loop.  f32 demotion:
+    byte-identical to the cold decode.  int8 demotion: promoted states
+    within the quantization bound and the decode runs to completion
+    (partial-hit class)."""
+    cfg, params = tiny_cfg, tiny_params
+    strat = _test_instance(ident)
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, cfg.vocab_size - 1, 8).astype(np.int32)
+    tokens = np.full((1, CANVAS), cfg.mask_id, np.int32)
+    tokens[0, :8] = p
+    active = np.zeros((1, CANVAS), bool)
+    active[0, 8:16] = True
+    pool = PagePool(cfg, n_pages=1 + 8 * N_LOG, page_size=PAGE,
+                    strategy=strat)
+    arenas = pool.arenas_for(strat)
+    sig = cache_signature(cfg, strat)
+
+    pub = pool.alloc(N_LOG)
+    sa = _attach_cold(cfg, params, strat, pool, pub, tokens, active,
+                      arenas)
+    arenas_prefill = sa.state.cache.arenas       # immutable snapshot
+    cold_run, _ = sa.run()
+
+    def read(s, pages):
+        return jax.tree.map(
+            np.asarray, cache_lib.read_arena_pages(arenas_prefill, pages))
+
+    orig = read(sig, pub)
+    for host_dtype in ("f32", "int8"):
+        tier = TierManager(HostPagePool(8), host_dtype=host_dtype,
+                           read_pages=read)
+        tier.note_published(sig, pub, None)
+        refs = tier.demote(list(pub))
+        assert refs is not None
+        out_sig, blocks = tier.promote(refs)
+        assert out_sig == sig and tier.host.used_units == 0
+        if host_dtype == "f32":
+            jax.tree.map(np.testing.assert_array_equal, orig, blocks)
+        else:
+            for kind, bufs in orig.items():
+                for name, b in bufs.items():
+                    if np.issubdtype(b.dtype, np.integer):
+                        np.testing.assert_array_equal(
+                            blocks[kind][name], b)
+                        continue
+                    bf = b.astype(np.float32)
+                    err = np.abs(blocks[kind][name].astype(np.float32)
+                                 - bf)
+                    assert np.all(err <= _quant_bound(bf)), \
+                        (ident, kind, name)
+        promoted = pool.alloc(N_LOG)
+        arenas2 = cache_lib.write_arena_pages(arenas_prefill, promoted,
+                                              blocks)
+        for mode in ("run", "run_compiled"):
+            sb = _attach_hit(cfg, params, strat, pool, promoted, tokens,
+                             active, arenas2)
+            toks_b, _ = sb.run() if mode == "run" else sb.run_compiled()
+            if host_dtype == "f32":              # exact class: bit-equal
+                np.testing.assert_array_equal(
+                    np.asarray(cold_run), np.asarray(toks_b),
+                    err_msg=f"{ident}/{host_dtype}/{mode}")
+            else:                                # allclose class
+                assert int(np.max(np.asarray(sb.state.n_masked))) == 0, \
+                    f"{ident}/{host_dtype}/{mode}"
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: eviction pressure -> demote -> warm hit -> promote
+# ---------------------------------------------------------------------------
+
+def _hier_engine(cfg, params, host_pages, host_dtype="f32"):
+    strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
+    return ServingEngine(cfg, params, max_batch=2, canvas_len=CANVAS,
+                         pool_pages=9, page_size=PAGE, strategy=strat,
+                         prefix_cache=True, host_pages=host_pages,
+                         host_dtype=host_dtype)
+
+
+def _pressure_cycle(eng, cfg):
+    """cold(p0) -> two concurrent requests on a full pool (admission
+    evicts p0's index entry) -> warm(p0).  Returns (cold, warm) outputs.
+    """
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size - 1, 8).astype(np.int32)
+               for _ in range(3)]
+    u = eng.submit(prompts[0], gen_len=8)
+    eng.run()
+    cold = next(r for r in eng.done if r.uid == u).output
+    for p in prompts[1:]:
+        eng.submit(p, gen_len=8)
+    eng.run()
+    u = eng.submit(prompts[0], gen_len=8)
+    eng.run()
+    warm = next(r for r in eng.done if r.uid == u).output
+    return cold, warm
+
+
+def test_engine_hier_f32_promotion_byte_identical(tiny_cfg, tiny_params):
+    """Headline: with the host tier on, the pressure-evicted prefix
+    comes back as a FULL hit through promotion and its decode is
+    byte-identical; with the tier off the same traffic is a re-prefill.
+    Telemetry splits evictions into demoted + dropped exactly."""
+    off = _hier_engine(tiny_cfg, tiny_params, host_pages=0)
+    _pressure_cycle(off, tiny_cfg)
+    assert off.prefix.evicted_pages == N_LOG
+    assert off.prefix.demoted_pages == 0
+    assert off.stats.prefix_dropped_pages == N_LOG
+    off_full_hits = off.stats.prefix_full_hits
+
+    eng = _hier_engine(tiny_cfg, tiny_params, host_pages=16)
+    cold, warm = _pressure_cycle(eng, tiny_cfg)
+    st = eng.stats
+    assert st.prefix_demoted_pages == N_LOG
+    assert st.prefix_dropped_pages == 0
+    assert st.prefix_evicted_pages == (st.prefix_demoted_pages
+                                       + st.prefix_dropped_pages)
+    assert st.prefix_promoted_pages == N_LOG
+    assert st.prefix_promotions == 1 and st.promotion_stalls == 0
+    assert st.prefix_full_hits > off_full_hits   # host tier buys the hit
+    assert st.peak_host_util > 0
+    np.testing.assert_array_equal(cold, warm)    # exact class: bit-equal
+    # both tiers account clean after the drain
+    assert eng.pool.used == eng.prefix.held_pages
+    assert eng.host_pool.used_pages == eng.prefix.host_held_pages
+    dropped = eng.drop_prefix_cache()
+    assert dropped > 0
+    assert eng.pool.used == 0 and eng.host_pool.used_pages == 0
+
+
+@pytest.mark.parametrize("host_dtype", ["int8", "auto"])
+def test_engine_hier_quantized_promotion_completes(tiny_cfg, tiny_params,
+                                                   host_dtype):
+    """int8/auto cold tier: the promoted hit still lands (full hit,
+    nonzero promotions), decodes to completion, and int8-touched
+    entries are permanently marked inexact (partial-hit class)."""
+    eng = _hier_engine(tiny_cfg, tiny_params, host_pages=16,
+                       host_dtype=host_dtype)
+    cold, warm = _pressure_cycle(eng, tiny_cfg)
+    st = eng.stats
+    assert st.prefix_demoted_pages == N_LOG
+    assert st.prefix_promoted_pages == N_LOG and st.prefix_promotions == 1
+    assert warm is not None and len(warm) == len(cold)
+    if host_dtype == "int8":
+        inexact = []
+
+        def walk(node):
+            if node.page is not None and not node.exact:
+                inexact.append(node)
+            for t in node.tails.values():
+                if t.pages and not t.exact:
+                    inexact.append(t)
+            for c in node.children.values():
+                walk(c)
+
+        for root in eng.prefix.roots.values():
+            walk(root)
+        assert inexact                           # promoted != exact class
+    eng.drop_prefix_cache()
+    assert eng.pool.used == 0 and eng.host_pool.used_pages == 0

@@ -313,16 +313,29 @@ def test_pool_refcounts(tiny_cfg):
         pool.retain(pages)            # retaining freed pages is a bug
 
 
-def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params):
+@pytest.mark.parametrize("host_pages", [0, 16])
+def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params,
+                                          host_pages):
     """Leak detector: an engine run mixing completions, preemptions,
     prefix hits, publications and index evictions fully drains with
     every page back in the free list and every refcount at zero (the
-    prefix index's own holds released via ``drop_prefix_cache``)."""
+    prefix index's own holds released via ``drop_prefix_cache``).  With
+    the §9 host tier attached the same churn must ALSO keep the host
+    pool in lockstep with the trie's host refs, and the drop empties
+    both tiers."""
     from repro.serving.engine import ServingEngine
     strat = SPACache(rank=16, schedule="uniform", rho_peak=0.3)
     eng = ServingEngine(tiny_cfg, tiny_params, max_batch=2,
                         canvas_len=CANVAS, pool_pages=13, page_size=PAGE,
-                        strategy=strat, prefix_cache=True)
+                        strategy=strat, prefix_cache=True,
+                        host_pages=host_pages)
+
+    def both_tiers_consistent():
+        assert eng.pool.used == eng.prefix.held_pages
+        assert all(rc == 1 for rc in eng.pool.refcounts.values())
+        if eng.host_pool is not None:
+            assert (eng.host_pool.used_pages
+                    == eng.prefix.host_held_pages)
     rng = np.random.default_rng(21)
     shared = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
     decoy = rng.integers(0, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
@@ -347,8 +360,7 @@ def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params):
     assert eng.stats.preemptions > 0
     assert eng.stats.prefix_evicted_pages > 0
     # after the drain, the ONLY pages still held belong to the index
-    assert eng.pool.used == eng.prefix.held_pages
-    assert all(rc == 1 for rc in eng.pool.refcounts.values())
+    both_tiers_consistent()
 
     # --- cancellation (DESIGN.md §8) must uphold the same invariant:
     # cancel-while-running releases the row's pages mid-decode,
@@ -373,10 +385,14 @@ def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params):
     assert canceled[run_victim].output is None
     assert canceled[queue_victim].canceled
     assert not eng.cancel(run_victim)         # already finalized
-    assert eng.pool.used == eng.prefix.held_pages
-    assert all(rc == 1 for rc in eng.pool.refcounts.values())
+    both_tiers_consistent()
 
     eng.drop_prefix_cache()
     assert eng.pool.used == 0
     assert eng.pool.available == eng.pool.capacity
     assert not eng.pool.refcounts
+    if eng.host_pool is not None:
+        # drop emptied BOTH tiers, and the churn exercised them
+        assert eng.host_pool.used_pages == 0
+        assert eng.host_pool.used_units == 0
+        assert eng.stats.prefix_demoted_pages > 0
