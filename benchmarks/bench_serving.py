@@ -51,7 +51,17 @@ prefix hit rate vs host-tier capacity at fixed HBM; the bench asserts
 host-on strictly beats host-off and lands the numbers in
 ``BENCH_serving.json``'s ``hier`` section.
 
-Wired into ``benchmarks/run.py --smoke`` (CI bench-smoke job).
+Part 5 is the fault-storm benchmark (DESIGN.md §10): the Part-1
+workload served once clean and once under a seeded chaos plan
+(alloc failures, lane stalls, NaN poison, host-tier store refusals and
+bit-flips) with the supervisor attached.  The bench asserts the
+robustness headline — every request that completes under the storm is
+byte-identical to its fault-free twin, aborts are bounded by the retry
+budget, and both tiers drain to zero — and records goodput under chaos
+relative to fault-free in ``BENCH_serving.json``'s ``faults`` section.
+
+Wired into ``benchmarks/run.py --smoke`` (CI bench-smoke job), so the
+seeded chaos storm replays on every CI run.
 """
 from __future__ import annotations
 
@@ -546,6 +556,57 @@ def _frontend_smoke(cfg, params, n_requests) -> dict:
     }
 
 
+def _serve_chaos(cfg, params, reqs, plan) -> dict:
+    """Serve ``reqs`` with the §10 supervisor attached — optionally
+    under a seeded chaos ``plan`` — and report completion/containment
+    counters plus a machine-independent steps-based goodput.
+
+    refresh_interval=1 makes outputs a pure function of the canvas, so
+    chaos-driven preemption/quarantine/fallback reordering never shifts
+    survivor bits — the byte-parity assertion is exact, not luck."""
+    from repro.core.strategy import SPACache
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine(
+        cfg, params, max_batch=4, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=1),
+        pool_pages=4 * (CANVAS // PAGE) + 9, page_size=PAGE,
+        prefix_cache=True, host_pages=16, host_dtype="f32",
+        fault_plan=plan, supervise=True)
+    t0 = time.time()
+    uids = [eng.submit(p, g, priority=pri) for p, g, pri in reqs]
+    stats = eng.run()
+    wall = time.time() - t0
+    by_uid = {r.uid: r for r in eng.done}
+    outputs = {i: np.asarray(by_uid[u].output).tobytes()
+               for i, u in enumerate(uids)
+               if by_uid[u].output is not None}
+    # aborted work drained: the only held pages belong to the index,
+    # and the host tier is in lockstep with the trie's refs
+    assert eng.pool.used == eng.prefix.held_pages
+    assert eng.host_pool.used_pages == eng.prefix.host_held_pages
+    eng.drop_prefix_cache()
+    assert eng.pool.used == 0 and eng.host_pool.used_pages == 0
+    return {
+        "outputs": outputs,
+        "wall_s": round(wall, 4),
+        "steps": stats.steps,
+        "done": stats.requests_done,
+        "faulted": stats.requests_faulted,
+        "faults_injected": stats.faults_injected,
+        "alloc_faults": stats.alloc_faults,
+        "nan_quarantines": stats.nan_quarantines,
+        "watchdog_fires": stats.watchdog_fires,
+        "checksum_failures": stats.host_checksum_failures,
+        "cold_prefill_fallbacks": stats.cold_prefill_fallbacks,
+        "max_degrade_level": max(
+            [lvl for _, lvl in stats.degradation_events], default=0),
+        "tok_s": round(stats.tps(wall), 2),
+        "done_per_step": round(stats.requests_done
+                               / max(stats.steps, 1), 4),
+    }
+
+
 def run(quick: bool = False) -> dict:
     cfg, params = _build()
     n_requests = 6 if quick else 16
@@ -646,6 +707,34 @@ def run(quick: bool = False) -> dict:
     results["hier"]["full_hit_rate_gain"] = round(
         h_on["full_hit_rate"] - h_off["full_hit_rate"], 3)
 
+    # Part 5: fault storm (DESIGN.md §10) — same workload, clean vs a
+    # seeded chaos plan with the supervisor attached.  Survivors must
+    # be byte-identical to their fault-free twins; the seed makes the
+    # storm replay exactly on every CI run.
+    from repro.serving.faults import FaultPlan
+    creqs = _workload(cfg, 6 if quick else 12)
+    storm_plan = FaultPlan(seed=7, rates={
+        "pool_alloc": 0.03, "lane_stall": 0.02, "step_nan": 0.02,
+        "host_store": 0.3, "host_corrupt": 0.3})
+    clean = _serve_chaos(cfg, params, creqs, None)
+    storm = _serve_chaos(cfg, params, creqs, storm_plan)
+    assert storm["done"] + storm["faulted"] == len(creqs), \
+        "chaos run lost requests"
+    assert storm["faults_injected"] > 0, "the storm never hit"
+    common = sorted(set(clean["outputs"]) & set(storm["outputs"]))
+    assert all(clean["outputs"][i] == storm["outputs"][i]
+               for i in common), "chaos survivors diverged"
+    results["faults"] = {
+        "plan": {"seed": 7, "rates": dict(storm_plan.rates)},
+        "clean": {k: v for k, v in clean.items() if k != "outputs"},
+        "storm": {k: v for k, v in storm.items() if k != "outputs"},
+        "survivors_byte_identical": True,
+        "survivor_count": len(common),
+        "goodput_vs_clean": round(
+            storm["done_per_step"] / max(clean["done_per_step"], 1e-9),
+            3),
+    }
+
     results["online"]["chat"] = _serve_chat(
         cfg, params, n_clients=3 if quick else 4, turns=3)
     results["online"]["frontend_smoke"] = _frontend_smoke(
@@ -663,7 +752,11 @@ def run(quick: bool = False) -> dict:
           f"{results['prefix']['hit_rate']:.0%} hit rate; "
           f"SLO goodput gain = {gp:.2f}x (poisson) / {gb:.2f}x (bursty); "
           f"hier full-hit rate {h_off['full_hit_rate']:.0%} -> "
-          f"{h_on['full_hit_rate']:.0%} with the host tier]")
+          f"{h_on['full_hit_rate']:.0%} with the host tier; "
+          f"chaos goodput = "
+          f"{results['faults']['goodput_vs_clean']:.2f}x of clean at "
+          f"{storm['faults_injected']} injected faults, "
+          f"{storm['faulted']} aborted]")
     return results
 
 

@@ -373,7 +373,13 @@ def serve_step(params: Params, cfg: ModelConfig, state: DecodeState,
         active=state.active, extras=state.extras, rng=rng_next,
         kv_len=state.kv_len)
     info = {"n_committed": n_committed,
-            "mean_conf": jnp.mean(jnp.where(jnp.isfinite(conf), conf, 0.0))}
+            "mean_conf": jnp.mean(jnp.where(jnp.isfinite(conf), conf, 0.0)),
+            # per-row finiteness of this step's hidden states, consumed
+            # by the supervisor's NaN/Inf canvas guard (DESIGN.md §10).
+            # Only meaningful for rows with a live request: released /
+            # inactive rows legitimately go non-finite under fully
+            # masked attention.
+            "row_finite": jnp.all(jnp.isfinite(h), axis=(1, 2))}
     return new_state, info
 
 

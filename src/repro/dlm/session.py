@@ -149,6 +149,9 @@ class DecodeSession:
         # state object, which is replaced by each step/row surgery
         self._host_tokens: Optional[np.ndarray] = None
         self._host_tokens_for: Optional[DecodeState] = None
+        # one-shot NaN fault payload armed by the engine's injector,
+        # applied inside the next step() AFTER auto-refresh (§10)
+        self._poison_pages: Optional[List[int]] = None
 
     # ------------------------------------------------------------------
     # State construction
@@ -368,6 +371,30 @@ class DecodeSession:
         self.state = self.state._replace(
             cache=PagedCache(arenas, cache.page_table))
 
+    def poison_cache_pages(self, pages: Sequence[int]) -> None:
+        """Overwrite the float buffers of physical ``pages`` with NaN —
+        the ``step_nan`` fault payload (DESIGN.md §10).  The poisoned
+        K/V entries propagate through the owning row's attention into
+        its hidden states on the next step, where the supervisor's
+        canvas guard catches them.  Integer buffers (page tables,
+        identifier indices) are left intact: the fault models numeric
+        bit-rot, not structural corruption."""
+        blocks = self.read_cache_pages(pages)
+        poisoned = {
+            kind: {nm: (jnp.full_like(b, jnp.nan)
+                        if jnp.issubdtype(b.dtype, jnp.floating) else b)
+                   for nm, b in bufs.items()}
+            for kind, bufs in blocks.items()}
+        self.write_cache_pages(pages, poisoned)
+
+    def poison_pages_after_refresh(self, pages: Sequence[int]) -> None:
+        """Arm a one-shot :meth:`poison_cache_pages` applied inside the
+        NEXT ``step()`` after its auto-refresh — so a
+        ``refresh_interval=1`` strategy cannot heal the corruption
+        before compute sees it (models bit-rot landing on the freshly
+        rebuilt arena)."""
+        self._poison_pages = list(pages)
+
     def _cow_if_shared(self) -> None:
         """Copy-on-write barrier: immediately before the first cache
         write (first step, compiled-loop entry, or an explicit refresh),
@@ -428,6 +455,9 @@ class DecodeSession:
         assert self.state is not None, "call prefill()/attach() first"
         self._cow_if_shared()     # first write: un-share prefix pages
         self._last_step_refreshed = self._maybe_refresh()
+        if self._poison_pages:
+            pages, self._poison_pages = self._poison_pages, None
+            self.poison_cache_pages(pages)
         self.state, info = self._step_fn(self.state)
         self.steps_taken += 1
         return info
@@ -706,8 +736,10 @@ class DecodeSession:
         """Park finished slots with no replacement request."""
         assert self.state is not None
         idx = jnp.asarray(list(rows), jnp.int32)
-        active = self.state.active.at[idx].set(False)
-        n_masked = self.state.n_masked.at[idx].set(0)
+        # before the first step the attach()-provided buffers may still
+        # be host numpy (watchdog recovery can fire that early)
+        active = jnp.asarray(self.state.active).at[idx].set(False)
+        n_masked = jnp.asarray(self.state.n_masked).at[idx].set(0)
         self.state = self.state._replace(active=active, n_masked=n_masked)
 
     def release_rows(self, rows: Sequence[int]) -> None:
@@ -723,10 +755,10 @@ class DecodeSession:
         idx = jnp.asarray(list(rows), jnp.int32)
         kv_len = self.state.kv_len
         if kv_len is not None:
-            kv_len = kv_len.at[idx].set(0)
+            kv_len = jnp.asarray(kv_len).at[idx].set(0)
         cache = self.state.cache
         if isinstance(cache, PagedCache):
-            pt = cache.page_table.at[idx].set(0)
+            pt = jnp.asarray(cache.page_table).at[idx].set(0)
             cache = PagedCache(cache.arenas, pt)
         self.state = self.state._replace(cache=cache, kv_len=kv_len)
 

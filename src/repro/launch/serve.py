@@ -91,6 +91,16 @@ def main(argv=None):
     ap.add_argument("--client", default="",
                     help="HOST:PORT — run a streaming client against a "
                          "running --serve front-end and exit")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the engine in the fault supervisor "
+                         "(DESIGN.md §10): invariant checking, NaN "
+                         "quarantine, watchdog, degradation ladder")
+    ap.add_argument("--chaos-seed", type=int, default=-1,
+                    help="enable deterministic fault injection with "
+                         "this seed (DESIGN.md §10); -1 = off")
+    ap.add_argument("--chaos-rate", type=float, default=0.02,
+                    help="per-probe fire rate for every fault site "
+                         "when --chaos-seed is set")
     args = ap.parse_args(argv)
 
     if args.client:
@@ -120,12 +130,21 @@ def main(argv=None):
     if args.slo_ttft or args.slo_deadline:
         from repro.serving.slo import SLOPolicy
         slo_policy = SLOPolicy()
+    fault_plan = None
+    if args.chaos_seed >= 0:
+        from repro.serving.faults import FAULT_SITES, FaultPlan
+        fault_plan = FaultPlan(
+            seed=args.chaos_seed,
+            rates={s: args.chaos_rate for s in FAULT_SITES})
+        print(f"chaos: seed={args.chaos_seed} "
+              f"rate={args.chaos_rate} on all sites")
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
         pool_pages=args.pool_pages, page_size=args.page_size,
         prefix_cache=args.prefix_cache, host_pages=args.host_pages,
         host_dtype=args.host_dtype, slo_policy=slo_policy,
+        fault_plan=fault_plan, supervise=args.supervise,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
@@ -165,8 +184,22 @@ def main(argv=None):
                   f"({stats.promotion_stalls} stalls), "
                   f"peak util {stats.peak_host_util:.0%}, "
                   f"{engine.host_pool.used_pages} resident at exit")
+    if engine.supervisor is not None or engine.faults is not None:
+        print(f"supervisor: {stats.faults_injected} faults injected, "
+              f"{stats.requests_faulted} requests faulted, "
+              f"{stats.nan_quarantines} NaN quarantines, "
+              f"{stats.alloc_faults} alloc faults, "
+              f"{stats.host_checksum_failures} checksum failures "
+              f"({stats.cold_prefill_fallbacks} cold fallbacks), "
+              f"{stats.watchdog_fires} watchdog fires, "
+              f"{stats.invariant_checks} invariant checks")
+        print(f"ladder: level {stats.degrade_level} at exit, "
+              f"{stats.degradations} degradations / "
+              f"{stats.restorations} restorations "
+              f"{stats.degradation_events}")
     for req in engine.done[:3]:
-        print(f"  req {req.uid}: out={req.output[:10]}...")
+        out = "<faulted>" if req.output is None else f"{req.output[:10]}..."
+        print(f"  req {req.uid}: out={out}")
     return 0
 
 

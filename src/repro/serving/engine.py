@@ -109,10 +109,13 @@ from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm.decoding import DecodeSettings, partial_prefill_supported
 from repro.dlm.scheduler import UnmaskScheduler, resolve_scheduler
 from repro.dlm.session import DecodeSession, SharedPrefix
-from repro.serving.hier import HostPagePool, TierManager
+from repro.serving.faults import FaultInjector, FaultPlan, choose_index
+from repro.serving.hier import (HostPageCorruption, HostPagePool,
+                                TierManager)
 from repro.serving.pool import OutOfPages, PagePool, cache_signature
 from repro.serving.prefix import PrefixIndex, PrefixMatch
 from repro.serving.slo import SLO, SLOPolicy
+from repro.serving.supervisor import EngineSupervisor, SupervisorConfig
 
 # (settings, strategy, scheduler): everything the compiled step closes
 # over statically — one DecodeSession (one executable) per distinct key.
@@ -185,6 +188,12 @@ class Request:
     pending_promotion: Optional["PrefixMatch"] = None
     no_promote: bool = False        # sticky: promotion failed once —
     #                                 this admission runs device-only
+    # fault containment (DESIGN.md §10): the fault class that aborted
+    # this request ("nan", "pool_alloc", ...), plus the bounded
+    # retry-with-backoff state for transient admission alloc failures
+    fault: Optional[str] = None
+    alloc_retries: int = 0
+    retry_after_step: int = 0       # backoff gate on the step clock
 
 
 @dataclasses.dataclass
@@ -220,6 +229,22 @@ class EngineStats:
     queue_waits: List[float] = dataclasses.field(default_factory=list)
     ttft_latencies: List[float] = dataclasses.field(default_factory=list)
     tpot_latencies: List[float] = dataclasses.field(default_factory=list)
+    # fault tolerance (DESIGN.md §10)
+    faults_injected: int = 0        # injector fires (replay fingerprint)
+    requests_faulted: int = 0       # aborted by fault containment
+    alloc_faults: int = 0           # transient admission alloc failures
+    host_checksum_failures: int = 0  # corrupt host pages caught
+    cold_prefill_fallbacks: int = 0  # corrupted promotions served cold
+    nan_quarantines: int = 0        # poisoned rows aborted by the guard
+    disconnect_bursts: int = 0      # injected mass client hangups
+    watchdog_fires: int = 0         # stuck lanes force-preempted
+    invariant_checks: int = 0       # supervisor accounting audits run
+    publish_paused_skips: int = 0   # publications skipped at ladder L1+
+    degrade_level: int = 0          # current ladder rung (0 = full)
+    degradations: int = 0           # upward ladder transitions
+    restorations: int = 0           # downward ladder transitions
+    degradation_events: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)       # (step, new level), both directions
 
     def tps(self, wall: float) -> float:
         return self.tokens_committed / max(wall, 1e-9)
@@ -256,7 +281,10 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  host_pages: int = 0, host_dtype: str = "auto",
                  slo_policy: Optional[SLOPolicy] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 supervise: bool = False,
+                 supervisor_cfg: Optional[SupervisorConfig] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -319,6 +347,26 @@ class ServingEngine:
         self._running: Dict[int, Request] = {}   # uid -> in-flight req
         self._stop: Optional[threading.Event] = None
         self._prefix_epoch = 0        # bumps on any index mutation
+        # fault tolerance (DESIGN.md §10): seeded injector threaded
+        # through the seams + a supervisor wrapping the step loop.
+        # A fault plan without a supervisor would deadlock on a lane
+        # stall, so injection implies supervision.
+        self.faults: Optional[FaultInjector] = None
+        if fault_plan is not None:
+            self.faults = FaultInjector(fault_plan)
+            if self.pool is not None:
+                self.pool.fault_hook = self.faults
+            if self.tier is not None:
+                self.tier.injector = self.faults
+        # degradation-ladder flags, maintained by the supervisor
+        self._publish_paused = False
+        self._host_tier_paused = False
+        self._shed_low_priority = False
+        self._shed_below = 0
+        self._hopeless_margin = 0.0
+        self.supervisor: Optional[EngineSupervisor] = None
+        if supervise or supervisor_cfg is not None or fault_plan is not None:
+            EngineSupervisor(self, supervisor_cfg)  # attaches itself
 
     def _now(self) -> float:
         return self._clock()
@@ -404,11 +452,26 @@ class ServingEngine:
                        slo: Optional[SLO] = None,
                        stream: bool = False,
                        sink: Optional[Callable] = None) -> Request:
+        # full validation runs HERE, on the submitting thread — both
+        # submit() and submit_threadsafe() route through this, so an
+        # invalid request raises at the caller and a malformed mailbox
+        # entry can never abort the engine loop mid-step (DESIGN.md §10)
+        if not isinstance(gen_len, (int, np.integer)) \
+                or isinstance(gen_len, bool):
+            raise ValueError(f"gen_len must be an int, got "
+                             f"{type(gen_len).__name__}")
         if gen_len <= 0 or gen_len > self.canvas_len:
             raise ValueError(
                 f"gen_len {gen_len} cannot be scheduled on a "
                 f"canvas_len={self.canvas_len} engine (need "
                 f"0 < gen_len <= canvas_len)")
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be a 1-D token array, got "
+                             f"shape {prompt.shape}")
+        if prompt.size and not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(f"prompt must hold integer token ids, got "
+                             f"dtype {prompt.dtype}")
         # monotonic counter — NOT len(done)+len(queue): with requests
         # in-flight (popped but not done) that length dips and reuses
         # live uids (regression-tested in tests/test_serving.py).
@@ -502,12 +565,22 @@ class ServingEngine:
 
     def _shed_hopeless(self) -> None:
         """Drop queued requests that can no longer contribute goodput
-        (missed TTFT while waiting / e2e deadline passed)."""
+        (missed TTFT while waiting / e2e deadline passed).  At ladder
+        L3 (DESIGN.md §10) low-priority queued work is shed outright
+        and the SLO deadlines tighten by ``hopeless_margin``."""
+        if self._shed_low_priority:
+            for r in list(self.queue):
+                if r.priority < self._shed_below:
+                    self.queue.remove(r)
+                    self._drop_plan(r)
+                    r.shed = True
+                    self._finalize_aborted(r)
         if self.slo_policy is None or not self.slo_policy.shed:
             return
         now = self._now()
         for r in list(self.queue):
-            if r.slo is not None and self.slo_policy.hopeless(r, now):
+            if r.slo is not None and self.slo_policy.hopeless(
+                    r, now, margin=self._hopeless_margin):
                 self.queue.remove(r)
                 self._drop_plan(r)
                 r.shed = True
@@ -532,6 +605,11 @@ class ServingEngine:
             if req.slo is not None:   # a shed request IS a missed SLO
                 self.stats.slo_missed += 1
             self._emit(req, "shed")
+        elif req.fault is not None:
+            # fault containment killed it (§10): distinct from a client
+            # cancel so chaos tests can assert the aborted-uid set
+            self.stats.requests_faulted += 1
+            self._emit(req, "aborted")
         else:
             self.stats.requests_canceled += 1
             self._emit(req, "canceled")
@@ -585,7 +663,7 @@ class ServingEngine:
         diffing (not the commit ring) so wide parallel commits that
         overflow the ring never drop stream tokens."""
         live = [(i, s) for i, s in enumerate(slots)
-                if s is not None and not s.canceled
+                if s is not None and not s.canceled and s.fault is None
                 and (s.sink is not None
                      or (s.stream and self.event_sink is not None))]
         if not live:
@@ -633,7 +711,9 @@ class ServingEngine:
                                    self._prompt_in_canvas(req),
                                    partial_ok=self._partial_ok,
                                    promote_ok=(self.tier is not None
-                                               and not req.no_promote))
+                                               and not req.no_promote
+                                               and not
+                                               self._host_tier_paused))
         if match is None:
             return
         if match.needs_promotion:
@@ -698,6 +778,12 @@ class ServingEngine:
         extending the trie.  A page copy pays for it; skipped when the
         pool has no slack."""
         if self.prefix is None or req.preemptions > 0 or not req.n_pages:
+            return
+        if self._publish_paused:
+            # ladder L1 (§10): stop growing shared state under fault
+            # pressure — the cheapest capability to shed, since misses
+            # only cost prefill compute, never correctness
+            self.stats.publish_paused_skips += 1
             return
         n_run = req.row_len // self.page_size
         m = req.shared_n if req.holds else 0
@@ -839,7 +925,25 @@ class ServingEngine:
             self.stats.promotion_stalls += 1
             return False
         refs = list(match.host_refs)
-        sig, blocks = self.tier.promote(refs)
+        try:
+            sig, blocks = self.tier.promote(refs)
+        except HostPageCorruption:
+            # §10: corrupt host bytes never reach the device.  The tier
+            # already freed the whole entry's slots; scrub the trie's
+            # now-dangling host refs (no free_refs — the slots are
+            # gone), drop the fresh alloc and the match holds, and fall
+            # back to a cold prefill on replan.
+            self.pool.free(pages)
+            self.pool.release(list(match.pages))
+            self.prefix.scrub_host_sites(match)
+            self.stats.host_checksum_failures += 1
+            self.stats.cold_prefill_fallbacks += 1
+            if self.supervisor is not None:
+                self.supervisor.note_pressure("host_corrupt")
+            req.plan_epoch = None
+            self._prefix_epoch += 1     # the scrubbed entries are gone
+            self._admission_dirty = True
+            return False
         self._tier_write(sig, pages, blocks)
         all_pages = self.prefix.install_promoted(match, pages)
         self.tier.note_promoted(sig, pages, refs)
@@ -867,11 +971,15 @@ class ServingEngine:
         if not self._promote_now(req) and req.plan_epoch is None:
             self._prefix_plan(req)
             req.plan_epoch = self._prefix_epoch
-            if req.pending_promotion is not None:
-                self._promote_now(req)
-                req.pending_promotion = None
-                if req.plan_epoch is None:
-                    req.plan_epoch = self._prefix_epoch
+            if req.pending_promotion is not None \
+                    and not self._promote_now(req):
+                # two promotion failures in one planning pass: give up
+                # on the host tier for this admission and replan
+                # device-only (no_promote is sticky, so this
+                # terminates) instead of admitting plan-less
+                req.no_promote = True
+                self._prefix_plan(req)
+                req.plan_epoch = self._prefix_epoch
 
     # ------------------------------------------------------------------
     # Admission control + preemption (paged mode)
@@ -905,13 +1013,81 @@ class ServingEngine:
         sess.release_rows([slot])
         self._release_holds(victim)      # un-COW'd shared pages go back
         victim.shared_n = 0
-        self.pool.free(victim.pages or [])
+        if self.paged:                   # dense lanes have no pool (the
+            self.pool.free(victim.pages or [])   # watchdog preempts too)
         victim.pages = None
         victim.preemptions += 1
         self.stats.preemptions += 1
         slots[slot] = None
         self._running.pop(victim.uid, None)
         self.queue.appendleft(victim)
+
+    # ------------------------------------------------------------------
+    # fault handling (§10)
+
+    def _inject_nan(self, slots: List[Optional[Request]],
+                    sess: DecodeSession) -> None:
+        """Arm a deterministic NaN poisoning of one live row's cache
+        pages.  The poison is applied inside ``sess.step()`` AFTER the
+        refresh rebuild (so refresh_interval=1 lanes can't wash it out)
+        — modelling bit-rot on the freshly built arena.  Rows still
+        holding un-COW'd shared pages are never picked: poisoning a
+        shared page would taint other requests through the index."""
+        if not self.paged or self.faults is None:
+            return
+        victims = [s for s in slots
+                   if s is not None and not s.canceled and s.fault is None
+                   and s.pages and not s.holds]
+        if not victims:
+            return
+        k = self.faults.fired["step_nan"] - 1   # this probe already fired
+        pick = victims[choose_index(self.faults.plan.seed, "nan_row",
+                                    k, len(victims))]
+        sess.poison_pages_after_refresh(pick.pages)
+
+    def _disconnect_burst(self, slots: List[Optional[Request]]) -> None:
+        """Client disconnect burst: every streaming request in the batch
+        loses its consumer at once.  Modelled as cancellation — the dead
+        scan reaps the rows and their pages on this same iteration."""
+        hit = 0
+        for s in slots:
+            if (s is not None and not s.canceled and s.fault is None
+                    and (s.stream or s.sink is not None)):
+                s.canceled = True
+                hit += 1
+        if hit:
+            self.stats.disconnect_bursts += 1
+            if self.supervisor is not None:
+                self.supervisor.note_pressure("disconnect")
+
+    def _watchdog_recover(self, lane: LaneKey,
+                          slots: List[Optional[Request]],
+                          sess: DecodeSession) -> None:
+        """Watchdog fired: the lane made no progress for a full budget
+        window (stuck device / livelocked batch).  Recovery is a device
+        reset in miniature: finalize rows already canceled or faulted,
+        force-preempt the rest back to the queue via their snapshots,
+        and clear any injected stall so the rebuilt lane can run."""
+        self.stats.watchdog_fires += 1
+        dead = [i for i, s in enumerate(slots)
+                if s is not None and (s.canceled or s.fault is not None)]
+        for i in dead:
+            req = slots[i]
+            slots[i] = None
+            self._finalize_aborted(req)
+        if dead:
+            if self.paged:
+                sess.release_rows(dead)
+            else:
+                sess.deactivate_rows(dead)
+        for i, r in enumerate(slots):
+            if r is not None:
+                self._preempt(i, r, slots, sess)
+        if self.faults is not None:
+            self.faults.clear_stall(lane)
+        if self.supervisor is not None:
+            self.supervisor.note_pressure("watchdog")
+            self.supervisor.lane_started()
 
     def _admit_one(self, lane: LaneKey, slots: List[Optional[Request]],
                    sess: Optional[DecodeSession],
@@ -932,6 +1108,9 @@ class ServingEngine:
         stalled = False
         now = self._now()
         for req in self._lane_candidates(lane):
+            if req.retry_after_step > self.stats.steps:
+                stalled = True      # backing off a transient alloc fault
+                continue
             slot_free = any(s is None for s in slots)
             if not self.paged:
                 if not slot_free:
@@ -992,7 +1171,27 @@ class ServingEngine:
                             and any(s is None for s in slots)):
                         break
             pages = self.pool.alloc(req.n_pages) if req.n_pages else []
-            assert pages is not None
+            if pages is None:
+                # transient alloc failure (the §10 pool_alloc fault — a
+                # genuine shortage was resolved above by eviction /
+                # preemption): bounded retry with exponential backoff
+                # on the virtual step clock, then a clean fault abort
+                self._drop_plan(req)
+                self.stats.alloc_faults += 1
+                req.alloc_retries += 1
+                max_r = (self.supervisor.cfg.max_alloc_retries
+                         if self.supervisor is not None else 3)
+                if req.alloc_retries > max_r:
+                    self.queue.remove(req)
+                    req.fault = "pool_alloc"
+                    self._finalize_aborted(req)
+                else:
+                    req.retry_after_step = (
+                        self.stats.steps + (1 << (req.alloc_retries - 1)))
+                if self.supervisor is not None:
+                    self.supervisor.note_pressure("pool_alloc")
+                stalled = True
+                continue
             self.queue.remove(req)
             req.pages = pages
             self._count_prefix_hit(req)
@@ -1076,7 +1275,14 @@ class ServingEngine:
             if not self.queue:
                 break
             lane = self.queue[0].lane
+            steps0 = self.stats.steps
             self._run_lane(lane, max_steps, on_step)
+            if self.queue and self.stats.steps == steps0:
+                # every candidate is backing off a transient alloc
+                # fault: idle-tick the virtual step clock so backoffs
+                # can expire instead of busy-spinning forever (bounded
+                # by max_alloc_retries → fault abort)
+                self.stats.steps += 1
         self._wall = self._now() - t0
         self._note_pool_stats()
         return self.stats
@@ -1097,7 +1303,10 @@ class ServingEngine:
                 self._drain_mailbox()
                 self._shed_hopeless()
                 if self.queue:
+                    steps0 = self.stats.steps
                     self._run_lane(self.queue[0].lane, max_steps, on_step)
+                    if self.queue and self.stats.steps == steps0:
+                        self.stats.steps += 1   # alloc-backoff idle tick
                     continue
                 try:
                     fn = self._mailbox.get(timeout=idle_wait)
@@ -1114,6 +1323,8 @@ class ServingEngine:
         return self.stats
 
     def _note_pool_stats(self) -> None:
+        if self.faults is not None:
+            self.stats.faults_injected = self.faults.total_fired
         if self.paged:
             self.stats.peak_pool_util = (self.pool.peak_used
                                          / max(self.pool.capacity, 1))
@@ -1189,7 +1400,26 @@ class ServingEngine:
             sess.state = sess.state._replace(
                 committed=sess.state.committed.at[:].set(committed0))
 
+        sup = self.supervisor
+        if sup is not None:
+            sup.lane_started()
         while any(s is not None for s in slots):
+            if self.faults is not None and self.faults.stall_lane(lane):
+                # stuck lane (§10): the device step is never dispatched
+                # (models a hung device).  Host-side work and the
+                # virtual clock still advance, so the watchdog fires
+                # within its budget and force-preempts the lane.
+                self._host_overlap(lane, slots)
+                self.stats.steps += 1
+                if on_step is not None:
+                    on_step(self)
+                if sup is not None:
+                    if sup.watchdog(progressed=False):
+                        self._watchdog_recover(lane, slots, sess)
+                    sup.on_iteration()
+                continue
+            if self.faults is not None and self.faults.fire("step_nan"):
+                self._inject_nan(slots, sess)
             info = sess.step()
             # double-buffered dispatch (DESIGN.md §8): the jitted step
             # is dispatched but NOT synced yet — mailbox intake, SLO
@@ -1201,11 +1431,15 @@ class ServingEngine:
                 self.pool.note_step()
             n_comm = np.asarray(info["n_committed"])  # first host sync
             self.stats.tokens_committed += int(n_comm.sum())
+            if self.faults is not None and self.faults.fire("disconnect"):
+                self._disconnect_burst(slots)
+            nan_rows = (sup.nan_guard(info, slots)
+                        if sup is not None and self.paged else [])
             if on_step is not None:
                 on_step(self)
             now = self._now()
             for i, s in enumerate(slots):     # TTFT / TPOT bookkeeping
-                if s is None or n_comm[i] <= 0:
+                if s is None or s.fault is not None or n_comm[i] <= 0:
                     continue
                 if s.first_token_at is None:
                     s.first_token_at = now
@@ -1222,10 +1456,16 @@ class ServingEngine:
                 # a request that exhausts its own step budget is
                 # harvested as-is (same semantics as the old
                 # run-to-max_steps static batch loop)
-                if s.canceled:
+                if s.canceled or s.fault is not None:
                     dead.append(i)
                 elif n_masked[i] <= 0 or ages[i] >= max_steps:
                     finished.append(i)
+            progressed = bool(int(n_comm.sum()) > 0 or finished or dead)
+            if sup is not None:
+                if sup.watchdog(progressed):
+                    self._watchdog_recover(lane, slots, sess)
+                    continue
+                sup.on_iteration()
             if not (finished or dead) and not (self.continuous
                                                and self._admission_dirty):
                 continue
@@ -1244,6 +1484,16 @@ class ServingEngine:
                     # stale entry would let the dead row's next
                     # write-back corrupt the new owner's pages
                     sess.release_rows(finished + dead)
+            if nan_rows:
+                # NaN quarantine (§10): the poisoned rows died above;
+                # force-preempt every surviving lane-mate so the batch
+                # rebuilds from preemption snapshots — one poisoned
+                # canvas never taints its neighbours' outputs.
+                self.stats.nan_quarantines += len(nan_rows)
+                for i, r in enumerate(slots):
+                    if r is not None:
+                        self._preempt(i, r, slots, sess)
+                continue
             swap_rows, swap_tokens, swap_active = [], [], []
             swap_kv, swap_pt, swap_com = [], [], []
             swap_shared: List[SharedPrefix] = []

@@ -1,0 +1,155 @@
+"""Deterministic fault injection for the serving runtime (DESIGN.md §10).
+
+The engine's state machine (page refcounts, copy-on-write holds,
+PROMOTING handshakes, preemption snapshots) is exactly the kind of
+deeply stateful machinery where a transient fault — an alloc failure, a
+corrupted host page, a NaN-poisoned step, a stuck lane — can silently
+leak pages or wedge the loop.  This module provides the *injection*
+half of the fault-tolerance story: a seeded :class:`FaultPlan` threaded
+through the engine's seams, replayable bit-for-bit from its seed so
+chaos runs are regression tests, not dice rolls.
+
+Fault sites (one seam each in the engine/tier):
+
+  ``pool_alloc``    page-pool allocation transiently fails (admission,
+                    publication and promotion allocs all probe it); the
+                    supervisor's bounded retry-with-backoff absorbs it.
+  ``host_store``    the host tier refuses a demotion write (the victim
+                    drops instead — the §9 graceful path).
+  ``host_corrupt``  a freshly demoted host page is bit-flipped in place;
+                    the checksum verification on promotion catches it
+                    and the engine falls back to a cold prefill.
+  ``step_nan``      one live row's cache pages are poisoned with NaN;
+                    the next step's hidden states go non-finite and the
+                    supervisor's canvas guard quarantines the row.
+  ``lane_stall``    the lane's device step stops being dispatched
+                    (sticky — models a hung device) until the
+                    supervisor's virtual-clock watchdog force-preempts.
+  ``disconnect``    every currently streaming request hangs up at once
+                    (a mid-stream disconnect burst -> cancellation).
+
+Determinism: every probe of site ``s`` draws from a counter-keyed hash
+``crc32(f"{seed}:{s}:{k}")`` where ``k`` is the site's own probe
+counter — no global RNG state, no wall clock.  Two engine runs that
+make the same probe sequence (single-threaded, virtual clock) therefore
+fire the same faults at the same sites, abort the same uids, and leave
+the same survivors (``tests/test_faults.py`` asserts all three).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+FAULT_SITES = ("pool_alloc", "host_store", "host_corrupt", "step_nan",
+               "lane_stall", "disconnect")
+
+
+def _hash01(seed: int, site: str, k: int) -> float:
+    """Deterministic uniform [0, 1) draw for probe ``k`` of ``site`` —
+    crc32 so it is stable across platforms and Python hash seeds."""
+    return zlib.crc32(f"{seed}:{site}:{k}".encode()) / 2 ** 32
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A replayable chaos schedule.
+
+    ``rates`` maps a fault site to its per-probe firing probability
+    (what a storm uses); ``at`` maps a site to explicit probe indices
+    that fire exactly once each (what targeted tests use).  A site may
+    appear in both — either trigger fires it.  ``max_fires`` optionally
+    caps the total fires per site, so a "burst" plan can inject a
+    bounded storm and then go quiet (letting the degradation ladder
+    walk back down).
+    """
+    seed: int = 0
+    rates: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    at: Mapping[str, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+    max_fires: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for m in (self.rates, self.at, self.max_fires):
+            for site in m:
+                if site not in FAULT_SITES:
+                    raise ValueError(f"unknown fault site {site!r}; "
+                                     f"known: {FAULT_SITES}")
+        # freeze the mappings so a plan is hashable-by-value in spirit
+        object.__setattr__(self, "rates", dict(self.rates))
+        object.__setattr__(self, "at",
+                           {s: tuple(v) for s, v in self.at.items()})
+        object.__setattr__(self, "max_fires", dict(self.max_fires))
+
+
+class FaultInjector:
+    """Runtime state for one engine run under a :class:`FaultPlan`.
+
+    The engine probes ``fire(site)`` at each seam; the injector keeps
+    one monotone probe counter per site and a log of every fire
+    ``(site, probe_index)`` — the log IS the replay fingerprint two
+    runs under the same plan must share."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._probes: Dict[str, int] = {s: 0 for s in FAULT_SITES}
+        self.fired: Dict[str, int] = {s: 0 for s in FAULT_SITES}
+        self.log: List[Tuple[str, int]] = []
+        # sticky lane stalls: lane-key id -> True until the watchdog
+        # clears it (models a device reset recovering the lane)
+        self._stalled: Dict[object, bool] = {}
+
+    # ---- probes ------------------------------------------------------
+
+    def fire(self, site: str) -> bool:
+        """One probe of ``site``; True when the plan says to inject."""
+        k = self._probes[site]
+        self._probes[site] = k + 1
+        if self.fired[site] >= self.plan.max_fires.get(site, 1 << 30):
+            return False
+        hit = k in self.plan.at.get(site, ())
+        rate = self.plan.rates.get(site, 0.0)
+        if not hit and rate > 0.0:
+            hit = _hash01(self.plan.seed, site, k) < rate
+        if hit:
+            self.fired[site] += 1
+            self.log.append((site, k))
+        return hit
+
+    @property
+    def total_fired(self) -> int:
+        return sum(self.fired.values())
+
+    # ---- lane stalls (sticky until watchdog recovery) ----------------
+
+    def stall_lane(self, lane_id: object) -> bool:
+        """Probe ``lane_stall`` for a running lane; once fired the lane
+        stays stalled (every step skipped) until :meth:`clear_stall` —
+        only the watchdog's forced preemption can recover it."""
+        if self._stalled.get(lane_id):
+            return True
+        if self.fire("lane_stall"):
+            self._stalled[lane_id] = True
+            return True
+        return False
+
+    def clear_stall(self, lane_id: object) -> None:
+        self._stalled.pop(lane_id, None)
+
+    # ---- payloads ----------------------------------------------------
+
+    def corrupt_array(self, a: np.ndarray) -> None:
+        """Flip the first machine word of ``a`` in place — the minimal
+        bit-rot a checksum must catch.  Deterministic (no randomness:
+        the *site* of corruption is chosen by the probe counter)."""
+        flat = a.reshape(-1).view(np.uint8)
+        flat[: min(8, flat.size)] ^= 0xFF
+
+
+def choose_index(seed: int, salt: str, k: int, n: int) -> int:
+    """Deterministically pick an index in [0, n) for fire ``k`` — used
+    to select WHICH live row a ``step_nan`` fault poisons."""
+    assert n > 0
+    return zlib.crc32(f"{seed}:{salt}:{k}".encode()) % n

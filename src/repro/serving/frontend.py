@@ -49,7 +49,7 @@ import numpy as np
 from repro.serving.engine import RequestEvent, ServingEngine
 from repro.serving.slo import SLO
 
-_TERMINAL = ("done", "shed", "canceled")
+_TERMINAL = ("done", "shed", "canceled", "aborted")
 
 
 class AsyncFrontend:
@@ -57,12 +57,13 @@ class AsyncFrontend:
 
     def __init__(self, engine: ServingEngine, *, host: str = "127.0.0.1",
                  port: int = 0, max_steps: int = 256,
-                 idle_wait: float = 0.005):
+                 idle_wait: float = 0.005, max_body: int = 1 << 20):
         self.engine = engine
         self.host = host
         self.port = port              # 0 = ephemeral; set after start()
         self.max_steps = max_steps
         self.idle_wait = idle_wait
+        self.max_body = max_body      # request bodies past this → 413
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -160,7 +161,12 @@ class AsyncFrontend:
             request_line = (await reader.readline()).decode("latin1")
             if not request_line:
                 return
-            method, path, _ = request_line.split(None, 2)
+            try:
+                method, path, _ = request_line.split(None, 2)
+            except ValueError:
+                writer.write(_error_response(400, "malformed request line"))
+                await writer.drain()
+                return
             headers = {}
             while True:
                 line = (await reader.readline()).decode("latin1").strip()
@@ -169,7 +175,19 @@ class AsyncFrontend:
                 k, _, v = line.partition(":")
                 headers[k.strip().lower()] = v.strip()
             body = b""
-            n = int(headers.get("content-length", 0) or 0)
+            try:
+                n = int(headers.get("content-length", 0) or 0)
+            except ValueError:
+                writer.write(_error_response(400, "bad Content-Length"))
+                await writer.drain()
+                return
+            if n < 0 or n > self.max_body:
+                # reject BEFORE reading: an oversized body never gets
+                # buffered, it just costs the client its connection
+                writer.write(_error_response(
+                    413, f"body exceeds {self.max_body} bytes"))
+                await writer.drain()
+                return
             if n:
                 body = await reader.readexactly(n)
             if method == "POST" and path == "/generate":
@@ -195,16 +213,41 @@ class AsyncFrontend:
 
     async def _route_generate(self, writer: asyncio.StreamWriter,
                               body: bytes) -> None:
-        req = json.loads(body.decode())
-        slo = None
-        if req.get("slo"):
-            slo = SLO(ttft=req["slo"].get("ttft", float("inf")),
-                      deadline=req["slo"].get("deadline", float("inf")))
+        # validate EVERYTHING before the 200 head goes out — a bad
+        # request must get a clean 4xx, never a half-written stream
+        try:
+            req = json.loads(body.decode())
+            if not isinstance(req, dict):
+                raise ValueError("body must be a JSON object")
+            prompt = req["prompt"]
+            if (not isinstance(prompt, list)
+                    or not all(isinstance(t, int)
+                               and not isinstance(t, bool)
+                               for t in prompt)):
+                raise ValueError("prompt must be a list of ints")
+            gen_len = req["gen_len"]
+            if (isinstance(gen_len, bool) or not isinstance(gen_len, int)
+                    or gen_len <= 0):
+                raise ValueError("gen_len must be a positive int")
+            priority = int(req.get("priority", 0))
+            row_len = req.get("row_len")
+            if row_len is not None:
+                row_len = int(row_len)
+            slo = None
+            if req.get("slo"):
+                slo = SLO(
+                    ttft=float(req["slo"].get("ttft", float("inf"))),
+                    deadline=float(req["slo"].get("deadline",
+                                                  float("inf"))))
+        except (ValueError, KeyError, TypeError, AttributeError,
+                UnicodeDecodeError) as e:
+            writer.write(_error_response(400, f"bad request: {e}"))
+            await writer.drain()
+            return
         writer.write(_response_head("application/x-ndjson"))
         await writer.drain()
-        agen = self.generate(req["prompt"], int(req["gen_len"]),
-                             priority=int(req.get("priority", 0)),
-                             slo=slo, row_len=req.get("row_len"))
+        agen = self.generate(prompt, gen_len, priority=priority,
+                             slo=slo, row_len=row_len)
         try:
             # a dropped connection raises from drain(); the explicit
             # aclose() below (not GC) then cancels the request on the
@@ -220,6 +263,16 @@ class AsyncFrontend:
 def _response_head(ctype: str) -> bytes:
     return (f"HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\n"
             f"Connection: close\r\n\r\n").encode()
+
+
+def _error_response(status: int, msg: str) -> bytes:
+    reason = {400: "Bad Request",
+              413: "Payload Too Large"}.get(status, "Error")
+    body = json.dumps({"error": msg}).encode()
+    return (f"HTTP/1.1 {status} {reason}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n").encode() + body
 
 
 def _event_json(ev: RequestEvent) -> Dict:

@@ -39,6 +39,7 @@ allclose, not byte-identical (``tests/test_hier.py``).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -80,6 +81,13 @@ def page_stability(proxy_block: np.ndarray) -> float:
     return float(np.clip(cos.mean(), 0.0, 1.0))
 
 
+class HostPageCorruption(RuntimeError):
+    """A host-tier page failed its checksum on promotion (DESIGN.md
+    §10).  The tier has already freed the WHOLE entry's slots — corrupt
+    bytes must never reach the device — and the engine falls back to a
+    cold prefill."""
+
+
 @dataclasses.dataclass(frozen=True)
 class HostPageRef:
     """One demoted page's host-tier address.
@@ -90,7 +98,9 @@ class HostPageRef:
     half-page accounting units the slot occupies; ``exact``: whether a
     promotion reproduces the ORIGINAL device bytes (False once a page
     has ever passed through int8); ``stability``: the score the page
-    was demoted with (kept so a re-demotion after promotion reuses it).
+    was demoted with (kept so a re-demotion after promotion reuses it);
+    ``checksum``: crc32 of the stored host bytes, verified before any
+    promotion reaches the device (0 = unverified legacy ref).
     """
     sig: Tuple
     repr_: str
@@ -98,6 +108,7 @@ class HostPageRef:
     units: int
     exact: bool
     stability: float
+    checksum: int = 0
 
 
 class HostPagePool:
@@ -209,6 +220,20 @@ class HostPagePool:
         self.used_units -= len(slots) * units_per_page
         assert self.used_units >= 0
 
+    def corrupt_slot(self, sig: Tuple, repr_: str, slot: int) -> None:
+        """Bit-flip one resident slot's first buffer in place — the
+        ``host_corrupt`` fault payload (DESIGN.md §10), the minimal rot
+        the promotion checksum must catch.  Copy-modify-writeback:
+        column views of the arenas are not contiguous."""
+        e = self._store[(sig, repr_)]
+        for bufs in e["arenas"].values():
+            for a in bufs.values():
+                blk = a[:, slot].copy()
+                flat = blk.reshape(-1).view(np.uint8)
+                flat[: min(8, flat.size)] ^= 0xFF
+                a[:, slot] = blk
+                return
+
 
 class TierManager:
     """Demotion/promotion policy between the device pool and the host
@@ -241,6 +266,13 @@ class TierManager:
         self.promoted_pages = 0
         self.dropped_full = 0      # demotions refused: host tier full
         self.dropped_stable = 0    # demotions skipped: stable under pressure
+        # fault seam (DESIGN.md §10): a FaultInjector wired by the
+        # engine; demote probes "host_store" (refuse the write -> drop,
+        # the graceful §9 path) and "host_corrupt" (bit-flip the fresh
+        # slot, caught by the promotion checksum)
+        self.injector = None
+        self.store_faults = 0          # injected demotion-write refusals
+        self.checksum_failures = 0     # corrupt pages caught on promote
 
     # ---- engine registration ----------------------------------------
 
@@ -314,6 +346,12 @@ class TierManager:
             else:
                 self.dropped_full += len(pages)
             return None
+        if self.injector is not None and self.injector.fire("host_store"):
+            # injected write failure: the tier refuses, the victim
+            # drops — the same graceful path as a full host budget
+            self.store_faults += 1
+            self.dropped_full += len(pages)
+            return None
         blocks = self.read_pages(sig, list(pages))
         refs: List[HostPageRef] = []
         for i, (p, (repr_, units, exact_out)) in enumerate(
@@ -326,7 +364,11 @@ class TierManager:
             assert slots is not None        # fits() checked above
             refs.append(HostPageRef(sig=sig, repr_=repr_, slot=slots[0],
                                     units=units, exact=exact_out,
-                                    stability=self.stability(p)))
+                                    stability=self.stability(p),
+                                    checksum=_blocks_checksum(one)))
+        if self.injector is not None and self.injector.fire("host_corrupt"):
+            r = refs[0]
+            self.host.corrupt_slot(r.sig, r.repr_, r.slot)
         self.demoted_pages += len(pages)
         self.forget(pages)
         return refs
@@ -337,13 +379,28 @@ class TierManager:
         """Read the refs' pages back as DEVICE-layout blocks
         ({kind: {name: [Lk, n, page, ...]}}, int8 hosts dequantized)
         and free their host slots.  All refs must share one signature
-        (one prefix entry, one arena set)."""
+        (one prefix entry, one arena set).
+
+        Every ref's checksum is verified BEFORE any slot is freed or
+        any byte heads device-ward; a mismatch frees the whole entry's
+        slots (a partial promotion can never serve the hit) and raises
+        :class:`HostPageCorruption` — the engine falls back to a cold
+        prefill (DESIGN.md §10)."""
         assert refs
         sig = refs[0].sig
         assert all(r.sig == sig for r in refs)
+        loaded = [self.host.load(sig, r.repr_, [r.slot]) for r in refs]
+        bad = sum(1 for r, one in zip(refs, loaded)
+                  if r.checksum and _blocks_checksum(one) != r.checksum)
+        if bad:
+            for r in refs:
+                self.host.free(sig, r.repr_, [r.slot], r.units)
+            self.checksum_failures += bad
+            raise HostPageCorruption(
+                f"{bad}/{len(refs)} host pages failed checksum "
+                f"verification on promotion")
         outs = []
-        for r in refs:
-            one = self.host.load(sig, r.repr_, [r.slot])
+        for r, one in zip(refs, loaded):
             if r.repr_ == "int8":
                 one = _dequantize_blocks(one)
             outs.append(one)
@@ -369,6 +426,19 @@ class TierManager:
         """Drop host refs without promoting (index clear / supersede)."""
         for r in refs:
             self.host.free(r.sig, r.repr_, [r.slot], r.units)
+
+
+def _blocks_checksum(blocks) -> int:
+    """Order-stable crc32 over every buffer of one page's block tree —
+    the host-page integrity checksum (DESIGN.md §10).  Computed over
+    the STORED representation (post-quantization), so verification on
+    promotion needs no recompute of the quantizer."""
+    ck = 1
+    for kind in sorted(blocks):
+        for name in sorted(blocks[kind]):
+            a = np.ascontiguousarray(blocks[kind][name])
+            ck = zlib.crc32(a.tobytes(), ck)
+    return ck
 
 
 def _quantize_blocks(blocks):

@@ -70,6 +70,11 @@ class PagePool:
         self._arenas: Dict[Tuple, Dict] = {}
         self.peak_used = 0
         self._util_samples: List[float] = []
+        # fault seam (DESIGN.md §10): when set, alloc() probes
+        # fault_hook.fire("pool_alloc") and fails transiently on a hit —
+        # admission/publication/promotion all see the same exhaustion
+        # signal they already handle (None) for a genuinely full pool.
+        self.fault_hook = None
 
     # ---- accounting --------------------------------------------------
 
@@ -97,6 +102,9 @@ class PagePool:
         """Allocate n pages at refcount 1 (all-or-nothing). None when
         short."""
         if n > len(self._free):
+            return None
+        if n and self.fault_hook is not None \
+                and self.fault_hook.fire("pool_alloc"):
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:

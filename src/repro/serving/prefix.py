@@ -140,6 +140,10 @@ class PrefixIndex:
         # Optional[hier.TierManager] — wired by the engine; None keeps
         # the PR 5 single-tier behaviour (evict == drop) byte-for-byte.
         self.tier = None
+        # degradation ladder L2 (DESIGN.md §10): while True, eviction
+        # drops victims instead of demoting them host-ward — shedding
+        # the host tier's work under sustained fault pressure.
+        self.demote_paused = False
 
     # ---- keys ---------------------------------------------------------
 
@@ -372,6 +376,7 @@ class PrefixIndex:
         subtree are pruned.  Returns device pages actually freed — may
         be fewer when everything left has readers."""
         freed = 0
+        tier = None if self.demote_paused else self.tier
         while freed < n_pages:
             units = self._evictable(pool)
             if not units:
@@ -381,8 +386,8 @@ class PrefixIndex:
             if kind == "tail":
                 tail = node.tails[tail_key]
                 pages = list(tail.pages)
-                refs = (self.tier.demote(pages, exact_in=tail.exact)
-                        if self.tier is not None else None)
+                refs = (tier.demote(pages, exact_in=tail.exact)
+                        if tier is not None else None)
                 if refs is not None:
                     tail.pages = []
                     tail.host = refs
@@ -395,8 +400,8 @@ class PrefixIndex:
                     self.dropped_pages += len(pages)
             else:
                 pages = [node.page]
-                refs = (self.tier.demote(pages, exact_in=node.exact)
-                        if self.tier is not None else None)
+                refs = (tier.demote(pages, exact_in=node.exact)
+                        if tier is not None else None)
                 if refs is not None:
                     node.host = refs[0]
                     node.exact = refs[0].exact
@@ -502,6 +507,33 @@ class PrefixIndex:
         self.promoted_pages += len(new_pages)
         return list(match.pages) + list(new_pages)
 
+    def scrub_host_sites(self, match: PrefixMatch) -> int:
+        """Corruption fallback (DESIGN.md §10): drop ``match``'s
+        host-resident trie entries WITHOUT freeing tier slots — the
+        tier already freed them when the promotion's checksum
+        verification failed.  The entries must go regardless: their
+        refs now point at freed (or corrupt) host slots, and a later
+        lookup must miss, not re-promote rot.  Returns the refs
+        dropped (counted as drops)."""
+        n = 0
+        for site in match.sites:
+            kind = site[0]
+            if kind == "node":
+                node = site[1]
+                if node.host is not None:
+                    node.host = None
+                    n += 1
+            elif kind == "tail":
+                _, node, tail_key = site
+                tail = node.tails.get(tail_key)
+                if tail is not None and tail.host:
+                    n += len(tail.host)
+                    tail.host = None
+                    if not tail.pages:
+                        node.tails.pop(tail_key)
+        self.dropped_pages += n
+        return n
+
     def clear(self, pool: PagePool) -> int:
         """Release every index hold (readers keep theirs), free every
         host-tier ref, and drop the trie.  Returns the number of device
@@ -545,6 +577,24 @@ class PrefixIndex:
         for root in self.roots.values():
             walk(root)
         return n
+
+    def device_pages(self) -> List[int]:
+        """Every device page the trie holds (one index hold each) — the
+        supervisor's page-accounting invariant closes against this
+        (DESIGN.md §10)."""
+        out: List[int] = []
+
+        def walk(node: _Node):
+            if node.page is not None:
+                out.append(node.page)
+            for tail in node.tails.values():
+                out.extend(tail.pages)
+            for child in node.children.values():
+                walk(child)
+
+        for root in self.roots.values():
+            walk(root)
+        return out
 
     @property
     def host_held_pages(self) -> int:

@@ -89,14 +89,19 @@ class SLOPolicy:
     def effective_priority(self, req, now: float) -> int:
         return req.priority + (self.boost if self.urgent(req, now) else 0)
 
-    def hopeless(self, req, now: float) -> bool:
-        """True when the request can no longer contribute goodput."""
+    def hopeless(self, req, now: float, margin: float = 0.0) -> bool:
+        """True when the request can no longer contribute goodput.
+
+        ``margin`` (seconds) tightens both deadlines — the degradation
+        ladder's L3 rung sheds *earlier* under fault pressure rather
+        than serving requests that will likely miss anyway
+        (DESIGN.md §10)."""
         if req.slo is None:
             return False
         if (req.first_token_at is None
-                and now > req.submitted_at + req.slo.ttft):
+                and now > req.submitted_at + req.slo.ttft - margin):
             return True                          # TTFT missed in queue
-        return now > req.submitted_at + req.slo.deadline
+        return now > req.submitted_at + req.slo.deadline - margin
 
 
 class StepClock:

@@ -140,6 +140,86 @@ def test_frontend_disconnect_cancels_request(tiny_cfg, tiny_params):
     assert eng.pool.used == 0
 
 
+async def _raw(host, port, payload: bytes) -> bytes:
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(payload)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    return raw
+
+
+def test_frontend_rejects_malformed_requests(tiny_cfg, tiny_params):
+    """Hostile bytes on the socket get clean 4xx responses — never a
+    half-written stream, never an engine-thread exception — and the
+    server keeps serving valid requests afterwards (DESIGN.md §10)."""
+    eng = _engine(tiny_cfg, tiny_params)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, tiny_cfg.vocab_size - 1, 4).astype(np.int32)
+
+    def post(body: bytes, clen=None) -> bytes:
+        clen = len(body) if clen is None else clen
+        return (f"POST /generate HTTP/1.1\r\nHost: x\r\n"
+                f"Content-Length: {clen}\r\n\r\n").encode() + body
+
+    cases = [
+        (b"\r\n", b"400"),                              # no request line
+        (post(b"{not json}"), b"400"),
+        (post(b"[1, 2, 3]"), b"400"),                   # not an object
+        (post(b'{"prompt": "abc", "gen_len": 4}'), b"400"),
+        (post(b'{"prompt": [1, true], "gen_len": 4}'), b"400"),
+        (post(b'{"prompt": [1, 2], "gen_len": 0}'), b"400"),
+        (post(b'{"prompt": [1, 2]}'), b"400"),          # missing gen_len
+        (post(b"x", clen=4096), b"413"),                # body > max_body
+        ((b"POST /generate HTTP/1.1\r\nHost: x\r\n"
+          b"Content-Length: nope\r\n\r\n"), b"400"),
+    ]
+
+    async def main():
+        front = AsyncFrontend(eng, max_steps=2048, max_body=1024)
+        await front.start(serve_http=True)
+        try:
+            results = []
+            for payload, code in cases:
+                raw = await _raw(front.host, front.port, payload)
+                results.append((raw.split(b"\r\n", 1)[0], code))
+            # the server survives: a valid request still streams
+            events = []
+            async for ev in stream_request(front.host, front.port,
+                                           prompt, 6):
+                events.append(ev)
+        finally:
+            await front.stop()
+        return results, events
+
+    results, events = asyncio.run(main())
+    for status_line, code in results:
+        assert code in status_line, (status_line, code)
+    assert events[-1]["kind"] == "done"
+    assert eng.stats.requests_done == 1   # junk never reached the engine
+
+
+def test_submit_threadsafe_validates_on_caller(tiny_cfg, tiny_params):
+    """Invalid submissions raise on the CALLING thread — a malformed
+    mailbox entry can never abort the engine loop mid-step."""
+    eng = _engine(tiny_cfg, tiny_params)
+    good = np.asarray([1, 2], np.int32)
+    with pytest.raises(ValueError):
+        eng.submit_threadsafe(good, 0)                  # gen_len <= 0
+    with pytest.raises(ValueError):
+        eng.submit_threadsafe(good, True)               # bool is not int
+    with pytest.raises(ValueError):
+        eng.submit_threadsafe(good, CANVAS + 1)         # over canvas
+    with pytest.raises(ValueError):
+        eng.submit_threadsafe(np.asarray([[1], [2]], np.int32), 4)
+    eng._drain_mailbox()
+    assert not eng.queue                  # nothing reached the engine
+
+
 def test_submit_threadsafe_and_cancel_queued(tiny_cfg, tiny_params):
     """Mailbox intake: submissions from a foreign thread are enqueued
     on the engine thread; canceling a queued uid before the engine

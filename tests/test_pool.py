@@ -387,6 +387,33 @@ def test_engine_page_accounting_leak_free(tiny_cfg, tiny_params,
     assert not eng.cancel(run_victim)         # already finalized
     both_tiers_consistent()
 
+    if host_pages:
+        # --- cancel during PROMOTING (DESIGN.md §10): a queued request
+        # parked on a host-tier match holds NO device pages yet; the
+        # cancel must clear the parked plan without touching either
+        # tier, and the host entry must stay promotable afterwards.
+        parked = None
+        for p in (shared, decoy, big, filler):
+            u = eng.submit(p, gen_len=len(p))
+            req = next(r for r in eng.queue if r.uid == u)
+            eng._prefix_plan(req)
+            if parked is None and req.pending_promotion is not None:
+                parked = (u, req, p)
+            else:
+                eng._drop_plan(req)
+            assert eng.cancel(u)
+        assert parked is not None, "churn left no host-resident entry"
+        u, req, p = parked
+        assert req.canceled and req.pending_promotion is None
+        assert not req.holds and req.pages is None
+        both_tiers_consistent()
+        # a fresh request still warms from the host tier
+        p0 = eng.stats.prefix_promotions
+        eng.submit(p, gen_len=len(p))
+        eng.run()
+        assert eng.stats.prefix_promotions == p0 + 1
+        both_tiers_consistent()
+
     eng.drop_prefix_cache()
     assert eng.pool.used == 0
     assert eng.pool.available == eng.pool.capacity
