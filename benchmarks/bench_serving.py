@@ -60,6 +60,15 @@ byte-identical to its fault-free twin, aborts are bounded by the retry
 budget, and both tiers drain to zero — and records goodput under chaos
 relative to fault-free in ``BENCH_serving.json``'s ``faults`` section.
 
+Part 6 is the telemetry benchmark (DESIGN.md §11): the Part-1 workload
+served with full telemetry (lifecycle tracer + per-step cache-dynamics
+sampling + metrics registry) vs none.  Telemetry is host-side only, so
+the bench asserts completed outputs are byte-identical and gates the
+measured throughput overhead at 10% (the DESIGN budget is 5%); the
+telemetry-on registry snapshot is embedded in ``BENCH_serving.json``
+and written with a Perfetto trace to ``BENCH_artifacts/`` for the CI
+job to upload.
+
 Wired into ``benchmarks/run.py --smoke`` (CI bench-smoke job), so the
 seeded chaos storm replays on every CI run.
 """
@@ -607,6 +616,116 @@ def _serve_chaos(cfg, params, reqs, plan) -> dict:
     }
 
 
+def _serve_telemetry(cfg, params, reqs, telemetry) -> dict:
+    """Part 6 (DESIGN.md §11): the Part-1 mid-run-arrival workload
+    through an oversubscribed pool + host tier, with telemetry
+    optionally attached.  The engine config is identical either way, so
+    the completed outputs must be byte-identical — telemetry is
+    host-side only and never perturbs the compiled step.  An untimed
+    pass compiles every executable (and seeds the prefix index, so the
+    measured pass exercises hits/demotions/promotions); the timed
+    throughput is best-of-2 to keep the overhead ratio low-noise."""
+    from repro.core.strategy import SPACache
+    from repro.serving.engine import ServingEngine
+    demand = sum(-(-min(len(p) + g, CANVAS) // PAGE) for p, g, _ in reqs)
+    eng = ServingEngine(
+        cfg, params, max_batch=4, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                          refresh_interval=1),
+        pool_pages=max(demand // 2, 4 * (CANVAS // PAGE)) + 1,
+        page_size=PAGE, prefix_cache=True, host_pages=16,
+        host_dtype="f32", telemetry=telemetry)
+
+    def serve_once():
+        upfront = reqs[: len(reqs) // 2]
+        arrivals = list(reqs[len(reqs) // 2:])
+
+        def on_step(e):
+            if arrivals and e.stats.steps % 2 == 0:
+                prompt, gen, pri = arrivals.pop(0)
+                e.submit(prompt, gen, priority=pri)
+
+        uid_of = {}
+        for i, (prompt, gen, pri) in enumerate(upfront):
+            uid_of[eng.submit(prompt, gen, priority=pri)] = i
+        stats = eng.run(on_step=on_step)
+        while arrivals:
+            prompt, gen, pri = arrivals.pop(0)
+            eng.submit(prompt, gen, priority=pri)
+            stats = eng.run(on_step=on_step)
+        return stats
+
+    serve_once()                            # untimed compile/warm pass
+    best_wall, stats = float("inf"), None
+    for _ in range(2):
+        eng.done.clear()
+        eng.stats = type(eng.stats)()
+        eng.pool.reset_telemetry()
+        t0 = time.time()
+        stats = serve_once()
+        best_wall = min(best_wall, time.time() - t0)
+    assert stats.requests_done == len(reqs)
+    outputs = {}
+    for i, r in enumerate(sorted(eng.done, key=lambda r: r.uid)):
+        if r.output is not None:
+            outputs[i] = np.asarray(r.output).tobytes()
+    return {
+        "eng": eng,
+        "outputs": outputs,
+        "wall_s": round(best_wall, 4),
+        "tok_s": round(stats.tps(best_wall), 2),
+        "steps": stats.steps,
+        "preemptions": stats.preemptions,
+        "promotions": stats.prefix_promotions,
+    }
+
+
+def _budget_util_table(cfg, params, reqs) -> dict:
+    """Per-layer refresh-budget utilization (mean fraction of the layer
+    budget k_l actually rewritten per step) for two cache strategies,
+    sampled by the engine's cache-dynamics hook (DESIGN.md §11) — the
+    EXPERIMENTS.md telemetry table.  k(l) rounds up to a multiple of 16
+    (budget.k_schedule), so at CANVAS=32 the rhos are chosen to straddle
+    that boundary — otherwise every strategy flattens to k=[16, 16] and
+    the table degenerates."""
+    import re
+    from repro.core.strategy import SPACache, ValueProxyCache
+    from repro.serving.engine import ServingEngine
+    from repro.serving.telemetry import Telemetry
+    table = {}
+    for name, strategy in (
+            ("singular", SPACache(rank=16, schedule="adaptive",
+                                  rho_peak=0.6, rho_first=0.03,
+                                  rho_last=0.55)),
+            ("value", ValueProxyCache(rho=0.6))):
+        tel = Telemetry(dynamics_every=1)   # registry + dynamics sampling
+        eng = ServingEngine(cfg, params, max_batch=4, canvas_len=CANVAS,
+                            strategy=strategy, telemetry=tel)
+        for prompt, gen, _ in reqs:
+            eng.submit(prompt, gen)
+        eng.run()
+        layers = {}
+        for key, v in tel.registry.snapshot().items():
+            if not key.startswith("spa_cache_budget_utilization_ratio"):
+                continue
+            lay = re.search(r'layer="(\d+)"', key).group(1)
+            layers[f"layer_{lay}"] = round(v["mean"], 4)
+        assert layers, f"{name}: no budget-utilization samples recorded"
+        table[name] = layers
+    return table
+
+
+def _drop_executables(part: str = "") -> None:
+    """Drop jitted executables between parts.  Accumulated lane/prefill
+    executables across six parts deterministically crash XLA's CPU JIT
+    late in a full run (LLVM "Cannot allocate memory" then a segfault in
+    libgcc) — the same failure tests/conftest.py clears at module
+    boundaries.  Each part re-warms its own executables untimed."""
+    jax.clear_caches()
+    if part:
+        print(f"[bench_serving] {part}", flush=True)
+
+
 def run(quick: bool = False) -> dict:
     cfg, params = _build()
     n_requests = 6 if quick else 16
@@ -633,6 +752,7 @@ def run(quick: bool = False) -> dict:
     results["paged_over_dense_tok_s_at_1x"] = round(r1, 3)
 
     # Part 2: shared-prefix radix cache vs cold prefills (DESIGN.md §6)
+    _drop_executables('part 2: prefix cache')
     preqs = _prefix_workload(cfg, 8 if quick else 16)
     on = _serve_prefix(cfg, params, preqs, True)
     off = _serve_prefix(cfg, params, preqs, False)
@@ -651,6 +771,7 @@ def run(quick: bool = False) -> dict:
     # vs SLO-aware (boost + EDF + shed); completed outputs must match
     # byte-for-byte (same strategy/scheduler/backend, row-independent
     # decode + byte-identical preemption resume).
+    _drop_executables('part 3: online SLO')
     n_online = 12 if quick else 24
     results["online"] = {
         "slo_policy": {"boost": 2, "urgency_frac": 0.6, "shed": True},
@@ -688,6 +809,7 @@ def run(quick: bool = False) -> dict:
     # capacity at fixed HBM (DESIGN.md §9).  The aggregate prefix
     # working set is >= 2x the device pool, so single-tier eviction has
     # to drop most of it; the host tier keeps the overflow promotable.
+    _drop_executables('part 4: host tier')
     hreqs = _hier_workload(cfg, 8)
     total_pages = sum(-(-(len(p) + g) // PAGE) for p, g in hreqs)
     tiers = [("host_off", 0), ("host_on", total_pages)]
@@ -712,6 +834,7 @@ def run(quick: bool = False) -> dict:
     # be byte-identical to their fault-free twins; the seed makes the
     # storm replay exactly on every CI run.
     from repro.serving.faults import FaultPlan
+    _drop_executables('part 5: fault storm')
     creqs = _workload(cfg, 6 if quick else 12)
     storm_plan = FaultPlan(seed=7, rates={
         "pool_alloc": 0.03, "lane_stall": 0.02, "step_nan": 0.02,
@@ -735,10 +858,49 @@ def run(quick: bool = False) -> dict:
             3),
     }
 
+    _drop_executables('part 3b: chat + frontend')
     results["online"]["chat"] = _serve_chat(
         cfg, params, n_clients=3 if quick else 4, turns=3)
     results["online"]["frontend_smoke"] = _frontend_smoke(
         cfg, params, 4 if quick else 8)
+
+    # Part 6: telemetry overhead + parity (DESIGN.md §11) — the same
+    # workload with full telemetry (tracer + cache-dynamics sampling +
+    # registry) vs none.  Outputs must be byte-identical (telemetry is
+    # host-side only); the CI gate fails a >10% throughput regression.
+    from repro.serving.telemetry import Telemetry
+    _drop_executables('part 6: telemetry')
+    treqs = _workload(cfg, 6 if quick else 12)
+    t_off = _serve_telemetry(cfg, params, treqs, None)
+    t_on = _serve_telemetry(cfg, params, treqs,
+                            Telemetry.enabled(dynamics_every=1))
+    assert set(t_on["outputs"]) == set(t_off["outputs"]), \
+        "telemetry changed which requests completed"
+    assert all(t_on["outputs"][i] == t_off["outputs"][i]
+               for i in t_on["outputs"]), \
+        "telemetry-on outputs diverged from telemetry-off"
+    t_ratio = t_on["tok_s"] / max(t_off["tok_s"], 1e-9)
+    assert t_ratio >= 0.90, \
+        f"telemetry overhead gate: {1 - t_ratio:.1%} regression > 10%"
+    eng_on = t_on.pop("eng")
+    t_off.pop("eng")
+    results["telemetry"] = {
+        "off": t_off, "on": t_on,
+        "on_over_off_tok_s": round(t_ratio, 3),
+        "overhead_frac": round(max(0.0, 1.0 - t_ratio), 3),
+        "outputs_byte_identical": True,
+        "budget_utilization": _budget_util_table(
+            cfg, params, treqs[: 4 if quick else 6]),
+        "registry_snapshot": eng_on.telemetry.registry.snapshot(),
+    }
+    for d in (t_off, t_on):
+        d.pop("outputs")
+    art_dir = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_artifacts")
+    os.makedirs(art_dir, exist_ok=True)
+    with open(os.path.join(art_dir, "metrics_snapshot.json"), "w") as f:
+        json.dump(results["telemetry"]["registry_snapshot"], f, indent=2)
+    eng_on.export_trace(os.path.join(art_dir, "trace.json"))
 
     out_path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serving.json")
@@ -756,7 +918,8 @@ def run(quick: bool = False) -> dict:
           f"chaos goodput = "
           f"{results['faults']['goodput_vs_clean']:.2f}x of clean at "
           f"{storm['faults_injected']} injected faults, "
-          f"{storm['faulted']} aborted]")
+          f"{storm['faulted']} aborted; telemetry overhead = "
+          f"{results['telemetry']['overhead_frac']:.1%}]")
     return results
 
 

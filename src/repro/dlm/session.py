@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +152,12 @@ class DecodeSession:
         # one-shot NaN fault payload armed by the engine's injector,
         # applied inside the next step() AFTER auto-refresh (§10)
         self._poison_pages: Optional[List[int]] = None
+        # cache-dynamics telemetry (DESIGN.md §11): previous-step host
+        # snapshots of the proxy identifier buffers + the previous
+        # changed-row sets, diffed by cache_dynamics().  Host-side only
+        # — never threaded into the jitted step.
+        self._dyn_prev: Optional[Dict[str, np.ndarray]] = None
+        self._dyn_prev_sel: Optional[Dict[str, List[set]]] = None
 
     # ------------------------------------------------------------------
     # State construction
@@ -246,6 +252,8 @@ class DecodeSession:
             rng=self._as_rng(rng), kv_len=kv_len)
         self.steps_taken = 0
         self.refresh_count = 0
+        self._dyn_prev = None          # new canvas: old diffs meaningless
+        self._dyn_prev_sel = None
         self._gen_span = None     # run_blocks needs a prefill()'d canvas
         return self.state
 
@@ -370,6 +378,88 @@ class DecodeSession:
                                              blocks)
         self.state = self.state._replace(
             cache=PagedCache(arenas, cache.page_table))
+
+    def cache_dynamics(self, max_rows: int = 2048
+                       ) -> Optional[Dict[str, Any]]:
+        """Host-side SPA cache-dynamics probe (DESIGN.md §11).
+
+        Diffs the current ``proxy`` identifier buffers against the
+        snapshot taken on the previous call; the rows whose proxies
+        changed are exactly the rows the strategy selected AND committed
+        that interval (``commit`` scatters the fresh proxy alongside the
+        K/V rows), so the diff recovers — without touching the jitted
+        step — per layer:
+
+          * ``changed``: refreshed row count (→ budget utilization
+            against ``k_schedule`` in the engine),
+          * ``drift``: ``1 - cos(old_row, new_row)`` over the changed
+            rows (the drift-score distribution the paper's adaptive
+            budget responds to), sampled to ``max_rows`` rows,
+          * ``overlap``: Jaccard overlap of this interval's changed-row
+            set vs the previous one (selection stability).
+
+        Returns None on the first call after ``attach`` (nothing to
+        diff), for cache-less strategies, and when no proxy buffer
+        exists.  Purely host-side: ``np.asarray`` reads sync on the
+        in-flight step but never feed anything back, so decode outputs
+        are byte-identical with sampling on (tests/test_telemetry.py).
+        """
+        if self.state is None:
+            return None
+        cache = self.state.cache
+        bufs = cache.arenas if isinstance(cache, PagedCache) else cache
+        if not isinstance(bufs, dict):
+            return None
+        cur: Dict[str, np.ndarray] = {}
+        for kind, b in bufs.items():
+            if isinstance(b, dict) and "proxy" in b:
+                cur[kind] = np.asarray(b["proxy"])
+        if not cur:
+            return None
+        prev, prev_sel = self._dyn_prev, self._dyn_prev_sel
+        self._dyn_prev = cur
+        if prev is None:
+            return None
+        out: Dict[str, Any] = {
+            "refreshed": bool(self._last_step_refreshed), "kinds": {}}
+        sel_now: Dict[str, List[set]] = {}
+        for kind, now_arr in cur.items():
+            p = prev.get(kind)
+            if p is None or p.shape != now_arr.shape:
+                continue
+            n_layers = now_arr.shape[0]
+            a = p.reshape(n_layers, -1, p.shape[-1])
+            b2 = now_arr.reshape(n_layers, -1, now_arr.shape[-1])
+            changed = np.any(a != b2, axis=-1)          # [L, rows]
+            layers = []
+            sel_now[kind] = []
+            for l in range(n_layers):
+                idx = np.nonzero(changed[l])[0]
+                drift: List[float] = []
+                if idx.size:
+                    ii = idx[:max_rows]
+                    va = a[l, ii].astype(np.float64)
+                    vb = b2[l, ii].astype(np.float64)
+                    denom = np.maximum(
+                        np.linalg.norm(va, axis=-1)
+                        * np.linalg.norm(vb, axis=-1), 1e-12)
+                    cos = np.clip((va * vb).sum(-1) / denom, -1.0, 1.0)
+                    drift = [float(x) for x in 1.0 - cos]
+                cur_set = set(int(x) for x in idx)
+                overlap = None
+                if prev_sel is not None and kind in prev_sel \
+                        and l < len(prev_sel[kind]):
+                    ps = prev_sel[kind][l]
+                    union = ps | cur_set
+                    if union:
+                        overlap = len(ps & cur_set) / len(union)
+                layers.append({"changed": int(idx.size),
+                               "rows": int(changed.shape[1]),
+                               "drift": drift, "overlap": overlap})
+                sel_now[kind].append(cur_set)
+            out["kinds"][kind] = layers
+        self._dyn_prev_sel = sel_now or prev_sel
+        return out
 
     def poison_cache_pages(self, pages: Sequence[int]) -> None:
         """Overwrite the float buffers of physical ``pages`` with NaN —

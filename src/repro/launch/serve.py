@@ -101,6 +101,14 @@ def main(argv=None):
     ap.add_argument("--chaos-rate", type=float, default=0.02,
                     help="per-probe fire rate for every fault site "
                          "when --chaos-seed is set")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(request lifecycle spans + engine phase "
+                         "breakdown, DESIGN.md §11) to this path")
+    ap.add_argument("--metrics", action="store_true",
+                    help="sample SPA cache-dynamics every step and "
+                         "print the full metrics-registry dump at exit "
+                         "(the compact non-zero dump always prints)")
     args = ap.parse_args(argv)
 
     if args.client:
@@ -138,6 +146,12 @@ def main(argv=None):
             rates={s: args.chaos_rate for s in FAULT_SITES})
         print(f"chaos: seed={args.chaos_seed} "
               f"rate={args.chaos_rate} on all sites")
+    telemetry = None
+    if args.trace_out or args.metrics:
+        from repro.serving.telemetry import Telemetry, Tracer
+        telemetry = Telemetry(
+            tracer=Tracer(enabled=bool(args.trace_out)),
+            dynamics_every=1 if args.metrics else 0)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
@@ -145,62 +159,88 @@ def main(argv=None):
         prefix_cache=args.prefix_cache, host_pages=args.host_pages,
         host_dtype=args.host_dtype, slo_policy=slo_policy,
         fault_plan=fault_plan, supervise=args.supervise,
+        telemetry=telemetry,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
     if args.serve:
         return _serve_online(engine, args)
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size - 1,
-                              int(rng.integers(6, 18))).astype(np.int32)
-        engine.submit(prompt, args.gen_len)
-    stats = engine.run()
-    print(f"served {stats.requests_done} requests, "
-          f"{stats.tokens_committed} tokens, {stats.steps} steps, "
-          f"{stats.swaps} slot swaps, "
-          f"{stats.tps(engine._wall):.1f} tok/s")
-    _print_latency(stats)
-    if args.pool_pages:
-        print(f"pool: {args.pool_pages} pages x {args.page_size} rows, "
-              f"peak util {stats.peak_pool_util:.0%}, steady "
-              f"{stats.steady_pool_util:.0%}, "
-              f"{stats.preemptions} preemptions, "
-              f"{stats.admission_stalls} admission stalls")
-        if engine.prefix is not None:
-            print(f"prefix cache: {stats.prefix_hits} hits "
-                  f"({stats.prefix_full_hits} full), "
-                  f"{stats.prefix_tokens_saved} prefill tokens saved, "
-                  f"{stats.prefix_published} pages published "
-                  f"({stats.prefix_publish_skipped} skipped), "
-                  f"{stats.prefix_evicted_pages} evicted "
-                  f"({stats.prefix_demoted_pages} demoted, "
-                  f"{stats.prefix_dropped_pages} dropped)")
-        if engine.host_pool is not None:
-            print(f"host tier: {args.host_pages} page units "
-                  f"({args.host_dtype}), "
-                  f"{stats.prefix_promoted_pages} pages promoted in "
-                  f"{stats.prefix_promotions} promotions "
-                  f"({stats.promotion_stalls} stalls), "
-                  f"peak util {stats.peak_host_util:.0%}, "
-                  f"{engine.host_pool.used_pages} resident at exit")
-    if engine.supervisor is not None or engine.faults is not None:
-        print(f"supervisor: {stats.faults_injected} faults injected, "
-              f"{stats.requests_faulted} requests faulted, "
-              f"{stats.nan_quarantines} NaN quarantines, "
-              f"{stats.alloc_faults} alloc faults, "
-              f"{stats.host_checksum_failures} checksum failures "
-              f"({stats.cold_prefill_fallbacks} cold fallbacks), "
-              f"{stats.watchdog_fires} watchdog fires, "
-              f"{stats.invariant_checks} invariant checks")
-        print(f"ladder: level {stats.degrade_level} at exit, "
-              f"{stats.degradations} degradations / "
-              f"{stats.restorations} restorations "
-              f"{stats.degradation_events}")
+    prompts = [rng.integers(0, cfg.vocab_size - 1,
+                            int(rng.integers(6, 18))).astype(np.int32)
+               for _ in range(args.requests)]
+    if args.prefix_cache and args.requests > 1:
+        # half unique prompts, then repeats, staged so the §6/§9
+        # machinery actually fires (visible in --metrics/--trace-out):
+        # cold prompts run SOLO — publication allocs a whole run's
+        # worth of pages on top of the row, so a concurrent cold pass
+        # mostly fails to publish; the repeats then churn CONCURRENTLY
+        # — admission pressure evicts the LRU entries (demoting them
+        # to host RAM under --host-pages); the last repeat runs solo
+        # against the drained pool, where its promotion alloc can
+        # succeed (mid-churn it would only stall).
+        uniq = prompts[: max(1, args.requests // 2)]
+        wall = 0.0
+        for prompt in uniq:
+            engine.submit(prompt, args.gen_len)
+            engine.run()
+            wall += getattr(engine, "_wall", 0.0)
+        repeats = [uniq[(i + 1) % len(uniq)]
+                   for i in range(args.requests - len(uniq))]
+        churn, late = repeats[:-1], []
+        if len(churn) > 1:
+            # hold one back and land it mid-churn at high priority on
+            # the full pool — the §5 preemption path, live in the trace
+            churn, late = churn[:-1], [churn[-1]]
+
+        def on_step(e):
+            if late and e.stats.steps >= 2:
+                e.submit(late.pop(), args.gen_len, priority=5)
+
+        for prompt in churn:
+            engine.submit(prompt, args.gen_len)
+        engine.run(on_step=on_step)
+        wall += getattr(engine, "_wall", 0.0)
+        while late:                  # churn drained before step 2
+            engine.submit(late.pop(), args.gen_len, priority=5)
+            engine.run()
+            wall += getattr(engine, "_wall", 0.0)
+        engine.submit(repeats[-1], args.gen_len)
+        engine.run()
+        engine._wall = getattr(engine, "_wall", 0.0) + wall
+    else:
+        for prompt in prompts:
+            engine.submit(prompt, args.gen_len)
+        engine.run()
+    _summarize(engine, args)
     for req in engine.done[:3]:
         out = "<faulted>" if req.output is None else f"{req.output[:10]}..."
         print(f"  req {req.uid}: out={out}")
     return 0
+
+
+def _summarize(engine, args) -> None:
+    """End-of-run report: a one-line headline, exact latency
+    percentiles when anything completed, and the metrics-registry dump
+    (DESIGN.md §11) in place of the old ad-hoc per-subsystem prints.
+    Renders cleanly when zero requests complete."""
+    stats = engine.stats
+    wall = getattr(engine, "_wall", 0.0)
+    print(f"served {stats.requests_done} requests, "
+          f"{stats.tokens_committed} tokens, {stats.steps} steps, "
+          f"{stats.swaps} slot swaps, {stats.tps(wall):.1f} tok/s")
+    if stats.requests_done:
+        _print_latency(stats)
+    else:
+        print("latency: no requests completed")
+    print("metrics registry " + "-" * 46)
+    print(engine.telemetry.registry.format_summary(
+        skip_zero=not args.metrics))
+    if args.trace_out:
+        engine.export_trace(args.trace_out)
+        n_ev = len(engine.telemetry.tracer.events)
+        print(f"trace: {n_ev} events -> {args.trace_out} "
+              f"(load in Perfetto / chrome://tracing)")
 
 
 def _print_latency(stats) -> None:
@@ -229,12 +269,13 @@ def _serve_online(engine, args) -> int:
         await front.start(serve_http=True)
         print(f"serving on http://{front.host}:{front.port} — "
               f"POST /generate {{prompt, gen_len, slo?}} streams "
-              f"ndjson; GET /stats")
+              f"ndjson; GET /stats | /metrics (Prometheus) | "
+              f"/debug/requests")
         try:
             await asyncio.Event().wait()      # until interrupted
         finally:
             await front.stop()
-            _print_latency(engine.stats)
+            _summarize(engine, args)
 
     try:
         asyncio.run(amain())

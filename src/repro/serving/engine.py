@@ -116,6 +116,8 @@ from repro.serving.pool import OutOfPages, PagePool, cache_signature
 from repro.serving.prefix import PrefixIndex, PrefixMatch
 from repro.serving.slo import SLO, SLOPolicy
 from repro.serving.supervisor import EngineSupervisor, SupervisorConfig
+from repro.serving.telemetry import (PID_ENGINE, PID_EVENTS, PID_REQUESTS,
+                                     Histogram, Telemetry)
 
 # (settings, strategy, scheduler): everything the compiled step closes
 # over statically — one DecodeSession (one executable) per distinct key.
@@ -225,10 +227,25 @@ class EngineStats:
     requests_canceled: int = 0      # client cancel / disconnect
     slo_met: int = 0                # completed within their SLO
     slo_missed: int = 0             # completed but past TTFT/deadline
-    e2e_latencies: List[float] = dataclasses.field(default_factory=list)
-    queue_waits: List[float] = dataclasses.field(default_factory=list)
-    ttft_latencies: List[float] = dataclasses.field(default_factory=list)
-    tpot_latencies: List[float] = dataclasses.field(default_factory=list)
+    # latency distributions are telemetry histograms (DESIGN.md §11):
+    # fixed buckets feed Prometheus exposition while retained samples
+    # keep percentiles EXACT (and `len(stats.e2e_latencies)` list-compat)
+    e2e_latencies: Histogram = dataclasses.field(
+        default_factory=functools.partial(
+            Histogram, "spa_engine_e2e_latency_seconds",
+            "request end-to-end latency (submit to harvest)"))
+    queue_waits: Histogram = dataclasses.field(
+        default_factory=functools.partial(
+            Histogram, "spa_engine_queue_wait_seconds",
+            "queue wait (submit to first admission)"))
+    ttft_latencies: Histogram = dataclasses.field(
+        default_factory=functools.partial(
+            Histogram, "spa_engine_ttft_seconds",
+            "time to first committed token"))
+    tpot_latencies: Histogram = dataclasses.field(
+        default_factory=functools.partial(
+            Histogram, "spa_engine_tpot_seconds",
+            "per-request time per output token"))
     # fault tolerance (DESIGN.md §10)
     faults_injected: int = 0        # injector fires (replay fingerprint)
     requests_faulted: int = 0       # aborted by fault containment
@@ -256,18 +273,90 @@ class EngineStats:
         return self.slo_met / max(wall, 1e-9)
 
     def percentiles(self) -> Dict[str, float]:
-        """p50/p95 end-to-end, queue-wait, TTFT and TPOT (seconds)."""
+        """p50/p95 end-to-end, queue-wait, TTFT and TPOT (seconds) —
+        single-sourced through :meth:`Histogram.percentile`, which is
+        exact (matches ``numpy.percentile``) over retained samples."""
         out: Dict[str, float] = {}
-        for name, xs in (("e2e", self.e2e_latencies),
-                         ("wait", self.queue_waits),
-                         ("ttft", self.ttft_latencies),
-                         ("tpot", self.tpot_latencies)):
-            if xs:
-                out[f"{name}_p50"] = float(np.percentile(xs, 50))
-                out[f"{name}_p95"] = float(np.percentile(xs, 95))
-            else:
-                out[f"{name}_p50"] = out[f"{name}_p95"] = 0.0
+        for name, h in (("e2e", self.e2e_latencies),
+                        ("wait", self.queue_waits),
+                        ("ttft", self.ttft_latencies),
+                        ("tpot", self.tpot_latencies)):
+            out[f"{name}_p50"] = h.percentile(50)
+            out[f"{name}_p95"] = h.percentile(95)
         return out
+
+
+# EngineStats field -> Prometheus metric mirror (DESIGN.md §11 naming:
+# spa_<subsystem>_<quantity>[_<unit>], monotonic counters end in _total).
+_STATS_COUNTERS: Tuple[Tuple[str, str, str], ...] = (
+    ("steps", "spa_engine_steps_total", "engine iterations"),
+    ("tokens_committed", "spa_engine_tokens_committed_total",
+     "tokens committed across all requests"),
+    ("requests_done", "spa_engine_requests_done_total",
+     "requests harvested with output"),
+    ("swaps", "spa_engine_swaps_total", "mid-loop slot replacements"),
+    ("preemptions", "spa_engine_preemptions_total",
+     "running requests evicted for pages/priority"),
+    ("admission_stalls", "spa_engine_admission_stalls_total",
+     "admission attempts blocked on pages"),
+    ("prefix_hits", "spa_prefix_hits_total",
+     "admissions that attached index pages"),
+    ("prefix_full_hits", "spa_prefix_full_hits_total",
+     "prefix hits covering the whole row span"),
+    ("prefix_tokens_saved", "spa_prefix_tokens_saved_total",
+     "prompt+canvas rows not re-prefilled"),
+    ("prefix_published", "spa_prefix_published_pages_total",
+     "pages copied into the index"),
+    ("prefix_publish_skipped", "spa_prefix_publish_skipped_total",
+     "publications dropped (pool short)"),
+    ("prefix_evicted_pages", "spa_prefix_evicted_pages_total",
+     "index pages evicted under pressure"),
+    ("prefix_demoted_pages", "spa_tier_demoted_pages_total",
+     "evicted pages demoted to the host tier"),
+    ("prefix_dropped_pages", "spa_tier_dropped_pages_total",
+     "evicted pages dropped outright"),
+    ("prefix_promoted_pages", "spa_tier_promoted_pages_total",
+     "host pages promoted back to device"),
+    ("prefix_promotions", "spa_tier_promotions_total",
+     "promotion events serviced"),
+    ("promotion_stalls", "spa_tier_promotion_stalls_total",
+     "promotions abandoned (no headroom)"),
+    ("requests_shed", "spa_slo_requests_shed_total",
+     "requests dropped by the SLO policy / ladder"),
+    ("requests_canceled", "spa_engine_requests_canceled_total",
+     "client cancels / disconnects"),
+    ("slo_met", "spa_slo_met_total", "completions within SLO"),
+    ("slo_missed", "spa_slo_missed_total",
+     "completions past TTFT/deadline (incl. shed)"),
+    ("requests_faulted", "spa_fault_requests_faulted_total",
+     "requests aborted by fault containment"),
+    ("alloc_faults", "spa_fault_alloc_failures_total",
+     "transient admission alloc failures"),
+    ("host_checksum_failures", "spa_fault_host_checksum_failures_total",
+     "corrupt host pages caught at promotion"),
+    ("cold_prefill_fallbacks", "spa_fault_cold_prefill_fallbacks_total",
+     "corrupted promotions served by cold prefill"),
+    ("nan_quarantines", "spa_fault_nan_quarantines_total",
+     "poisoned rows aborted by the NaN guard"),
+    ("disconnect_bursts", "spa_fault_disconnect_bursts_total",
+     "injected mass client hangups"),
+    ("watchdog_fires", "spa_fault_watchdog_fires_total",
+     "stuck lanes force-preempted"),
+    ("invariant_checks", "spa_fault_invariant_checks_total",
+     "supervisor accounting audits run"),
+    ("publish_paused_skips", "spa_fault_publish_paused_skips_total",
+     "publications skipped at ladder L1+"),
+    ("degradations", "spa_fault_degradations_total",
+     "upward ladder transitions"),
+    ("restorations", "spa_fault_restorations_total",
+     "downward ladder transitions"),
+)
+
+_RATIO_BUCKETS = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9,
+                  1.0, 1.5, 2.0, 4.0)
+_DRIFT_BUCKETS = (1e-6, 1e-5, 1e-4, 1e-3, 3e-3, 0.01, 0.03, 0.1, 0.3,
+                  0.6, 1.0, 1.5, 2.0)
+_HIT_DEPTH_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
 
 
 class ServingEngine:
@@ -284,7 +373,8 @@ class ServingEngine:
                  clock: Optional[Callable[[], float]] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  supervise: bool = False,
-                 supervisor_cfg: Optional[SupervisorConfig] = None):
+                 supervisor_cfg: Optional[SupervisorConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -337,6 +427,17 @@ class ServingEngine:
         # online serving (DESIGN.md §8)
         self.slo_policy = slo_policy
         self._clock = clock or time.time
+        # unified telemetry (DESIGN.md §11): a registry (always present
+        # — /metrics and bench snapshots read live engine state through
+        # a collector) + a span tracer (disabled by default; every
+        # trace call in the hot loop is gated on ``tracer.enabled``).
+        # The tracer is re-stamped from the ENGINE clock so traces are
+        # deterministic under virtual-clock replay.
+        self.telemetry = telemetry or Telemetry.disabled()
+        self.telemetry.tracer.clock = self._clock
+        self._tr = self.telemetry.tracer
+        self.telemetry.registry.add_collector(self._collect_metrics)
+        self._lane_ids: Dict[LaneKey, int] = {}
         self.event_sink: Optional[Callable[[RequestEvent], None]] = None
         # thread-safe intake: closures enqueued by submit_threadsafe /
         # cancel_threadsafe, drained on the engine thread at the
@@ -358,6 +459,10 @@ class ServingEngine:
                 self.pool.fault_hook = self.faults
             if self.tier is not None:
                 self.tier.injector = self.faults
+            # every injector fire becomes a trace event with the same
+            # (site, probe) schema as FaultInjector.log, so a chaos
+            # replay and its trace can be diffed (DESIGN.md §11)
+            self.faults.on_fire = self._trace_fault
         # degradation-ladder flags, maintained by the supervisor
         self._publish_paused = False
         self._host_tier_paused = False
@@ -370,6 +475,152 @@ class ServingEngine:
 
     def _now(self) -> float:
         return self._clock()
+
+    # ------------------------------------------------------------------
+    # Telemetry (DESIGN.md §11)
+    # ------------------------------------------------------------------
+
+    def _trace_fault(self, site: str, probe: int) -> None:
+        """Injector fire → instant trace event, schema-identical to the
+        FaultInjector.log entry ``(site, probe)``."""
+        self._tr.instant(PID_EVENTS, 1, f"fault:{site}", cat="fault",
+                         args={"site": site, "probe": probe,
+                               "step": self.stats.steps})
+
+    def _lane_id(self, lane: LaneKey) -> int:
+        lid = self._lane_ids.get(lane)
+        if lid is None:
+            lid = self._lane_ids[lane] = len(self._lane_ids)
+            self._tr.name_track(PID_ENGINE, lid, f"lane{lid}")
+        return lid
+
+    def _phase_end(self, lid: int, name: str) -> None:
+        """Close an engine-phase span and fold its duration into the
+        step-time-breakdown histogram."""
+        tr = self._tr
+        tr.end(PID_ENGINE, lid, name)
+        self.telemetry.registry.histogram(
+            "spa_engine_phase_seconds",
+            "per-iteration step-time breakdown",
+            labels={"phase": name}).observe(tr.events[-1].dur)
+
+    def _note_cache_dynamics(self, sess: DecodeSession,
+                             strategy: CacheStrategy, n_live: int) -> None:
+        """Fold one DecodeSession.cache_dynamics() probe into the
+        registry: per-layer refresh-budget utilization, proxy drift
+        distribution, selection overlap.  Host-side, post-sync only."""
+        dyn = sess.cache_dynamics()
+        if dyn is None:
+            return
+        reg = self.telemetry.registry
+        if dyn["refreshed"]:
+            # a full refresh rewrites every row — budget utilization and
+            # drift are about the *incremental* selection, so count the
+            # event and skip the diff-derived metrics
+            reg.counter("spa_cache_refresh_steps_total",
+                        "steps that ran a full cache refresh").inc()
+            return
+        try:
+            ks = strategy.k_schedule(self.cfg, self.canvas_len)
+        except (NotImplementedError, AttributeError):
+            ks = None
+        for kind, layers in dyn["kinds"].items():
+            for layer, d in enumerate(layers):
+                labels = {"kind": kind, "layer": str(layer)}
+                if ks is not None and layer < len(ks) and n_live:
+                    util = d["changed"] / max(int(ks[layer]) * n_live, 1)
+                    reg.histogram(
+                        "spa_cache_budget_utilization_ratio",
+                        "refreshed rows / (k_schedule budget * live "
+                        "rows) per step", labels=labels,
+                        buckets=_RATIO_BUCKETS).observe(util)
+                if d["drift"]:
+                    h = reg.histogram(
+                        "spa_cache_proxy_drift",
+                        "1 - cos(prev proxy row, new proxy row) over "
+                        "refreshed rows", labels=labels,
+                        buckets=_DRIFT_BUCKETS)
+                    for x in d["drift"]:
+                        h.observe(x)
+                if d["overlap"] is not None:
+                    reg.histogram(
+                        "spa_cache_selection_overlap_ratio",
+                        "Jaccard overlap of consecutive refreshed-row "
+                        "sets", labels=labels,
+                        buckets=_RATIO_BUCKETS).observe(d["overlap"])
+
+    def _collect_metrics(self) -> None:
+        """Registry collector: mirror live engine state (EngineStats
+        counters, pool/tier occupancy, queue depth) into the registry
+        right before every render()/snapshot().  EngineStats stays the
+        engine-thread-owned source of truth (and stays zero-arg
+        resettable); the registry is the exposition view over it."""
+        reg, s = self.telemetry.registry, self.stats
+        for field, metric, help_txt in _STATS_COUNTERS:
+            reg.counter(metric, help_txt).set(getattr(s, field))
+        if self.faults is not None:
+            reg.counter("spa_fault_injected_total",
+                        "fault-injector fires").set(self.faults.total_fired)
+        reg.gauge("spa_fault_degrade_level",
+                  "graceful-degradation ladder rung (0 = full service)"
+                  ).set(s.degrade_level)
+        reg.gauge("spa_engine_queue_depth",
+                  "queued requests").set(len(self.queue))
+        reg.gauge("spa_engine_running_requests",
+                  "admitted in-flight requests").set(len(self._running))
+        for h, name in ((s.e2e_latencies, "spa_engine_e2e_latency_seconds"),
+                        (s.queue_waits, "spa_engine_queue_wait_seconds"),
+                        (s.ttft_latencies, "spa_engine_ttft_seconds"),
+                        (s.tpot_latencies, "spa_engine_tpot_seconds")):
+            # re-adopt every collect: `eng.stats = EngineStats()` warm-up
+            # resets swap the histogram objects out from under us
+            reg.adopt(h, name, h.help)
+        # each tier owns its exposition names (pool.py / prefix.py /
+        # hier.py telemetry_gauges) — the collector just mirrors them
+        for obj in (self.pool, self.prefix, self.host_pool):
+            if obj is not None:
+                for name, (help_txt, val) in obj.telemetry_gauges().items():
+                    reg.gauge(name, help_txt).set(val)
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition of the live registry (the
+        frontend's ``GET /metrics``).  Reads race the engine thread
+        benignly, like ``stats_snapshot`` — ints/floats only."""
+        return self.telemetry.registry.render()
+
+    def export_trace(self, path: str) -> None:
+        """Write the tracer's Chrome-trace JSON (Perfetto-loadable)."""
+        self._tr.export(path)
+
+    def request_states(self, done_tail: int = 32) -> Dict[str, List[Dict]]:
+        """JSON-able per-request lifecycle view (``GET /debug/requests``):
+        queued / running / recently finished, with timings."""
+        def row(r: Request, state: str) -> Dict:
+            return {
+                "uid": r.uid, "state": state, "priority": r.priority,
+                "gen_len": r.gen_len, "pages": r.n_pages,
+                "shared_pages": r.shared_n,
+                "preemptions": r.preemptions,
+                "tokens_done": r.tokens_done,
+                "submitted_at": r.submitted_at,
+                "started_at": r.started_at,
+                "first_token_at": r.first_token_at,
+                "completed_at": r.completed_at,
+                "shed": r.shed, "canceled": r.canceled,
+                "fault": r.fault,
+                "slo": (None if r.slo is None else
+                        {"ttft": (None if r.slo.ttft == float("inf")
+                                  else r.slo.ttft),
+                         "deadline": (None
+                                      if r.slo.deadline == float("inf")
+                                      else r.slo.deadline)}),
+            }
+        return {
+            "queued": [row(r, "queued") for r in list(self.queue)],
+            "running": [row(r, "running")
+                        for r in list(self._running.values())],
+            "done": [row(r, "done") for r in self.done[-done_tail:]],
+        }
 
     def submit(self, prompt: np.ndarray, gen_len: int,
                settings: Optional[DecodeSettings] = None,
@@ -434,6 +685,14 @@ class ServingEngine:
     def _enqueue(self, req: Request) -> None:
         self._admission_dirty = True
         self.queue.append(req)
+        tr = self._tr
+        if tr.enabled:
+            tr.name_track(PID_REQUESTS, req.uid, f"req {req.uid}")
+            tr.begin(PID_REQUESTS, req.uid, "request", cat="lifecycle",
+                     args={"prompt_len": int(len(req.prompt)),
+                           "gen_len": req.gen_len,
+                           "priority": req.priority})
+            tr.begin(PID_REQUESTS, req.uid, "queued", cat="lifecycle")
 
     def _drain_mailbox(self) -> None:
         while True:
@@ -600,6 +859,14 @@ class ServingEngine:
         self._running.pop(req.uid, None)
         self._admission_dirty = True   # a slot/pages may have freed
         self.done.append(req)
+        if self._tr.enabled:
+            # the request may be mid-"queued" or mid-"running"; close
+            # whatever is open on its track so no span is orphaned
+            outcome = ("shed" if req.shed
+                       else "fault" if req.fault is not None
+                       else "canceled")
+            self._tr.close_track(PID_REQUESTS, req.uid,
+                                 args={"outcome": outcome})
         if req.shed:
             self.stats.requests_shed += 1
             if req.slo is not None:   # a shed request IS a missed SLO
@@ -734,6 +1001,11 @@ class ServingEngine:
 
     def _count_prefix_hit(self, req: Request) -> None:
         """Admission succeeded: account the planned hit."""
+        self.telemetry.registry.histogram(
+            "spa_prefix_hit_depth_pages",
+            "index pages attached per admission (0 = miss)",
+            buckets=_HIT_DEPTH_BUCKETS).observe(req.shared_n
+                                                if req.holds else 0)
         if not req.holds:
             return
         self.stats.prefix_hits += 1
@@ -890,6 +1162,11 @@ class ServingEngine:
         if freed:
             self.stats.prefix_evicted_pages += freed
             self._prefix_epoch += 1
+            self._tr.instant(
+                PID_EVENTS, 2, "demote", cat="tier",
+                args={"freed": freed, "step": self.stats.steps,
+                      "demoted": self.prefix.demoted_pages - d0,
+                      "dropped": self.prefix.dropped_pages - x0})
         return freed
 
     def _promote_now(self, req: Request) -> bool:
@@ -953,6 +1230,8 @@ class ServingEngine:
         req.shared_full = match.full
         self.stats.prefix_promoted_pages += n
         self.stats.prefix_promotions += 1
+        self._tr.instant(PID_REQUESTS, req.uid, "promote", cat="tier",
+                         args={"pages": n, "step": self.stats.steps})
         self._prefix_epoch += 1         # planned misses may now hit
         req.plan_epoch = self._prefix_epoch
         self._admission_dirty = True
@@ -1021,6 +1300,16 @@ class ServingEngine:
         slots[slot] = None
         self._running.pop(victim.uid, None)
         self.queue.appendleft(victim)
+        tr = self._tr
+        if tr.enabled:
+            tr.end(PID_REQUESTS, victim.uid, "running",
+                   args={"exit": "preempt"})
+            tr.instant(PID_REQUESTS, victim.uid, "preempt",
+                       cat="lifecycle",
+                       args={"step": self.stats.steps,
+                             "preemptions": victim.preemptions})
+            tr.begin(PID_REQUESTS, victim.uid, "queued", cat="lifecycle",
+                     args={"resumed": True})
 
     # ------------------------------------------------------------------
     # fault handling (§10)
@@ -1203,6 +1492,16 @@ class ServingEngine:
 
     def _admit_bookkeep(self, req: Request) -> None:
         self._running[req.uid] = req   # cancel() finds in-flight by uid
+        tr = self._tr
+        if tr.enabled:
+            tr.end(PID_REQUESTS, req.uid, "queued")
+            kind = ("resume" if req.preemptions > 0
+                    else "full_hit" if req.shared_full
+                    else "partial_prefill" if req.shared_n
+                    else "prefill")
+            tr.begin(PID_REQUESTS, req.uid, "running", cat="lifecycle",
+                     args={"prefill": kind, "pages": req.n_pages,
+                           "shared_pages": req.shared_n})
 
     # ------------------------------------------------------------------
     # Canvas rows
@@ -1258,6 +1557,13 @@ class ServingEngine:
         self._running.pop(req.uid, None)
         self.done.append(req)
         self.stats.requests_done += 1
+        tr = self._tr
+        if tr.enabled:
+            tr.end(PID_REQUESTS, req.uid, "running",
+                   args={"exit": "done", "steps": req.served_steps})
+            tr.end(PID_REQUESTS, req.uid, "request",
+                   args={"outcome": "done", "tokens": req.tokens_done,
+                         "preemptions": req.preemptions})
         self._emit(req, "done",
                    tokens=tuple(int(t) for t in req.output))
 
@@ -1338,6 +1644,8 @@ class ServingEngine:
                   on_step=None) -> None:
         sess = self._session_for(lane)
         strategy = lane[1]
+        tr = self._tr
+        lid = self._lane_id(lane)
         slots: List[Optional[Request]] = [None] * self.max_batch
         batch: List[Request] = []
         while len(batch) < self.max_batch:
@@ -1420,17 +1728,47 @@ class ServingEngine:
                 continue
             if self.faults is not None and self.faults.fire("step_nan"):
                 self._inject_nan(slots, sess)
+            if tr.enabled:
+                tr.begin(PID_ENGINE, lid, "dispatch", cat="phase")
             info = sess.step()
             # double-buffered dispatch (DESIGN.md §8): the jitted step
             # is dispatched but NOT synced yet — mailbox intake, SLO
             # shedding and next-candidate prefix planning run on the
             # host while the device step is in flight.
+            if tr.enabled:
+                self._phase_end(lid, "dispatch")
+                tr.begin(PID_ENGINE, lid, "host_overlap", cat="phase")
             self._host_overlap(lane, slots)
+            if tr.enabled:
+                self._phase_end(lid, "host_overlap")
             self.stats.steps += 1
             if self.paged:
                 self.pool.note_step()
+            if tr.enabled:
+                tr.begin(PID_ENGINE, lid, "host_sync", cat="phase")
             n_comm = np.asarray(info["n_committed"])  # first host sync
+            if tr.enabled:
+                self._phase_end(lid, "host_sync")
+                if self.paged:
+                    tr.counter(PID_ENGINE, "pool_pages",
+                               {"used": self.pool.used,
+                                "free": self.pool.available})
+                if self.host_pool is not None:
+                    tr.counter(PID_ENGINE, "host_tier_units",
+                               {"used": self.host_pool.used_units})
+                tr.counter(PID_ENGINE, "queue_depth",
+                           {"queued": len(self.queue),
+                            "running": len(self._running)})
             self.stats.tokens_committed += int(n_comm.sum())
+            # cache-dynamics sampling (DESIGN.md §11): host-side proxy
+            # diffing AFTER the step's first host sync — never on the
+            # dispatch path, never into the compiled graph
+            dyn = self.telemetry.dynamics_every
+            if dyn and strategy.uses_cache \
+                    and self.stats.steps % dyn == 0:
+                self._note_cache_dynamics(
+                    sess, strategy,
+                    n_live=sum(s is not None for s in slots))
             if self.faults is not None and self.faults.fire("disconnect"):
                 self._disconnect_burst(slots)
             nan_rows = (sup.nan_guard(info, slots)
@@ -1462,10 +1800,17 @@ class ServingEngine:
                     finished.append(i)
             progressed = bool(int(n_comm.sum()) > 0 or finished or dead)
             if sup is not None:
-                if sup.watchdog(progressed):
+                if tr.enabled:
+                    tr.begin(PID_ENGINE, lid, "supervisor", cat="phase")
+                fired = sup.watchdog(progressed)
+                if fired:
                     self._watchdog_recover(lane, slots, sess)
+                else:
+                    sup.on_iteration()
+                if tr.enabled:
+                    self._phase_end(lid, "supervisor")
+                if fired:
                     continue
-                sup.on_iteration()
             if not (finished or dead) and not (self.continuous
                                                and self._admission_dirty):
                 continue

@@ -97,6 +97,11 @@ class FaultInjector:
         self._probes: Dict[str, int] = {s: 0 for s in FAULT_SITES}
         self.fired: Dict[str, int] = {s: 0 for s in FAULT_SITES}
         self.log: List[Tuple[str, int]] = []
+        # optional observer called with every logged (site, probe) —
+        # the engine routes fires into the trace stream with the same
+        # schema as the log, so trace and replay log diff line-for-line
+        # (DESIGN.md §11)
+        self.on_fire = None
         # sticky lane stalls: lane-key id -> True until the watchdog
         # clears it (models a device reset recovering the lane)
         self._stalled: Dict[object, bool] = {}
@@ -116,6 +121,8 @@ class FaultInjector:
         if hit:
             self.fired[site] += 1
             self.log.append((site, k))
+            if self.on_fire is not None:
+                self.on_fire(site, k)
         return hit
 
     @property

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.serving.engine import RequestEvent, ServingEngine
 from repro.serving.slo import SLO
+from repro.serving.telemetry import Histogram
 
 _TERMINAL = ("done", "shed", "canceled", "aborted")
 
@@ -141,11 +142,18 @@ class AsyncFrontend:
 
     def stats_snapshot(self) -> Dict:
         """JSON-safe engine stats copy (reads race the engine thread
-        benignly: ints and list appends under the GIL)."""
+        benignly: ints and histogram appends under the GIL).  Scalar
+        counters pass through; latency histograms (DESIGN.md §11)
+        surface as their counts, with percentiles merged on top."""
         s = self.engine.stats
         pct = s.percentiles()
-        out = {k: v for k, v in dataclasses.asdict(s).items()
-               if not isinstance(v, list)}
+        out: Dict = {}
+        for f in dataclasses.fields(s):
+            v = getattr(s, f.name)
+            if isinstance(v, (bool, int, float)):
+                out[f.name] = v
+            elif isinstance(v, Histogram):
+                out[f"{f.name}_count"] = len(v)
         out.update(pct)
         out["queued"] = len(self.engine.queue)
         out["running"] = len(self.engine._running)
@@ -194,6 +202,21 @@ class AsyncFrontend:
                 await self._route_generate(writer, body)
             elif method == "GET" and path == "/stats":
                 payload = json.dumps(self.stats_snapshot()).encode()
+                writer.write(_response_head("application/json")
+                             + payload)
+                await writer.drain()
+            elif method == "GET" and path == "/metrics":
+                # Prometheus text exposition (DESIGN.md §11); the
+                # registry collector reads live engine state under the
+                # GIL, same benign race as /stats
+                payload = self.engine.render_metrics().encode()
+                writer.write(_response_head(
+                    "text/plain; version=0.0.4; charset=utf-8")
+                    + payload)
+                await writer.drain()
+            elif method == "GET" and path == "/debug/requests":
+                payload = json.dumps(
+                    self.engine.request_states()).encode()
                 writer.write(_response_head("application/json")
                              + payload)
                 await writer.drain()
@@ -321,13 +344,27 @@ async def stream_request(host: str, port: int, prompt, gen_len: int, *,
             pass
 
 
-async def fetch_stats(host: str, port: int) -> Dict:
+async def _fetch(host: str, port: int, path: str) -> bytes:
     reader, writer = await asyncio.open_connection(host, port)
-    writer.write((f"GET /stats HTTP/1.1\r\nHost: {host}\r\n"
+    writer.write((f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
                   f"Connection: close\r\n\r\n").encode())
     await writer.drain()
     raw = await reader.read()
     writer.close()
     await writer.wait_closed()
     head, _, body = raw.partition(b"\r\n\r\n")
-    return json.loads(body.decode())
+    return body
+
+
+async def fetch_stats(host: str, port: int) -> Dict:
+    return json.loads((await _fetch(host, port, "/stats")).decode())
+
+
+async def fetch_metrics(host: str, port: int) -> str:
+    """Raw Prometheus text from ``GET /metrics``."""
+    return (await _fetch(host, port, "/metrics")).decode()
+
+
+async def fetch_debug_requests(host: str, port: int) -> Dict:
+    return json.loads(
+        (await _fetch(host, port, "/debug/requests")).decode())

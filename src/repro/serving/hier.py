@@ -156,6 +156,21 @@ class HostPagePool:
         self.pages_in = 0
         self.pages_out = 0
 
+    def telemetry_gauges(self):
+        """Host-tier occupancy gauges for the §11 registry
+        (``name -> (help, value)``)."""
+        return {
+            "spa_tier_units_used":
+                ("host-tier cost units in use (f32 page = 2, int8 = 1)",
+                 self.used_units),
+            "spa_tier_units_capacity":
+                ("host-tier unit budget", self.capacity_units),
+            "spa_tier_utilization_ratio":
+                ("units used / budget", self.utilization),
+            "spa_tier_resident_pages":
+                ("pages resident in the host tier", self.used_pages),
+        }
+
     # ---- slots -------------------------------------------------------
 
     def _entry(self, sig: Tuple, repr_: str, block_one):

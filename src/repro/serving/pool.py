@@ -163,6 +163,22 @@ class PagePool:
         self.peak_used = self.used
         self._util_samples.clear()
 
+    def telemetry_gauges(self):
+        """Occupancy gauges for the §11 registry, ``name -> (help,
+        value)`` — the pool owns its exposition names so the engine
+        collector and any future scraper read one definition."""
+        return {
+            "spa_pool_pages_used":
+                ("allocated composite pages", self.used),
+            "spa_pool_pages_capacity":
+                ("allocatable pages", self.capacity),
+            "spa_pool_utilization_ratio":
+                ("used / capacity", self.utilization),
+            "spa_pool_peak_utilization_ratio":
+                ("high-water used / capacity",
+                 self.peak_used / max(self.capacity, 1)),
+        }
+
     @property
     def steady_utilization(self) -> float:
         if not self._util_samples:

@@ -612,3 +612,14 @@ class PrefixIndex:
         for root in self.roots.values():
             walk(root)
         return n
+
+    def telemetry_gauges(self):
+        """Index-occupancy gauges for the §11 registry
+        (``name -> (help, value)``)."""
+        return {
+            "spa_prefix_held_pages":
+                ("device pages held by the index", self.held_pages),
+            "spa_prefix_host_held_pages":
+                ("host-tier pages referenced by the index",
+                 self.host_held_pages),
+        }

@@ -51,6 +51,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.serving import telemetry
+
 
 class InvariantViolation(AssertionError):
     """A serving-runtime accounting invariant failed to close."""
@@ -166,6 +168,13 @@ class EngineSupervisor:
             eng.stats.degradations += 1
         else:
             eng.stats.restorations += 1
+        # ladder transitions share the fault-event trace schema
+        # (DESIGN.md §11) so a chaos replay and its trace can be diffed
+        tr = getattr(eng, "_tr", None)
+        if tr is not None:
+            tr.instant(telemetry.PID_EVENTS, 2, "ladder", cat="fault",
+                       args={"from": self.level, "to": new,
+                             "step": step})
         self.level = new
         self._last_change = step
         eng.stats.degrade_level = new

@@ -1,0 +1,372 @@
+"""Unified telemetry layer (DESIGN.md §11).
+
+Covers the four contracts the telemetry PR makes:
+
+* exactness — histogram percentiles are single-sourced and match
+  ``numpy.percentile`` on the raw samples;
+* zero interference — a fully-instrumented engine run decodes
+  byte-identically to its telemetry-off twin (everything is host-side);
+* span-tree integrity — every request lifecycle is one well-nested
+  span tree per uid across preempt/resume and demote->promote, with no
+  orphaned or double-closed spans;
+* determinism — a seeded chaos run and its replay emit identical event
+  streams, and the fault instants mirror the injector's replay log
+  line-for-line.
+"""
+import asyncio
+import itertools
+import json
+import re
+
+import numpy as np
+import pytest
+
+from repro.core.strategy import SPACache
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultPlan
+from repro.serving.telemetry import (PID_ENGINE, PID_EVENTS, PID_REQUESTS,
+                                     Histogram, MetricsRegistry, Telemetry,
+                                     Tracer, percentile)
+
+PAGE, CANVAS = 4, 16
+
+
+def _strat():
+    # refresh_interval=1 -> outputs are a pure function of the canvas,
+    # so preemption/promotion reordering cannot shift surviving bits
+    return SPACache(rank=16, schedule="uniform", rho_peak=0.3,
+                    refresh_interval=1)
+
+
+def _counter_clock():
+    c = itertools.count()
+    return lambda: next(c) * 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Histogram / registry units (satellite: single-sourced percentiles)
+# ---------------------------------------------------------------------------
+
+def test_percentile_matches_numpy():
+    rng = np.random.default_rng(3)
+    for n in (1, 2, 5, 17, 100):
+        xs = rng.exponential(1.0, n).tolist()
+        h = Histogram("t_seconds")
+        h.extend(xs)
+        for q in (0, 10, 50, 90, 95, 99, 100):
+            want = float(np.percentile(xs, q))
+            assert percentile(xs, q) == pytest.approx(want, rel=1e-12)
+            assert h.percentile(q) == pytest.approx(want, rel=1e-12)
+    assert percentile([], 50) == 0.0
+
+
+def test_histogram_is_list_compatible():
+    h = Histogram("t_seconds")
+    assert not h and len(h) == 0
+    h.append(2.0)                       # EngineStats call sites use append
+    h.observe(4.0)
+    assert h and len(h) == 2
+    assert sorted(h) == [2.0, 4.0]
+    assert h.mean == pytest.approx(3.0)
+
+
+def test_registry_prometheus_render_is_valid():
+    reg = MetricsRegistry()
+    reg.counter("spa_engine_steps_total", "iterations").inc(3)
+    reg.gauge("spa_pool_pages_used", "pages", labels={"tier": "hbm"}).set(7)
+    h = reg.histogram("spa_engine_ttft_seconds", "ttft",
+                      buckets=(0.1, 1.0, 10.0))
+    for x in (0.05, 0.5, 5.0, 50.0):
+        h.observe(x)
+    text = reg.render()
+    _assert_prometheus_text(text)
+    # cumulative buckets, closed by +Inf == _count
+    counts = [int(m.group(1)) for m in re.finditer(
+        r'spa_engine_ttft_seconds_bucket\{le="[^"]+"\} (\d+)', text)]
+    assert counts == sorted(counts) and counts[-1] == 4
+    assert 'le="+Inf"' in text
+    assert "spa_engine_ttft_seconds_count 4" in text
+
+
+def _assert_prometheus_text(text):
+    """Prometheus text-format 0.0.4: every line is HELP/TYPE metadata or
+    ``name{labels} value`` with a float-parseable value."""
+    sample = re.compile(
+        r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? \S+$")
+    assert text.endswith("\n")
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            continue
+        assert sample.match(line), f"bad exposition line: {line!r}"
+        float(line.rsplit(" ", 1)[1])   # value parses
+
+
+def test_format_summary_safe_when_empty():
+    assert "no metrics recorded" in MetricsRegistry().format_summary()
+
+
+def test_tracer_span_integrity_errors():
+    tr = Tracer(clock=_counter_clock())
+    with pytest.raises(RuntimeError, match="no open span"):
+        tr.end(1, 1, "request")
+    tr.begin(1, 1, "request")
+    tr.begin(1, 1, "queued")
+    with pytest.raises(RuntimeError, match="innermost"):
+        tr.end(1, 1, "request")         # out-of-order close
+    assert tr.close_track(1, 1) == 2    # innermost-first teardown
+    assert tr.open_spans() == []
+    names = [e.name for e in tr.span_events(1, 1)]
+    assert names == ["queued", "request"]
+
+
+# ---------------------------------------------------------------------------
+# One churn run per module: preempt + evict/demote + promote, fully
+# traced, plus its telemetry-off twin for the parity assertions.
+# ---------------------------------------------------------------------------
+
+def _churn(cfg, params, telemetry, clock=None):
+    eng = ServingEngine(cfg, params, max_batch=2, canvas_len=CANVAS,
+                        strategy=_strat(), pool_pages=9, page_size=PAGE,
+                        prefix_cache=True, host_pages=16,
+                        host_dtype="f32", telemetry=telemetry,
+                        clock=clock)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size - 1, 8).astype(np.int32)
+               for _ in range(4)]
+    eng.submit(prompts[0], gen_len=8)
+    eng.run()                           # cold p0: prefill + publish
+    for p in prompts[1:3]:
+        eng.submit(p, gen_len=8)        # full pool evicts+demotes p0
+    s0 = eng.stats.steps
+
+    def on_step(e):
+        if e.stats.steps == s0 + 2:     # priority arrival on a full pool
+            e.submit(prompts[3], gen_len=8, priority=5)
+
+    eng.run(on_step=on_step)
+    eng.submit(prompts[0], gen_len=8)   # warm p0: promote from host tier
+    eng.run()
+    return eng
+
+
+@pytest.fixture(scope="module")
+def traced_run(tiny_cfg, tiny_params):
+    on = _churn(tiny_cfg, tiny_params, Telemetry.enabled(dynamics_every=1))
+    off = _churn(tiny_cfg, tiny_params, None)
+    # the workload must actually exercise the interesting transitions
+    assert on.stats.preemptions > 0, "churn never preempted"
+    assert on.stats.prefix_demoted_pages > 0, "churn never demoted"
+    assert on.stats.prefix_promotions > 0, "churn never promoted"
+    return on, off
+
+
+def test_telemetry_on_is_byte_identical(traced_run):
+    on, off = traced_run
+    outs_on = {r.uid: np.asarray(r.output).tobytes() for r in on.done}
+    outs_off = {r.uid: np.asarray(r.output).tobytes() for r in off.done}
+    assert outs_on == outs_off and len(outs_on) == 5
+    assert on.stats.steps == off.stats.steps
+    assert on.stats.preemptions == off.stats.preemptions
+
+
+def test_request_span_trees_continuous(traced_run):
+    """One span tree per uid: exactly one closed ``request`` root,
+    ``queued``/``running`` alternating through preempt/resume, nothing
+    left open after the engine drains."""
+    on, _ = traced_run
+    tr = on.telemetry.tracer
+    assert tr.open_spans() == []        # no orphans anywhere
+    for r in on.done:
+        evs = tr.span_events(PID_REQUESTS, r.uid)
+        names = [e.name for e in evs]
+        assert names.count("request") == 1
+        n_queued, n_running = names.count("queued"), names.count("running")
+        assert n_queued == 1 + r.preemptions
+        assert n_running == 1 + r.preemptions
+        root = next(e for e in evs if e.name == "request")
+        assert root.args["outcome"] == "done"
+        # children nest inside the root span's [ts, ts+dur] window
+        for e in evs:
+            assert e.ts >= root.ts - 1e-9
+            assert e.ts + e.dur <= root.ts + root.dur + 1e-9
+        if r.preemptions:
+            inst = [e for e in tr.events if e.ph == "i"
+                    and e.pid == PID_REQUESTS and e.tid == r.uid
+                    and e.name == "preempt"]
+            assert len(inst) == r.preemptions
+
+
+def test_demote_promote_trace_continuity(traced_run):
+    on, _ = traced_run
+    tr = on.telemetry.tracer
+    demotes = [e for e in tr.events
+               if e.ph == "i" and e.name == "demote"]
+    assert demotes and all(e.pid == PID_EVENTS for e in demotes)
+    assert sum(e.args["demoted"] for e in demotes) \
+        == on.stats.prefix_demoted_pages
+    promotes = [e for e in tr.events
+                if e.ph == "i" and e.name == "promote"]
+    assert len(promotes) == on.stats.prefix_promotions
+    for e in promotes:
+        assert e.pid == PID_REQUESTS
+        # the promoted request's own span tree stayed intact
+        names = [x.name for x in tr.span_events(PID_REQUESTS, e.tid)]
+        assert names.count("request") == 1
+
+
+def test_engine_phase_spans_and_counters(traced_run):
+    on, _ = traced_run
+    tr = on.telemetry.tracer
+    phases = {e.name for e in tr.span_events(PID_ENGINE)}
+    assert {"dispatch", "host_overlap", "host_sync"} <= phases
+    pool_samples = [e for e in tr.events
+                    if e.ph == "C" and e.name == "pool_pages"]
+    assert pool_samples and all(
+        set(e.args) == {"used", "free"} for e in pool_samples)
+    snap = on.telemetry.registry.snapshot()
+    for phase in ("dispatch", "host_overlap", "host_sync"):
+        key = f'spa_engine_phase_seconds{{phase="{phase}"}}'
+        assert snap[key]["count"] > 0
+    # refresh_interval=1 rebuilds the cache every step, so the dynamics
+    # probe correctly classifies every step as a refresh and skips the
+    # diff-derived metrics (they describe the *incremental* selection)
+    assert snap["spa_cache_refresh_steps_total"] > 0
+    assert not any(k.startswith("spa_cache_proxy_drift") for k in snap)
+
+
+def test_cache_dynamics_metrics_on_incremental_decode(tiny_cfg,
+                                                      tiny_params):
+    """Without per-step refreshes the dynamics probe records per-layer
+    budget utilization, proxy drift, and step-to-step selection
+    overlap."""
+    eng = ServingEngine(
+        tiny_cfg, tiny_params, max_batch=2, canvas_len=CANVAS,
+        strategy=SPACache(rank=16, schedule="uniform", rho_peak=0.3),
+        telemetry=Telemetry.enabled(dynamics_every=1))
+    rng = np.random.default_rng(9)
+    for _ in range(2):
+        eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 6)
+                   .astype(np.int32), gen_len=8)
+    eng.run()
+    snap = eng.telemetry.registry.snapshot()
+    for prefix in ("spa_cache_budget_utilization_ratio",
+                   "spa_cache_proxy_drift",
+                   "spa_cache_selection_overlap_ratio"):
+        keys = [k for k in snap if k.startswith(prefix)]
+        assert keys, f"no {prefix} samples"
+        assert sum(snap[k]["count"] for k in keys) > 0
+        # ratios live in a sane range
+        if prefix.endswith("overlap_ratio"):
+            assert all(0.0 <= snap[k]["p95"] <= 1.0 for k in keys)
+
+
+def test_stats_histograms_single_source(traced_run):
+    """EngineStats percentiles ARE the histogram percentiles — the same
+    numbers numpy computes on the retained raw samples."""
+    on, _ = traced_run
+    s = on.stats
+    assert isinstance(s.e2e_latencies, Histogram)
+    pct = s.percentiles()
+    assert pct["e2e_p50"] == pytest.approx(
+        float(np.percentile(list(s.e2e_latencies), 50)), rel=1e-12)
+    assert pct["ttft_p95"] == pytest.approx(
+        float(np.percentile(list(s.ttft_latencies), 95)), rel=1e-12)
+
+
+def test_perfetto_export_schema(traced_run, tmp_path):
+    on, _ = traced_run
+    path = tmp_path / "trace.json"
+    on.export_trace(str(path))
+    doc = json.loads(path.read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} <= {"X", "i", "C", "M"}
+    meta = {e["args"]["name"] for e in evs if e["ph"] == "M"
+            and e["name"] == "process_name"}
+    assert {"engine", "requests", "events"} <= meta
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+    # the acceptance trace covers >=1 preempted and >=1 promoted request
+    assert any(e["ph"] == "i" and e["name"] == "preempt" for e in evs)
+    assert any(e["ph"] == "i" and e["name"] == "promote" for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# Chaos determinism: same seed -> identical event stream
+# ---------------------------------------------------------------------------
+
+def test_chaos_replay_identical_event_stream(tiny_cfg, tiny_params):
+    plan = FaultPlan(seed=3, rates={"pool_alloc": 0.25, "step_nan": 0.1,
+                                    "host_store": 0.5})
+
+    def chaos_run():
+        eng = ServingEngine(
+            tiny_cfg, tiny_params, max_batch=2, canvas_len=CANVAS,
+            strategy=_strat(), pool_pages=13, page_size=PAGE,
+            prefix_cache=True, host_pages=8, host_dtype="f32",
+            fault_plan=plan, supervise=True,
+            telemetry=Telemetry.enabled(dynamics_every=0),
+            clock=_counter_clock())
+        rng = np.random.default_rng(11)
+        for _ in range(4):
+            eng.submit(rng.integers(0, tiny_cfg.vocab_size - 1, 8)
+                       .astype(np.int32), gen_len=8)
+        eng.run()
+        return eng
+
+    a, b = chaos_run(), chaos_run()
+    assert a.faults.total_fired > 0, "the storm never hit"
+    assert a.faults.log == b.faults.log          # replay fingerprint
+    assert a.telemetry.tracer.event_stream() \
+        == b.telemetry.tracer.event_stream()
+    # fault instants mirror the injector log line-for-line, same schema
+    fired = [(e.args["site"], e.args["probe"])
+             for e in a.telemetry.tracer.events
+             if e.ph == "i" and e.name.startswith("fault:")]
+    assert fired == a.faults.log
+
+
+# ---------------------------------------------------------------------------
+# Live /metrics + /debug/requests during a streaming run
+# ---------------------------------------------------------------------------
+
+def test_live_metrics_and_debug_endpoints(tiny_cfg, tiny_params):
+    from repro.serving.frontend import (AsyncFrontend, fetch_debug_requests,
+                                        fetch_metrics, stream_request)
+    eng = ServingEngine(tiny_cfg, tiny_params, max_batch=2,
+                        canvas_len=CANVAS, strategy=_strat(),
+                        pool_pages=13, page_size=PAGE, prefix_cache=True,
+                        telemetry=Telemetry.enabled(dynamics_every=1))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, tiny_cfg.vocab_size - 1, 6).astype(np.int32)
+
+    async def main():
+        front = AsyncFrontend(eng, max_steps=2048)
+        await front.start(serve_http=True)
+        try:
+            mid_text, mid_dbg = None, None
+            async for ev in stream_request(front.host, front.port,
+                                           prompt, 6):
+                if ev["kind"] == "token" and mid_text is None:
+                    # scrape WHILE the request is streaming
+                    mid_text = await fetch_metrics(front.host, front.port)
+                    mid_dbg = await fetch_debug_requests(front.host,
+                                                         front.port)
+            end_text = await fetch_metrics(front.host, front.port)
+        finally:
+            await front.stop()
+        return mid_text, mid_dbg, end_text
+
+    mid_text, mid_dbg, end_text = asyncio.run(main())
+    for text in (mid_text, end_text):
+        _assert_prometheus_text(text)
+        assert "spa_engine_steps_total" in text
+        assert 'spa_engine_ttft_seconds_bucket{le="+Inf"}' in text
+    assert set(mid_dbg) == {"queued", "running", "done"}
+    live = mid_dbg["running"] + mid_dbg["done"]
+    assert any(r["uid"] == eng.done[0].uid for r in live) or live
+    m = re.search(r"spa_engine_requests_done_total (\d+)", end_text)
+    assert m and int(m.group(1)) == 1
