@@ -10,34 +10,36 @@ wall-clock is a correctness-wiring check, not a speed claim — the
 meaningful CPU numbers are the XLA-side baselines and the recorded
 shapes; on a TPU backend the same file reports real Mosaic timings.
 The JSON records which flavor ran (``pallas_mode``).
+
+Timing separates FIRST-CALL (compile) from STEADY-STATE wall time —
+the old warm-up-and-discard loop silently threw the compile number
+away, which is exactly what the §12 retrace accounting wants on
+record.  Every (kernel, shape, backend, block-config) measurement is
+also persisted into the shared ProfileStore
+(``BENCH_artifacts/kernel_profiles.json``) that
+``launch/hillclimb.py`` warm-starts from.
 """
 from __future__ import annotations
 
 import json
-import time
-from typing import Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import selection
 from repro.kernels import ops
+from repro.serving.profiling import ProfileStore, time_compile_steady
 from repro.models import common
 from repro.models.attention import flash_attention
 from repro.core.svd_proxy import cosine_similarity
 
 OUT_PATH = "BENCH_kernels.json"
 
-
-def _time_us(fn: Callable, *args, reps: int = 5) -> float:
-    out = fn(*args)                      # warm-up / compile
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+# Pallas grid tiling the kernel suite defaults to (sparse_attention
+# block_q/block_k=512, scatter block_k=128); recorded per-measurement
+# so a future autotuner can distinguish configs in the store.
+BLOCK_CONFIG = "bq512_bk512_sc128"
 
 
 def _shapes(quick: bool) -> Dict[str, int]:
@@ -96,19 +98,37 @@ def run(quick: bool = False) -> None:
     results: Dict[str, Dict] = {
         "_meta": {"backend": jax.default_backend(), "pallas_mode": mode,
                   "quick": quick, "shapes": s}}
-    print(f"{'kernel':24s} {'xla_us':>12s} {'pallas_us':>12s}   "
+    store = ProfileStore()
+    store.load()
+    shape_tag = "x".join(f"{k2}{v}" for k2, v in sorted(s.items()))
+    print(f"{'kernel':24s} {'xla_us':>12s} {'pallas_us':>12s} "
+          f"{'xla_compile_us':>15s} {'pallas_compile_us':>18s}   "
           f"(pallas={mode})")
     for name in xla:
         fn_x, args_x = xla[name]
         fn_p, args_p = pallas[name]
-        t_x = _time_us(fn_x, *args_x)
-        t_p = _time_us(fn_p, *args_p)
+        c_x, t_x = time_compile_steady(fn_x, *args_x)
+        c_p, t_p = time_compile_steady(fn_p, *args_p)
+        t_x, t_p, c_x, c_p = (v * 1e6 for v in (t_x, t_p, c_x, c_p))
         results[name] = {"xla_us": round(t_x, 1),
-                         "pallas_us": round(t_p, 1)}
-        print(f"{name:24s} {t_x:12.1f} {t_p:12.1f}")
+                         "pallas_us": round(t_p, 1),
+                         "xla_compile_us": round(c_x, 1),
+                         "pallas_compile_us": round(c_p, 1)}
+        print(f"{name:24s} {t_x:12.1f} {t_p:12.1f} "
+              f"{c_x:15.1f} {c_p:18.1f}")
+        for backend, steady, compile_ in (
+                ("xla", t_x, c_x), (f"pallas-{mode}", t_p, c_p)):
+            store.put(
+                {"steady_us": round(steady, 1),
+                 "compile_us": round(compile_, 1),
+                 "device": jax.default_backend()},
+                kind="kernel", kernel=name, shape=shape_tag,
+                backend=backend, block=BLOCK_CONFIG)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=1)
-    print(f"wrote {OUT_PATH}")
+    store.save()
+    print(f"wrote {OUT_PATH} and {len(store)} profile records "
+          f"-> {store.path}")
 
 
 if __name__ == "__main__":

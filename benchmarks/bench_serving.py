@@ -616,7 +616,7 @@ def _serve_chaos(cfg, params, reqs, plan) -> dict:
     }
 
 
-def _serve_telemetry(cfg, params, reqs, telemetry) -> dict:
+def _serve_telemetry(cfg, params, reqs, telemetry, profiler=None) -> dict:
     """Part 6 (DESIGN.md §11): the Part-1 mid-run-arrival workload
     through an oversubscribed pool + host tier, with telemetry
     optionally attached.  The engine config is identical either way, so
@@ -634,7 +634,7 @@ def _serve_telemetry(cfg, params, reqs, telemetry) -> dict:
                           refresh_interval=1),
         pool_pages=max(demand // 2, 4 * (CANVAS // PAGE)) + 1,
         page_size=PAGE, prefix_cache=True, host_pages=16,
-        host_dtype="f32", telemetry=telemetry)
+        host_dtype="f32", telemetry=telemetry, profiler=profiler)
 
     def serve_once():
         upfront = reqs[: len(reqs) // 2]
@@ -720,10 +720,11 @@ def _drop_executables(part: str = "") -> None:
     executables across six parts deterministically crash XLA's CPU JIT
     late in a full run (LLVM "Cannot allocate memory" then a segfault in
     libgcc) — the same failure tests/conftest.py clears at module
-    boundaries.  Each part re-warms its own executables untimed."""
-    jax.clear_caches()
-    if part:
-        print(f"[bench_serving] {part}", flush=True)
+    boundaries.  Each part re-warms its own executables untimed.
+    Delegates to the one shared dropper (repro.core.runtime), which
+    also reports the live-executable count it cleared."""
+    from repro.core import runtime
+    runtime.drop_executables(f"bench_serving: {part}" if part else "")
 
 
 def run(quick: bool = False) -> dict:
@@ -864,16 +865,23 @@ def run(quick: bool = False) -> dict:
     results["online"]["frontend_smoke"] = _frontend_smoke(
         cfg, params, 4 if quick else 8)
 
-    # Part 6: telemetry overhead + parity (DESIGN.md §11) — the same
-    # workload with full telemetry (tracer + cache-dynamics sampling +
-    # registry) vs none.  Outputs must be byte-identical (telemetry is
-    # host-side only); the CI gate fails a >10% throughput regression.
+    # Part 6: telemetry overhead + parity (DESIGN.md §11/§12) — the
+    # same workload with full telemetry (tracer + cache-dynamics
+    # sampling + registry) AND the step profiler vs none.  Outputs must
+    # be byte-identical (telemetry/profiling are host-side only); the
+    # CI gate fails a >10% throughput regression, so the overhead
+    # budget now covers profiling-on too.
+    from repro.core import runtime
+    from repro.serving.profiling import StepProfiler
     from repro.serving.telemetry import Telemetry
     _drop_executables('part 6: telemetry')
+    tracker = runtime.compile_tracker()
+    tracker.reset()     # scope the retrace-budget gate to this part
     treqs = _workload(cfg, 6 if quick else 12)
     t_off = _serve_telemetry(cfg, params, treqs, None)
-    t_on = _serve_telemetry(cfg, params, treqs,
-                            Telemetry.enabled(dynamics_every=1))
+    tel_on = Telemetry.enabled(dynamics_every=1)
+    t_on = _serve_telemetry(cfg, params, treqs, tel_on,
+                            profiler=StepProfiler(tel_on))
     assert set(t_on["outputs"]) == set(t_off["outputs"]), \
         "telemetry changed which requests completed"
     assert all(t_on["outputs"][i] == t_off["outputs"][i]
@@ -895,11 +903,31 @@ def run(quick: bool = False) -> dict:
     }
     for d in (t_off, t_on):
         d.pop("outputs")
+
+    # Retrace-budget gate (DESIGN.md §12): Part 6 traces each jitted
+    # entry point a fixed number of times — one trace per distinct lane
+    # shape, independent of request count.  A PR that introduces
+    # per-shape (or per-step) retraces blows the recorded budget and
+    # fails here before it ever ships a 10x compile regression.
+    compile_snapshot = tracker.snapshot()
+    budget_path = os.path.join(os.path.dirname(__file__),
+                               "retrace_budget.json")
+    with open(budget_path) as f:
+        budgets = json.load(f)["quick" if quick else "full"]
+    for fn_name, budget in budgets.items():
+        n = compile_snapshot["traces"].get(fn_name, 0)
+        assert n <= budget, \
+            f"retrace budget gate: {fn_name} traced {n}x > " \
+            f"budget {budget} (see benchmarks/retrace_budget.json)"
+    results["telemetry"]["compile"] = compile_snapshot
+    results["telemetry"]["retrace_budget_ok"] = True
+
     art_dir = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_artifacts")
     os.makedirs(art_dir, exist_ok=True)
     with open(os.path.join(art_dir, "metrics_snapshot.json"), "w") as f:
-        json.dump(results["telemetry"]["registry_snapshot"], f, indent=2)
+        json.dump({"registry": results["telemetry"]["registry_snapshot"],
+                   "compile": compile_snapshot}, f, indent=2)
     eng_on.export_trace(os.path.join(art_dir, "trace.json"))
 
     out_path = os.path.join(os.path.dirname(__file__), "..",

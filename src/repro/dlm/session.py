@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -54,6 +55,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import cache as cache_lib
+from repro.core import runtime
 from repro.core.cache import PagedCache
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm import decoding
@@ -108,7 +110,8 @@ class DecodeSession:
                  strategy: Optional[CacheStrategy] = None,
                  settings: Optional[DecodeSettings] = None,
                  scheduler: Optional[UnmaskScheduler] = None,
-                 spa_proxies=None, backend=None):
+                 spa_proxies=None, backend=None,
+                 profiler=None, label: str = ""):
         self.params = params
         self.cfg = cfg
         self.strategy = resolve_strategy(cfg, strategy)
@@ -127,10 +130,22 @@ class DecodeSession:
         if spa_proxies is None:
             spa_proxies = self.strategy.build_proxies(params, cfg)
         self.spa_proxies = spa_proxies
-        self._step_fn = jax.jit(functools.partial(
-            decoding.serve_step, params, cfg, settings=self.settings,
-            spa_proxies=spa_proxies, strategy=self.strategy,
-            scheduler=self.scheduler))
+        # step-time decomposition (DESIGN.md §12): a StepProfiler from
+        # serving/profiling.py, or None (default — exact unprofiled
+        # path).  ``label`` names this session's device track / lane
+        # signature in traces and retrace accounting.
+        self.profiler = profiler
+        self.label = label or (
+            f"{getattr(self.strategy, 'name', 'strategy')}"
+            f"/{getattr(self.strategy.backend, 'name', 'backend')}")
+        self._tracker = runtime.compile_tracker()
+        self._step_fn = runtime.track_executables(jax.jit(
+            self._tracker.wrap(
+                functools.partial(
+                    decoding.serve_step, params, cfg,
+                    settings=self.settings, spa_proxies=spa_proxies,
+                    strategy=self.strategy, scheduler=self.scheduler),
+                name="serve_step", lane=self.label)))
         self._loop_fns: Dict[bool, Any] = {}   # run_compiled, by can_refresh
         self._partial_fns: Dict[int, Any] = {}  # prefill_partial, by s0
         # shared-prefix rows awaiting copy-on-write (DESIGN.md §6):
@@ -287,7 +302,8 @@ class DecodeSession:
                     self.params, self.cfg, inputs, kv_view, s0,
                     kv_len=kv_len, spa_proxies=self.spa_proxies,
                     strategy=self.strategy)
-            fn = jax.jit(run)
+            fn = runtime.track_executables(jax.jit(self._tracker.wrap(
+                run, name="prefill_partial", lane=self.label)))
             self._partial_fns[s0] = fn
         return fn
 
@@ -541,8 +557,36 @@ class DecodeSession:
         return False
 
     def step(self) -> Dict[str, jax.Array]:
-        """One jitted refinement step (auto-refresh applied first)."""
+        """One jitted refinement step (auto-refresh applied first).
+
+        With a profiler attached and this step sampled, consecutive
+        ``perf_counter`` fences decompose it into segments that TILE the
+        step — ``refresh`` (COW + cache rebuild, synced), ``dispatch``
+        (the jitted call returning futures) and ``device_wait`` (the
+        sync on the step result) — so segment sums match the total
+        (DESIGN.md §12).  The fences only add ``block_until_ready``:
+        traced values are untouched, outputs stay byte-identical.
+        """
         assert self.state is not None, "call prefill()/attach() first"
+        prof = self.profiler
+        if prof is not None and prof.should_sample(self.steps_taken):
+            t0 = time.perf_counter()
+            self._cow_if_shared()
+            self._last_step_refreshed = self._maybe_refresh()
+            if self._poison_pages:
+                pages, self._poison_pages = self._poison_pages, None
+                self.poison_cache_pages(pages)
+            jax.block_until_ready(self.state)
+            t1 = time.perf_counter()
+            self.state, info = self._step_fn(self.state)
+            t2 = time.perf_counter()
+            jax.block_until_ready(self.state)
+            t3 = time.perf_counter()
+            self.steps_taken += 1
+            prof.observe_step(self.label,
+                              {"refresh": t1 - t0, "dispatch": t2 - t1,
+                               "device_wait": t3 - t2}, t3 - t0)
+            return info
         self._cow_if_shared()     # first write: un-share prefix pages
         self._last_step_refreshed = self._maybe_refresh()
         if self._poison_pages:
@@ -615,11 +659,19 @@ class DecodeSession:
                            and self.state.cache)
         if can_refresh not in self._loop_fns:
             self._loop_fns[can_refresh] = self._build_loop_fn(can_refresh)
+        prof = self.profiler
+        t0 = time.perf_counter() if prof is not None else 0.0
         state, n_done, n_ref = self._loop_fns[can_refresh](
             self.state, jnp.asarray(max_steps, jnp.int32))
         self.state = state
         n_done = int(jax.device_get(n_done))
         n_ref = int(jax.device_get(n_ref))
+        if prof is not None:
+            # whole-loop timing only: inside the while_loop there is no
+            # host boundary to fence, so phases are not attributable
+            # here (DESIGN.md §12); the device_get above synced the run.
+            prof.observe_loop(self.label, n_done,
+                              time.perf_counter() - t0)
         self.steps_taken += n_done
         self.refresh_count += n_ref
         return state.tokens, {"steps": n_done,
@@ -670,7 +722,8 @@ class DecodeSession:
             zero = jnp.zeros((), jnp.int32)
             return jax.lax.while_loop(cond, body, (state0, zero, zero))
 
-        return jax.jit(loop)
+        return runtime.track_executables(jax.jit(self._tracker.wrap(
+            loop, name="decode_loop", lane=self.label)))
 
     def events(self, max_steps: Optional[int] = None
                ) -> Iterator[StepEvent]:

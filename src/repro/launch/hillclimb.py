@@ -71,17 +71,43 @@ def main(argv=None):
                     help="|".join(VARIANTS))
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--out", default="results/hillclimb.jsonl")
+    ap.add_argument("--profile-store", default="auto",
+                    help="kernel/variant profile store (DESIGN.md §12): "
+                         "an (arch, shape, mesh, variant) hit "
+                         "short-circuits the re-search and replays the "
+                         "persisted record; every fresh 'ok' run is "
+                         "written back.  'auto' = the shared "
+                         "BENCH_artifacts/kernel_profiles.json; '' = off")
     args = ap.parse_args(argv)
 
-    cfg = VARIANTS[args.variant](get_arch(args.arch))
-    try:
-        rec = run_one(args.arch, args.shape, args.mesh,
-                      cfg_override=cfg, tag=args.variant)
-    except Exception as e:  # noqa: BLE001
-        traceback.print_exc()
-        rec = {"arch": args.arch, "shape": args.shape,
-               "mesh": args.mesh, "tag": args.variant,
-               "status": "error", "error": repr(e)[:500]}
+    from repro.serving.profiling import ProfileStore
+    store = None
+    if args.profile_store:
+        path = None if args.profile_store == "auto" else args.profile_store
+        store = ProfileStore(path)
+        store.load()
+    key = dict(kind="hillclimb", arch=args.arch, shape=args.shape,
+               mesh=args.mesh, variant=args.variant)
+
+    cached = store.get(**key) if store is not None else None
+    if cached is not None and cached.get("status") == "ok":
+        rec = {k: v for k, v in cached.items() if k != "key"}
+        rec["warm_start"] = True
+        print(f"[hillclimb] warm start: {args.variant} on "
+              f"{args.arch}/{args.shape} from {store.path}")
+    else:
+        cfg = VARIANTS[args.variant](get_arch(args.arch))
+        try:
+            rec = run_one(args.arch, args.shape, args.mesh,
+                          cfg_override=cfg, tag=args.variant)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": args.arch, "shape": args.shape,
+                   "mesh": args.mesh, "tag": args.variant,
+                   "status": "error", "error": repr(e)[:500]}
+        if store is not None and rec.get("status") == "ok":
+            store.put(rec, **key)
+            store.save()
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "a") as f:
         f.write(json.dumps(rec) + "\n")

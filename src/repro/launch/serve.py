@@ -109,6 +109,15 @@ def main(argv=None):
                     help="sample SPA cache-dynamics every step and "
                          "print the full metrics-registry dump at exit "
                          "(the compact non-zero dump always prints)")
+    ap.add_argument("--profile", action="store_true",
+                    help="compute-path profiling (DESIGN.md §12): fence "
+                         "per-step device time, print the step-time "
+                         "decomposition and the top-3 most-retraced "
+                         "lane signatures at exit")
+    ap.add_argument("--jax-trace-dir", default="",
+                    help="with --profile: also wrap the run in "
+                         "jax.profiler.trace writing to this directory "
+                         "(when the runtime supports it)")
     args = ap.parse_args(argv)
 
     if args.client:
@@ -147,11 +156,16 @@ def main(argv=None):
         print(f"chaos: seed={args.chaos_seed} "
               f"rate={args.chaos_rate} on all sites")
     telemetry = None
-    if args.trace_out or args.metrics:
+    if args.trace_out or args.metrics or args.profile:
         from repro.serving.telemetry import Telemetry, Tracer
         telemetry = Telemetry(
             tracer=Tracer(enabled=bool(args.trace_out)),
             dynamics_every=1 if args.metrics else 0)
+    profiler = None
+    if args.profile:
+        from repro.serving.profiling import StepProfiler
+        profiler = StepProfiler(
+            telemetry, jax_trace_dir=args.jax_trace_dir or None)
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch, canvas_len=args.canvas,
         strategy=strategy, continuous=not args.static_batching,
@@ -159,12 +173,27 @@ def main(argv=None):
         prefix_cache=args.prefix_cache, host_pages=args.host_pages,
         host_dtype=args.host_dtype, slo_policy=slo_policy,
         fault_plan=fault_plan, supervise=args.supervise,
-        telemetry=telemetry,
+        telemetry=telemetry, profiler=profiler,
         settings=DecodeSettings(
             parallel_threshold=args.parallel_threshold,
             max_parallel=4 if args.parallel_threshold else 0))
     if args.serve:
         return _serve_online(engine, args)
+    import contextlib
+    trace_ctx = profiler.jax_trace() if profiler is not None \
+        else contextlib.nullcontext()
+    with trace_ctx:
+        _run_offline(engine, args)
+    _summarize(engine, args)
+    for req in engine.done[:3]:
+        out = "<faulted>" if req.output is None else f"{req.output[:10]}..."
+        print(f"  req {req.uid}: out={out}")
+    return 0
+
+
+def _run_offline(engine, args) -> None:
+    """The offline batch loop (the pre-``--serve`` demo path)."""
+    cfg = engine.cfg
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size - 1,
                             int(rng.integers(6, 18))).astype(np.int32)
@@ -212,11 +241,6 @@ def main(argv=None):
         for prompt in prompts:
             engine.submit(prompt, args.gen_len)
         engine.run()
-    _summarize(engine, args)
-    for req in engine.done[:3]:
-        out = "<faulted>" if req.output is None else f"{req.output[:10]}..."
-        print(f"  req {req.uid}: out={out}")
-    return 0
 
 
 def _summarize(engine, args) -> None:
@@ -233,6 +257,8 @@ def _summarize(engine, args) -> None:
         _print_latency(stats)
     else:
         print("latency: no requests completed")
+    if getattr(args, "profile", False) and engine.profiler is not None:
+        _print_profile(engine)
     print("metrics registry " + "-" * 46)
     print(engine.telemetry.registry.format_summary(
         skip_zero=not args.metrics))
@@ -241,6 +267,23 @@ def _summarize(engine, args) -> None:
         n_ev = len(engine.telemetry.tracer.events)
         print(f"trace: {n_ev} events -> {args.trace_out} "
               f"(load in Perfetto / chrome://tracing)")
+
+
+def _print_profile(engine) -> None:
+    """``--profile`` report: step-time decomposition + the top-3
+    most-retraced lane signatures (DESIGN.md §12).  Renders cleanly
+    when zero steps were profiled (e.g. zero requests completed)."""
+    from repro.core import runtime
+
+    print("step-time decomposition " + "-" * 39)
+    print(engine.profiler.format_summary())
+    top = runtime.compile_tracker().top_retraced(3)
+    if top:
+        print("most-retraced lane signatures:")
+        for lane, n in top:
+            print(f"  {n:4d} traces  {lane or '<unlabeled>'}")
+    else:
+        print("most-retraced lane signatures: none recorded")
 
 
 def _print_latency(stats) -> None:

@@ -104,6 +104,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import cache as cache_lib
+from repro.core import runtime
 from repro.core.cache import PagedCache, n_logical_pages
 from repro.core.strategy import CacheStrategy, resolve_strategy
 from repro.dlm.decoding import DecodeSettings, partial_prefill_supported
@@ -374,7 +375,8 @@ class ServingEngine:
                  fault_plan: Optional[FaultPlan] = None,
                  supervise: bool = False,
                  supervisor_cfg: Optional[SupervisorConfig] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 profiler=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -437,6 +439,10 @@ class ServingEngine:
         self.telemetry.tracer.clock = self._clock
         self._tr = self.telemetry.tracer
         self.telemetry.registry.add_collector(self._collect_metrics)
+        # compute-path profiling (DESIGN.md §12): a StepProfiler from
+        # serving/profiling.py, handed to every lane session.  None
+        # (default) keeps the exact unprofiled step path.
+        self.profiler = profiler
         self._lane_ids: Dict[LaneKey, int] = {}
         self.event_sink: Optional[Callable[[RequestEvent], None]] = None
         # thread-safe intake: closures enqueued by submit_threadsafe /
@@ -581,6 +587,14 @@ class ServingEngine:
             if obj is not None:
                 for name, (help_txt, val) in obj.telemetry_gauges().items():
                     reg.gauge(name, help_txt).set(val)
+        # compile/retrace accounting + live-executable count (§12):
+        # spa_runtime_* series from the process-wide tracker
+        runtime.compile_tracker().export_metrics(reg)
+        if self.pool is not None:
+            for sig, nbytes in self.pool.arena_bytes().items():
+                reg.gauge("spa_pool_arena_bytes",
+                          "device bytes per cache-signature arena",
+                          labels={"signature": sig}).set(nbytes)
 
     def render_metrics(self) -> str:
         """Prometheus text exposition of the live registry (the
@@ -621,6 +635,32 @@ class ServingEngine:
                         for r in list(self._running.values())],
             "done": [row(r, "done") for r in self.done[-done_tail:]],
         }
+
+    def pool_debug_state(self) -> Dict:
+        """JSON-able memory-observability view (``GET /debug/pool``,
+        DESIGN.md §12): device-pool occupancy + fragmentation +
+        per-signature bytes, host-tier slot accounting, tier-manager
+        counters and the tracked live-executable count.  Reads race
+        the engine thread benignly (ints/floats/strings only)."""
+        out: Dict = {
+            "paged": self.paged,
+            "live_executables": runtime.live_executable_count(),
+        }
+        if self.pool is not None:
+            out["pool"] = self.pool.debug_state()
+        if self.host_pool is not None:
+            out["host_pool"] = self.host_pool.debug_state()
+        if self.tier is not None:
+            t = self.tier
+            out["tier"] = {
+                "demoted_pages": t.demoted_pages,
+                "promoted_pages": t.promoted_pages,
+                "dropped_full": t.dropped_full,
+                "dropped_stable": t.dropped_stable,
+                "store_faults": t.store_faults,
+                "checksum_failures": t.checksum_failures,
+            }
+        return out
 
     def submit(self, prompt: np.ndarray, gen_len: int,
                settings: Optional[DecodeSettings] = None,
@@ -797,10 +837,15 @@ class ServingEngine:
     def _session_for(self, lane: LaneKey) -> DecodeSession:
         if lane not in self._sessions:
             settings, strategy, scheduler = lane
+            label = (f"{getattr(strategy, 'name', 'strategy')}"
+                     f"/{getattr(strategy.backend, 'name', 'backend')}"
+                     f"/{type(scheduler).__name__}"
+                     f"#{self._lane_id(lane)}")
             self._sessions[lane] = DecodeSession(
                 self.params, self.cfg, strategy=strategy,
                 settings=settings, scheduler=scheduler,
-                spa_proxies=self._proxies_for(strategy))
+                spa_proxies=self._proxies_for(strategy),
+                profiler=self.profiler, label=label)
         return self._sessions[lane]
 
     # ------------------------------------------------------------------

@@ -220,6 +220,14 @@ class AsyncFrontend:
                 writer.write(_response_head("application/json")
                              + payload)
                 await writer.drain()
+            elif method == "GET" and path == "/debug/pool":
+                # memory observability (DESIGN.md §12): pool/tier
+                # occupancy, fragmentation, per-signature bytes
+                payload = json.dumps(
+                    self.engine.pool_debug_state()).encode()
+                writer.write(_response_head("application/json")
+                             + payload)
+                await writer.drain()
             else:
                 writer.write(b"HTTP/1.1 404 Not Found\r\n"
                              b"Connection: close\r\n\r\n")
@@ -368,3 +376,9 @@ async def fetch_metrics(host: str, port: int) -> str:
 async def fetch_debug_requests(host: str, port: int) -> Dict:
     return json.loads(
         (await _fetch(host, port, "/debug/requests")).decode())
+
+
+async def fetch_debug_pool(host: str, port: int) -> Dict:
+    """Decoded JSON from ``GET /debug/pool`` (DESIGN.md §12)."""
+    return json.loads(
+        (await _fetch(host, port, "/debug/pool")).decode())

@@ -169,6 +169,30 @@ class HostPagePool:
                 ("units used / budget", self.utilization),
             "spa_tier_resident_pages":
                 ("pages resident in the host tier", self.used_pages),
+            "spa_tier_peak_units_used":
+                ("high-water host-tier cost units", self.peak_units),
+        }
+
+    def debug_state(self) -> Dict:
+        """JSON-safe host-tier introspection for ``/debug/pool``:
+        unit accounting plus per-(signature, representation) slot
+        occupancy — never the arena contents."""
+        stores = {}
+        for (sig, repr_), e in self._store.items():
+            stores[f"{sig}/{repr_}"] = {
+                "n_slots": e["n_slots"],
+                "free_slots": len(e["free"]),
+                "resident": e["n_slots"] - len(e["free"]),
+            }
+        return {
+            "unit_budget": self.capacity_units,
+            "units_used": self.used_units,
+            "peak_units": self.peak_units,
+            "utilization": round(self.utilization, 6),
+            "resident_pages": self.used_pages,
+            "pages_in": self.pages_in,
+            "pages_out": self.pages_out,
+            "stores": stores,
         }
 
     # ---- slots -------------------------------------------------------

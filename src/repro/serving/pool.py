@@ -163,10 +163,44 @@ class PagePool:
         self.peak_used = self.used
         self._util_samples.clear()
 
+    def free_fragmentation(self) -> Dict[str, int]:
+        """Free-list fragmentation (DESIGN.md §12): the number of
+        contiguous free runs and the longest one.  A pool whose max
+        run shrinks while its free count holds steady is fragmenting —
+        the signal a future compactor would key on."""
+        free = sorted(self._free)
+        runs = 0
+        max_run = 0
+        cur = 0
+        prev = None
+        for p in free:
+            if prev is not None and p == prev + 1:
+                cur += 1
+            else:
+                runs += 1
+                cur = 1
+            max_run = max(max_run, cur)
+            prev = p
+        return {"free_pages": len(free), "free_runs": runs,
+                "max_contiguous_run": max_run}
+
+    def arena_bytes(self) -> Dict[str, int]:
+        """Device bytes per materialized cache signature (summed over
+        every buffer arena of the signature)."""
+        out: Dict[str, int] = {}
+        for sig, arenas in self._arenas.items():
+            total = 0
+            for bufs in arenas.values():
+                for arr in bufs.values():
+                    total += int(getattr(arr, "nbytes", 0) or 0)
+            out[str(sig)] = total
+        return out
+
     def telemetry_gauges(self):
         """Occupancy gauges for the §11 registry, ``name -> (help,
         value)`` — the pool owns its exposition names so the engine
         collector and any future scraper read one definition."""
+        frag = self.free_fragmentation()
         return {
             "spa_pool_pages_used":
                 ("allocated composite pages", self.used),
@@ -177,6 +211,36 @@ class PagePool:
             "spa_pool_peak_utilization_ratio":
                 ("high-water used / capacity",
                  self.peak_used / max(self.capacity, 1)),
+            "spa_pool_peak_pages_used":
+                ("high-water allocated pages", self.peak_used),
+            "spa_pool_free_runs":
+                ("contiguous free-page runs", frag["free_runs"]),
+            "spa_pool_max_contiguous_free_run":
+                ("longest contiguous free-page run",
+                 frag["max_contiguous_run"]),
+            "spa_pool_arena_bytes_total":
+                ("device bytes across all cache-signature arenas",
+                 sum(self.arena_bytes().values())),
+        }
+
+    def debug_state(self) -> Dict:
+        """JSON-safe pool introspection for the ``/debug/pool``
+        endpoint: accounting, fragmentation, per-signature bytes and
+        the refcount histogram (never the arena contents)."""
+        rc_hist: Dict[str, int] = {}
+        for rc in self._rc.values():
+            rc_hist[str(rc)] = rc_hist.get(str(rc), 0) + 1
+        return {
+            "capacity": self.capacity,
+            "used": self.used,
+            "available": self.available,
+            "peak_used": self.peak_used,
+            "utilization": round(self.utilization, 6),
+            "steady_utilization": round(self.steady_utilization, 6),
+            "page_size": self.page_size,
+            "fragmentation": self.free_fragmentation(),
+            "arena_bytes": self.arena_bytes(),
+            "refcount_histogram": rc_hist,
         }
 
     @property

@@ -371,6 +371,7 @@ class MetricsRegistry:
 PID_ENGINE = 1
 PID_REQUESTS = 2
 PID_EVENTS = 3
+PID_DEVICE = 4      # step/loop device-time slices (serving/profiling.py)
 
 
 @dataclasses.dataclass
@@ -531,7 +532,8 @@ class Tracer:
                         "tid": tid, "args": {"name": name}})
         for pid, pname in ((PID_ENGINE, "engine"),
                            (PID_REQUESTS, "requests"),
-                           (PID_EVENTS, "events")):
+                           (PID_EVENTS, "events"),
+                           (PID_DEVICE, "device")):
             evs.append({"name": "process_name", "ph": "M", "pid": pid,
                         "tid": 0, "args": {"name": pname}})
         evs.extend(e.to_chrome() for e in self.events)

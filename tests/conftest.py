@@ -12,6 +12,7 @@ import jax.numpy as jnp  # noqa: E402
 import pytest  # noqa: E402
 
 from repro.configs import get_arch, reduced  # noqa: E402
+from repro.core import runtime  # noqa: E402
 from repro.models import transformer  # noqa: E402
 
 
@@ -21,9 +22,10 @@ def _release_compiled_executables():
     lanes x strategies x backends x run/run_compiled); keeping them
     all live eventually segfaults XLA's CPU compiler deep into the
     run.  No test shares jitted state across modules, so drop the
-    caches at module boundaries."""
+    caches at module boundaries (via the one shared dropper in
+    repro.core.runtime — same valve bench_serving.py uses)."""
     yield
-    jax.clear_caches()
+    runtime.drop_executables()
 
 
 @pytest.fixture(scope="session")
